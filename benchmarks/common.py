@@ -1,0 +1,27 @@
+"""Shared helpers for the per-table/figure benchmarks."""
+from __future__ import annotations
+
+import time
+
+
+def fmt_table(rows: list[dict], cols: list[str], title: str) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    out = [f"== {title} =="]
+    out.append("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        out.append("  ".join(str(r.get(c, "")).ljust(widths[c])
+                             for c in cols))
+    return "\n".join(out)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """Median wall time of fn (benchmark-grade: warmup + repeats)."""
+    fn(*args, **kw)          # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return out, ts[len(ts) // 2]

@@ -1,0 +1,42 @@
+"""Figure 3 — incast: extra overhead of x-to-x communication vs fan-in,
+on the flow-level simulator with the paper's fitted parameters (this
+container has no RoCE fabric; the paper's own ε/w_t from Table 5 drive the
+simulation, reproducing the Fig. 3 shape: flat below w_t, linear above).
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import PAPER_TABLE5
+from repro.core.gentree import baseline_plan
+from repro.core.simulator import Simulator
+from repro.core.topology import single_switch
+from .common import fmt_table
+
+
+def run(s: float = 2e7, xs=tuple(range(2, 16))) -> dict:
+    rows = []
+    base = None
+    extras = {}
+    for x in xs:
+        topo = single_switch(x)
+        sim = Simulator(topo, PAPER_TABLE5)
+        # x-to-x full mesh = the CPS ReduceScatter step pattern
+        res = sim.simulate(baseline_plan("cps", topo, s))
+        per_step = res.per_step[0]
+        if base is None:
+            base = per_step
+        extras[x] = res.incast_extra
+        rows.append({"x": x, "step_time_s": f"{per_step:.4f}",
+                     "incast_extra_s": f"{res.incast_extra:.4f}"})
+    print(fmt_table(rows, ["x", "step_time_s", "incast_extra_s"],
+                    "Fig. 3 — x-to-x incast overhead (simulated, paper "
+                    "Table-5 params, w_t=9)"))
+    w_t = PAPER_TABLE5["middle_sw"].w_t
+    flat = all(extras[x] == 0 for x in xs if x <= w_t)
+    growing = all(extras[x2] >= extras[x1]
+                  for x1, x2 in zip(xs, xs[1:]) if x1 > w_t)
+    print(f"flat below w_t={w_t}: {flat}; growing above: {growing}")
+    return {"flat_below": flat, "growing_above": growing, "extras": extras}
+
+
+if __name__ == "__main__":
+    run()

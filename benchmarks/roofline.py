@@ -1,0 +1,61 @@
+"""§Roofline — render the per-(arch × shape) roofline table from the
+dry-run artifacts (artifacts/dryrun_single_pod.json). Re-run the dry-run
+with  `python -m repro.launch.dryrun --all --json artifacts/...`  to
+refresh. Falls back to lowering a single fast cell live if no artifact
+exists (keeps `python -m benchmarks.run` self-contained)."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import fmt_table
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   "dryrun_single_pod.json")
+
+
+def load_results(path: str = ART) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)["results"]
+
+
+def run() -> dict:
+    results = load_results()
+    if not results:
+        print("no dry-run artifact found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--json artifacts/dryrun_single_pod.json` first")
+        return {}
+    rows = []
+    worst = None
+    most_coll = None
+    for r in results:
+        if "skipped" in r or "error" in r:
+            continue
+        frac = r.get("roofline_fraction", 0.0)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_comp_ms": f"{r['compute_s'] * 1e3:.1f}",
+            "t_mem_ms": f"{r['memory_s'] * 1e3:.1f}",
+            "t_coll_ms": f"{r['collective_s'] * 1e3:.1f}",
+            "dominant": r["dominant"],
+            "useful": f"{r['useful_ratio']:.2f}",
+            "roofline": f"{frac:.3f}"})
+        if worst is None or frac < worst[1]:
+            worst = (f"{r['arch']}×{r['shape']}", frac)
+        cr = r["collective_s"] / max(r["compute_s"] + r["memory_s"], 1e-12)
+        if most_coll is None or cr > most_coll[1]:
+            most_coll = (f"{r['arch']}×{r['shape']}", cr)
+    print(fmt_table(rows, ["arch", "shape", "t_comp_ms", "t_mem_ms",
+                           "t_coll_ms", "dominant", "useful", "roofline"],
+                    "§Roofline — single-pod (16×16) baseline, "
+                    "197 TFLOP/s · 819 GB/s · 50 GB/s"))
+    print(f"worst roofline fraction: {worst[0]} ({worst[1]:.3f}); "
+          f"most collective-bound: {most_coll[0]}")
+    return {"worst": worst, "most_collective": most_coll, "rows": rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,table7]
+
+Each module prints its own human-readable table; this driver finishes with
+a machine-readable `name,seconds,derived` CSV summary.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig4,table7")
+    args = ap.parse_args()
+
+    from . import (fig3_incast, fig4_delta_microbench, fig8_model_accuracy,
+                   roofline, table3_cpu_testbed, table4_gpu_testbed,
+                   table5_fitting, table6_plan_selection, table7_large_scale)
+    all_benches = [
+        ("fig3", fig3_incast.run),
+        ("fig4", fig4_delta_microbench.run),
+        ("fig8", fig8_model_accuracy.run),
+        ("table3", table3_cpu_testbed.run),
+        ("table4", table4_gpu_testbed.run),
+        ("table5", table5_fitting.run),
+        ("table6", table6_plan_selection.run),
+        ("table7", table7_large_scale.run),
+        ("roofline", roofline.run),
+    ]
+    only = set(args.only.split(",")) if args.only else None
+
+    summary = []
+    failed = 0
+    for name, fn in all_benches:
+        if only and name not in only:
+            continue
+        print(f"\n{'=' * 72}\n## {name}\n{'=' * 72}")
+        t0 = time.perf_counter()
+        try:
+            out = fn()
+            derived = ""
+            if isinstance(out, dict):
+                for key in ("saving", "max", "max_gen_err", "speedups",
+                            "ok", "worst"):
+                    if key in out:
+                        derived = f"{key}={out[key]}"
+                        break
+            summary.append((name, time.perf_counter() - t0, derived))
+        except Exception as e:   # pragma: no cover
+            failed += 1
+            summary.append((name, time.perf_counter() - t0,
+                            f"ERROR {e!r}"))
+            import traceback
+            traceback.print_exc()
+
+    print(f"\n{'=' * 72}\nname,seconds,derived")
+    for name, dt, derived in summary:
+        print(f"{name},{dt:.2f},{derived}")
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Table 3 — CPU-testbed AllReduce comparison (GenTree vs CPS / Ring /
+RHD at 8, 12, 15 servers, S = 1e8 floats), on the simulator with the
+paper's fitted parameters. Expected pattern (paper): GenTree ≤ all
+baselines; RHD collapses at non-power-of-two N."""
+from __future__ import annotations
+
+from repro.core.cost_model import PAPER_TABLE5
+from repro.core.gentree import baseline_plan, gentree
+from repro.core.simulator import Simulator
+from repro.core.topology import single_switch
+from .common import fmt_table
+
+
+def run(s: float = 1e8, ns=(8, 12, 15)) -> dict:
+    rows = {}
+    algos = ["gentree", "cps", "ring", "rhd"]
+    table = {a: {} for a in algos}
+    decisions = {}
+    for n in ns:
+        topo = single_switch(n)
+        sim = Simulator(topo, PAPER_TABLE5)
+        r = gentree(topo, s)
+        table["gentree"][n] = r.predicted_time
+        decisions[n] = (r.decisions["root"].algo,
+                        r.decisions["root"].factors)
+        for kind in ("cps", "ring", "rhd"):
+            table[kind][n] = sim.simulate(baseline_plan(kind, topo, s)).total
+    rows = [{"algorithm": a,
+             **{f"N={n}": f"{table[a][n]:.3f}" for n in ns}}
+            for a in algos]
+    print(fmt_table(rows, ["algorithm"] + [f"N={n}" for n in ns],
+                    "Table 3 — CPU testbed (simulated, seconds, S=1e8)"))
+    print("GenTree choices:", {n: f"{a}{f or ''}"
+                               for n, (a, f) in decisions.items()})
+    speedups = {}
+    for n in ns:
+        best_base = min(table[a][n] for a in ("cps", "ring", "rhd"))
+        worst_base = max(table[a][n] for a in ("cps", "ring", "rhd"))
+        speedups[n] = {
+            "vs_best": best_base / table["gentree"][n],
+            "vs_worst": worst_base / table["gentree"][n]}
+        print(f"N={n}: speedup vs best baseline "
+              f"{speedups[n]['vs_best']:.2f}×, vs worst (incl. RHD) "
+              f"{speedups[n]['vs_worst']:.2f}×  "
+              f"(paper: up to 2.4×, 1.2× excl. RHD)")
+    return {"table": table, "speedups": speedups, "decisions": decisions}
+
+
+if __name__ == "__main__":
+    run()

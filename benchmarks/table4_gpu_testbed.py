@@ -1,0 +1,68 @@
+"""Table 4 — GPU-testbed AllReduce: n DGX-like machines × 8 GPUs,
+GenTree's hierarchical plan (intra-machine reduce + inter-machine CPS)
+vs a global Ring ("NCCL"). Simulated with NVLink-class intra-machine
+bandwidth and 4×200 Gbps NICs per machine, GDR on."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cost_model import GenModelParams
+from repro.core.gentree import baseline_plan, gentree
+from repro.core.simulator import Simulator
+from repro.core.topology import TopoNode, _server
+from .common import fmt_table
+
+GBPS = 1e9 / 8.0
+
+# level params: intra-machine fabric is NVLink-fast with high w_t (NVSwitch
+# has no PFC incast); the inter-machine fabric keeps the RoCE ε/w_t.
+GPU_PARAMS = {
+    "root_sw": GenModelParams(alpha=2e-5, beta=6.4e-12, gamma=0.0,
+                              delta=0.0, epsilon=6.0e-13, w_t=9),
+    "middle_sw": GenModelParams(alpha=1e-5, beta=3.2e-12, gamma=0.0,
+                                delta=0.0, epsilon=0.0, w_t=64),
+    "server": GenModelParams(alpha=5e-6, beta=0.0, gamma=5e-13,
+                             delta=2e-13, epsilon=0.0, w_t=64),
+    "cross_dc": GenModelParams(alpha=2e-5, beta=6.4e-12, gamma=0.0,
+                               delta=0.0, epsilon=6.0e-13, w_t=9),
+}
+
+
+def dgx_cluster(machines: int, gpus: int = 8) -> TopoNode:
+    root = TopoNode(name="spine", level="root_sw")
+    for m in range(machines):
+        mach = TopoNode(name=f"dgx{m}", uplink_bw=4 * 200 * GBPS,
+                        uplink_latency=2e-6, level="middle_sw")
+        mach.children = [_server(f"g{m}_{i}", 600e9, 1e-6)   # NVLink-ish
+                         for i in range(gpus)]
+        root.children.append(mach)
+    return root.finalize()
+
+
+def run(sizes=(1e7, 3.2e7, 1e8, 3.2e8), machines=(2, 4, 8)) -> dict:
+    rows = []
+    speed = {}
+    for m in machines:
+        topo = dgx_cluster(m)
+        sim = Simulator(topo, GPU_PARAMS)
+        for s in sizes:
+            r = gentree(topo, s, params=GPU_PARAMS)
+            t_ring = sim.simulate(baseline_plan("ring", topo, s)).total
+            sp = t_ring / r.predicted_time
+            speed[(m, s)] = sp
+            rows.append({"#GPUs": m * 8, "size": f"{s:.1e}",
+                         "GenTree_ms": f"{r.predicted_time * 1e3:.3f}",
+                         "Ring(NCCL)_ms": f"{t_ring * 1e3:.3f}",
+                         "speedup": f"{sp:.2f}×"})
+    print(fmt_table(rows, ["#GPUs", "size", "GenTree_ms", "Ring(NCCL)_ms",
+                           "speedup"],
+                    "Table 4 — GPU testbed (simulated, GenTree vs global "
+                    "Ring)"))
+    mx = max(speed.values())
+    print(f"max speedup {mx:.2f}× (paper: 1.65× over NCCL, converging "
+          f"to ~1.2× at scale)")
+    return {"speedups": speed, "max": mx}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Table 5 / §3.4 — the fitting toolkit: recover GenModel parameters from
+co-located-PS benchmark curves. Ground truth = the simulator with known
+parameters; fit quality = relative error of the recovered (α, δ, ε, w_t)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.fitting import detect_w_t, fit_from_cps_benchmarks
+from .common import fmt_table
+
+
+def run() -> dict:
+    true = cm.GenModelParams()
+    ns, sizes, times = [], [], []
+    for n in range(2, 16):
+        for s in (1e7, 3.2e7, 1e8):
+            ns.append(n)
+            sizes.append(s)
+            times.append(cm.cost_cps(n, s, true))
+    fit = fit_from_cps_benchmarks(np.array(ns), np.array(sizes),
+                                  np.array(times))
+    rows = [{"param": p, "true": f"{getattr(true, p):.3e}",
+             "fitted": f"{getattr(fit, p):.3e}"}
+            for p in ("alpha", "delta", "epsilon")]
+    rows.append({"param": "w_t", "true": true.w_t, "fitted": fit.w_t})
+    print(fmt_table(rows, ["param", "true", "fitted"],
+                    "§3.4 — parameter fitting from CPS benchmarks"))
+    err = {p: abs(getattr(fit, p) - getattr(true, p))
+           / max(abs(getattr(true, p)), 1e-30)
+           for p in ("alpha", "delta", "epsilon")}
+    ok = all(e < 0.15 for e in err.values()) and fit.w_t == true.w_t
+    print(f"recovery errors: "
+          + ", ".join(f"{p}={e:.1%}" for p, e in err.items())
+          + f", w_t exact: {fit.w_t == true.w_t}")
+    return {"errors": err, "w_t_ok": fit.w_t == true.w_t, "ok": ok}
+
+
+if __name__ == "__main__":
+    run()

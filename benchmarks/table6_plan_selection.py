@@ -1,0 +1,51 @@
+"""Table 6 — the AllReduce plans GenTree selects per switch-local sub-tree
+on the paper's six evaluation topologies × three data sizes."""
+from __future__ import annotations
+
+from repro.core import topology as T
+from repro.core.gentree import gentree
+from .common import fmt_table
+
+TOPOS = {
+    "SS24": lambda: T.single_switch(24),
+    "SS32": lambda: T.single_switch(32),
+    "SYM384": lambda: T.symmetric_tree(16, 24),
+    "SYM512": lambda: T.symmetric_tree(16, 32),
+    "ASY384": lambda: T.asymmetric_tree(16, 32, 16),
+    "CDC384": lambda: T.cross_dc(),
+}
+
+
+def _summarize(decisions) -> dict[str, str]:
+    """Collapse per-switch decisions into level classes (paper style)."""
+    out = {}
+    for name, d in sorted(decisions.items()):
+        label = d.algo + ("x".join(map(str, d.factors))
+                          if d.factors else "")
+        if d.rearrange:
+            label += "+rearr"
+        key = ("Root SW" if name in ("root", "wan_root")
+               else "DC Root" if name in ("dc0", "dc1")
+               else "Middle SW")
+        out.setdefault(key, set()).add(label)
+    return {k: "/".join(sorted(v)) for k, v in out.items()}
+
+
+def run(sizes=(1e7, 3.2e7, 1e8)) -> dict:
+    rows = []
+    all_dec = {}
+    for tname, builder in TOPOS.items():
+        for s in sizes:
+            r = gentree(builder(), s)
+            summ = _summarize(r.decisions)
+            all_dec[(tname, s)] = summ
+            for lvl, plan in summ.items():
+                rows.append({"network": tname, "size": f"{s:.1e}",
+                             "sub-tree": lvl, "plan": plan})
+    print(fmt_table(rows, ["network", "size", "sub-tree", "plan"],
+                    "Table 6 — GenTree plan selection"))
+    return all_dec
+
+
+if __name__ == "__main__":
+    run()

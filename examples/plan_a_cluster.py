@@ -1,0 +1,49 @@
+"""Plan AllReduce for YOUR cluster: fit GenModel from benchmark curves,
+build the topology, and let GenTree generate the per-switch plan — the
+paper's §3.4 + §4 workflow end-to-end, including the multi-pod TPU tree
+used by the launcher's gradient-sync strategy.
+
+Run:  PYTHONPATH=src python examples/plan_a_cluster.py
+"""
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.fitting import fit_from_cps_benchmarks
+from repro.core.gentree import gentree
+from repro.core.sync import plan_axes_gentree
+from repro.core.topology import cross_dc, tpu_pod_tree
+
+# -- 1. fit from (simulated) co-located-PS benchmark curves ---------------
+true = cm.GenModelParams()
+ns, sizes, times = [], [], []
+for n in range(2, 16):
+    for s in (1e7, 3.2e7, 1e8):
+        ns.append(n), sizes.append(s)
+        times.append(cm.cost_cps(n, s, true))     # your measurements here
+fit = fit_from_cps_benchmarks(np.array(ns), np.array(sizes),
+                              np.array(times))
+print(f"fitted: α={fit.alpha:.2e}  δ={fit.delta:.2e}  "
+      f"ε={fit.epsilon:.2e}  w_t={fit.w_t}")
+
+# -- 2. GenTree on a cross-datacenter tree ---------------------------------
+topo = cross_dc(dc0_middle=4, dc0_servers=16, dc1_middle=4, dc1_servers=8)
+r = gentree(topo, 3.2e7)
+print(f"\ncross-DC plan ({topo.num_servers()} servers), predicted "
+      f"{r.predicted_time * 1e3:.1f} ms:")
+for sw, d in sorted(r.decisions.items()):
+    extra = f" rearrange→{d.rearrange}" if d.rearrange else ""
+    print(f"  {sw:12s} {d.algo}{d.factors or ''}{extra}")
+
+# -- 3. the TPU-pod tree the trainer's sync strategy uses -------------------
+pods = tpu_pod_tree(n_pods=2, chips_per_pod=16)
+r2 = gentree(pods, 1e8, params=cm.TPU_V5E)
+print(f"\nTPU 2-pod tree plan, predicted {r2.predicted_time * 1e3:.2f} ms:")
+for sw, d in sorted(r2.decisions.items()):
+    print(f"  {sw:12s} {d.algo}{d.factors or ''}")
+
+# -- 4. per-mesh-axis plan selection (what sync.sync_gradients executes) ---
+plans = plan_axes_gentree([("data", 16), ("pod", 2)],
+                          size_floats=1.2e9)      # 1.2B-param gradient
+print("\ngradient-sync plans for mesh axes (data=16, pod=2):")
+for p in plans:
+    print(f"  axis {p.axis!r}: {p.strategy}{p.factors or ''}")

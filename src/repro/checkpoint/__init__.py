@@ -1,0 +1,1 @@
+from .store import CheckpointManager, load_pytree, save_pytree  # noqa: F401

@@ -1,0 +1,134 @@
+"""Numpy-backed checkpointing: atomic, async, step-tagged, resumable.
+
+Layout:  <dir>/step_<k>/arrays.npz + tree.json ; <dir>/LATEST points at the
+most recent *complete* save (written last, atomically) so a crash mid-save
+never corrupts the restore point. An optional background thread makes
+`save` non-blocking (async checkpointing — the train loop keeps stepping
+while the previous state snapshot flushes).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+_NP_SAFE = {"float64", "float32", "float16", "int64", "int32", "int16",
+            "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+
+
+def _to_storable(x: np.ndarray) -> np.ndarray:
+    """np.savez can't serialize ml_dtypes (bfloat16, fp8): store the raw
+    bits as an unsigned view; tree.json records the true dtype."""
+    if str(x.dtype) in _NP_SAFE:
+        return x
+    return x.view({1: np.uint8, 2: np.uint16, 4: np.uint32,
+                   8: np.uint64}[x.dtype.itemsize])
+
+
+def save_pytree(tree: Pytree, path: str) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat, treedef = jax.tree.flatten(tree)
+    arrs = [np.asarray(x) for x in flat]
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{f"leaf_{i}": _to_storable(a) for i, a in enumerate(arrs)})
+    meta = {
+        "treedef": str(treedef),
+        "n_leaves": len(arrs),
+        "dtypes": [str(a.dtype) for a in arrs],
+        "shapes": [list(a.shape) for a in arrs],
+    }
+    with open(os.path.join(path, "tree.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_pytree(path: str, like: Pytree) -> Pytree:
+    """Restore into the structure of `like` (treedef source of truth)."""
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    with open(os.path.join(path, "tree.json")) as f:
+        meta = json.load(f)
+    like_flat, treedef = jax.tree.flatten(like)
+    assert len(flat) == len(like_flat), \
+        f"checkpoint has {len(flat)} leaves, expected {len(like_flat)}"
+    import jax.numpy as jnp
+    out = []
+    for a, dt, l in zip(flat, meta["dtypes"], like_flat):
+        if str(a.dtype) != dt:           # stored as raw-bit view
+            a = a.view(jnp.dtype(dt))
+        out.append(jnp.asarray(a, dtype=l.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Pytree) -> None:
+        # snapshot to host memory NOW (so the train loop can mutate state)
+        host = jax.tree.map(np.asarray, tree)
+        if self.async_save:
+            self.wait()           # at most one in-flight save
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def _write(self, step: int, host: Pytree) -> None:
+        tag = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, f".tmp_{tag}")
+        final = os.path.join(self.dir, tag)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        save_pytree(host, tmp)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        # LATEST last: readers never see a partial checkpoint
+        latest = os.path.join(self.dir, "LATEST")
+        with open(latest + ".tmp", "w") as f:
+            f.write(tag)
+        os.replace(latest + ".tmp", latest)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self) -> None:
+        steps = sorted(d for d in os.listdir(self.dir)
+                       if d.startswith("step_"))
+        for d in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        latest = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(latest):
+            return None
+        with open(latest) as f:
+            tag = f.read().strip()
+        if not os.path.exists(os.path.join(self.dir, tag)):
+            return None
+        return int(tag.split("_")[1])
+
+    def restore(self, like: Pytree, step: int | None = None) -> tuple[Pytree, int]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        return load_pytree(path, like), step

@@ -1,0 +1,47 @@
+"""Assigned architecture configs (public literature) + registry.
+
+Each module defines CONFIG (full scale, exercised only via the dry-run's
+ShapeDtypeStructs) and SUPPORTED_SHAPES. `get_config(name)` resolves by id.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "stablelm_12b",
+    "qwen3_32b",
+    "gemma3_4b",
+    "gemma2_27b",
+    "qwen2_vl_7b",
+    "hymba_1_5b",
+    "rwkv6_1_6b",
+    "deepseek_moe_16b",
+    "mixtral_8x22b",
+    "whisper_large_v3",
+]
+
+
+def canon(name: str) -> str:
+    return name.replace("-", "_").replace(".", "_")
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return mod.CONFIG
+
+
+def supported_shapes(name: str) -> list[str]:
+    mod = importlib.import_module(f"repro.configs.{canon(name)}")
+    return list(mod.SUPPORTED_SHAPES)
+
+
+def all_cells():
+    """Every (arch, shape) cell — 40 total; unsupported ones are flagged
+    so the dry-run records them as documented skips."""
+    from repro.models.config import SHAPES
+    cells = []
+    for a in ARCHS:
+        sup = supported_shapes(a)
+        for s in SHAPES:
+            cells.append((a, s, s in sup))
+    return cells

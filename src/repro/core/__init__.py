@@ -1,0 +1,2 @@
+"""Core: the paper's contribution — GenModel, GenTree, simulator, executor."""
+from . import cost_model, fitting, gentree, optimality, plans, simulator, topology  # noqa: F401

@@ -1,0 +1,268 @@
+"""AllReduce plan types as JAX collective schedules (DESIGN.md §3).
+
+Each of the paper's plan types becomes a shard_map-compatible schedule over
+a named mesh axis, built from `lax.ppermute` / `lax.all_to_all` /
+`lax.all_gather`:
+
+  * ring  — 2(N−1) ppermute rounds, fan-in-2 chained adds (ε-optimal)
+  * rhd   — 2·log N ppermute rounds, pairwise halving/doubling
+  * cps   — one all_to_all + ONE fused N-ary reduce (δ-optimal; the fused
+            reduce is the Pallas `fused_reduce` kernel on TPU)
+  * hcps  — m staged sub-group exchanges with fan-ins f_0..f_{m−1}
+            (the paper's trade-off point between δ and ε optimality)
+  * psum  — XLA's native all-reduce (baseline / "auto")
+
+All functions assume they run inside shard_map with `axis_name` a mesh axis
+of size n, and operate on a flat per-device array `x` (identical shape on
+every device — the DP-gradient case). reduce_scatter_* return x's shard
+(size/n); all_gather_* invert them. allreduce composes the two and handles
+padding.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _dyn_take(parts: jax.Array, i: jax.Array) -> jax.Array:
+    """parts: (n, chunk); i: traced scalar index → parts[i]."""
+    return lax.dynamic_index_in_dim(parts, i, axis=0, keepdims=False)
+
+
+def _dyn_put(buf: jax.Array, val: jax.Array, i: jax.Array) -> jax.Array:
+    return lax.dynamic_update_index_in_dim(buf, val, i, axis=0)
+
+
+def _shift_perm(n: int, k: int) -> list[tuple[int, int]]:
+    return [(i, (i + k) % n) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Ring
+# ---------------------------------------------------------------------------
+def reduce_scatter_ring(x: jax.Array, axis_name: str) -> jax.Array:
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    parts = x.reshape((n, -1))
+    acc = jnp.zeros_like(parts[0])
+    for s in range(n - 1):
+        k = (idx - 1 - s) % n
+        acc = acc + _dyn_take(parts, k)
+        acc = lax.ppermute(acc, axis_name, _shift_perm(n, 1))
+    return acc + _dyn_take(parts, idx)
+
+
+def all_gather_ring(x: jax.Array, axis_name: str) -> jax.Array:
+    n = lax.psum(1, axis_name)
+    idx = lax.axis_index(axis_name)
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    out = _dyn_put(out, x, idx)
+    cur = x
+    for s in range(n - 1):
+        cur = lax.ppermute(cur, axis_name, _shift_perm(n, 1))
+        out = _dyn_put(out, cur, (idx - 1 - s) % n)
+    return out.reshape((-1,) + x.shape[1:]) if x.ndim > 1 else out.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Recursive Halving & Doubling (n must be a power of two)
+# ---------------------------------------------------------------------------
+def reduce_scatter_rhd(x: jax.Array, axis_name: str) -> jax.Array:
+    n = lax.psum(1, axis_name)
+    assert (n & (n - 1)) == 0, "RHD requires power-of-two axis size"
+    idx = lax.axis_index(axis_name)
+    cur = x.reshape((n, -1))
+    d = n // 2
+    while d >= 1:
+        m = cur.shape[0]
+        lower, upper = cur[: m // 2], cur[m // 2:]
+        bit = (idx // d) % 2
+        keep = lax.select(bit == 1, upper, lower)
+        send = lax.select(bit == 1, lower, upper)
+        recv = lax.ppermute(send, axis_name, [(i, i ^ d) for i in range(n)])
+        cur = keep + recv
+        d //= 2
+    return cur.reshape(-1)
+
+
+def all_gather_rhd(x: jax.Array, axis_name: str) -> jax.Array:
+    n = lax.psum(1, axis_name)
+    assert (n & (n - 1)) == 0
+    idx = lax.axis_index(axis_name)
+    cur = x.reshape((1, -1))
+    d = 1
+    while d < n:
+        recv = lax.ppermute(cur, axis_name, [(i, i ^ d) for i in range(n)])
+        bit = (idx // d) % 2
+        lower = lax.select(bit == 1, recv, cur)
+        upper = lax.select(bit == 1, cur, recv)
+        cur = jnp.concatenate([lower, upper], axis=0)
+        d *= 2
+    return cur.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Co-located PS (δ-optimal: single fused N-ary reduce)
+# ---------------------------------------------------------------------------
+def reduce_scatter_cps(x: jax.Array, axis_name: str,
+                       fused_reduce: Callable | None = None) -> jax.Array:
+    n = lax.psum(1, axis_name)
+    parts = lax.all_to_all(x.reshape((n, -1)), axis_name,
+                           split_axis=0, concat_axis=0)
+    if fused_reduce is not None:
+        return fused_reduce(parts)
+    return parts.sum(axis=0)
+
+
+def all_gather_cps(x: jax.Array, axis_name: str) -> jax.Array:
+    return lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical CPS with fan-ins `factors` (paper Figure 5)
+# ---------------------------------------------------------------------------
+def _digit_shift_perm(n: int, radix: int, f: int, k: int) -> list[tuple[int, int]]:
+    """Permutation advancing mixed-radix digit (radix block f) by k."""
+    perm = []
+    for i in range(n):
+        g = (i // radix) % f
+        j = i + ((g + k) % f - g) * radix
+        perm.append((i, j))
+    return perm
+
+
+def hcps_shard_index(factors: Sequence[int]) -> list[int]:
+    """Shard index held by each device after reduce_scatter_hcps.
+
+    Stage i keys on mixed-radix digit i (LSB-first) of the device index, so
+    device idx ends with shard whose MSB-first digits are (g_0, g_1, ...):
+    a digit reversal. Returns shard_of_device[idx]."""
+    n = math.prod(factors)
+    out = []
+    for idx in range(n):
+        rem, s = idx, 0
+        for f in factors:
+            s = s * f + rem % f
+            rem //= f
+        out.append(s)
+    return out
+
+
+def reduce_scatter_hcps(x: jax.Array, axis_name: str,
+                        factors: Sequence[int],
+                        fused_reduce: Callable | None = None,
+                        reorder: bool = False) -> jax.Array:
+    n = lax.psum(1, axis_name)
+    assert math.prod(factors) == n, (factors, n)
+    idx = lax.axis_index(axis_name)
+    cur = x.reshape(-1)
+    radix = 1
+    for f in factors:
+        parts = cur.reshape((f, -1))
+        g = (idx // radix) % f
+        pieces = [_dyn_take(parts, g)]
+        for k in range(1, f):
+            # I send my copy of member (g+k)'s piece; by symmetry I receive
+            # my own piece from member (g−k). The permutation is a digit
+            # shift by +k within this stage's groups.
+            piece = _dyn_take(parts, (g + k) % f)
+            recv = lax.ppermute(piece, axis_name,
+                                _digit_shift_perm(n, radix, f, k))
+            pieces.append(recv)
+        stacked = jnp.stack(pieces, axis=0)
+        cur = fused_reduce(stacked) if fused_reduce is not None \
+            else stacked.sum(axis=0)
+        radix *= f
+    if reorder:
+        # move each shard to its natural owner (device i ↔ shard i)
+        sidx = hcps_shard_index(factors)
+        cur = lax.ppermute(cur, axis_name, [(i, sidx[i]) for i in range(n)])
+    return cur
+
+
+def all_gather_hcps(x: jax.Array, axis_name: str,
+                    factors: Sequence[int]) -> jax.Array:
+    n = lax.psum(1, axis_name)
+    assert math.prod(factors) == n
+    idx = lax.axis_index(axis_name)
+    cur = x.reshape(-1)
+    radix = n
+    for f in reversed(factors):
+        radix //= f
+        g = (idx // radix) % f
+        out = jnp.zeros((f,) + cur.shape, cur.dtype)
+        out = _dyn_put(out, cur, g)
+        for k in range(1, f):
+            recv = lax.ppermute(cur, axis_name,
+                                _digit_shift_perm(n, radix, f, k))
+            out = _dyn_put(out, recv, (g - k) % f)
+        cur = out.reshape(-1)
+    return cur
+
+
+# ---------------------------------------------------------------------------
+# Composed AllReduce
+# ---------------------------------------------------------------------------
+def allreduce(x: jax.Array, axis_name: str, strategy: str = "psum",
+              factors: Sequence[int] | None = None,
+              fused_reduce: Callable | None = None) -> jax.Array:
+    """AllReduce a per-device array with the selected plan type.
+
+    Pads to a multiple of the axis size; returns the same shape as x.
+    strategy ∈ {psum, ring, rhd, cps, hcps}.
+    """
+    if strategy == "psum":
+        return lax.psum(x, axis_name)
+    n = lax.psum(1, axis_name)
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
+    if strategy == "ring":
+        shard = reduce_scatter_ring(flat, axis_name)
+        full = all_gather_ring(shard, axis_name)
+    elif strategy == "rhd":
+        shard = reduce_scatter_rhd(flat, axis_name)
+        full = all_gather_rhd(shard, axis_name)
+    elif strategy == "cps":
+        shard = reduce_scatter_cps(flat, axis_name, fused_reduce)
+        full = all_gather_cps(shard, axis_name)
+    elif strategy == "hcps":
+        assert factors is not None, "hcps needs fan-in factors"
+        shard = reduce_scatter_hcps(flat, axis_name, factors, fused_reduce)
+        full = all_gather_hcps(shard, axis_name, factors)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    if pad:
+        full = full[:-pad]
+    return full.reshape(shape)
+
+
+def reduce_scatter(x: jax.Array, axis_name: str, strategy: str = "psum",
+                   factors: Sequence[int] | None = None,
+                   fused_reduce: Callable | None = None) -> jax.Array:
+    """ReduceScatter with the selected plan type; x padded to axis multiple."""
+    n = lax.psum(1, axis_name)
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), x.dtype)])
+    if strategy == "psum":
+        return lax.psum_scatter(flat.reshape(n, -1), axis_name,
+                                scatter_dimension=0, tiled=False)
+    if strategy == "ring":
+        return reduce_scatter_ring(flat, axis_name)
+    if strategy == "rhd":
+        return reduce_scatter_rhd(flat, axis_name)
+    if strategy == "cps":
+        return reduce_scatter_cps(flat, axis_name, fused_reduce)
+    if strategy == "hcps":
+        return reduce_scatter_hcps(flat, axis_name, factors, fused_reduce,
+                                   reorder=True)
+    raise ValueError(strategy)

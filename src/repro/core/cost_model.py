@@ -1,0 +1,177 @@
+"""GenModel — the paper's AllReduce time-cost model (§3).
+
+    T = A·α + B·β + C·γ + D·δ + max(w − w_t, 0)·B·ε      (Eq. 11)
+
+Closed forms for the classic plan types (Table 2) plus a generic evaluator
+that walks a Plan IR step by step. The generic evaluator agrees with the
+closed forms on single-switch networks (property-tested).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+
+from .plans import Plan, factorizations
+
+
+@dataclass(frozen=True)
+class GenModelParams:
+    """Defaults = the paper's CPU testbed (15 servers on a 10 Gbps ToR):
+    α/γ/δ from the server row of Table 5, β/ε from the middle-switch row
+    (the ToR is a middle-layer switch in the paper's level classes)."""
+    alpha: float = 6.58e-3      # s per communication round
+    beta: float = 6.4e-9        # s per data unit through a link
+    gamma: float = 6.0e-10      # s per add
+    delta: float = 1.87e-10     # s per memory read/write
+    epsilon: float = 1.22e-10   # s per data unit of incast excess
+    w_t: int = 9                # incast fan-in threshold
+
+    def legacy(self) -> "GenModelParams":
+        """The (α, β, γ) model: δ = ε = 0 (for accuracy comparisons)."""
+        return replace(self, delta=0.0, epsilon=0.0)
+
+
+# Paper Table 5 per-level parameters (units: seconds, floats).
+PAPER_TABLE5 = {
+    "cross_dc":  GenModelParams(alpha=3.00e-2, beta=6.40e-9,
+                                epsilon=6.00e-11, w_t=9),
+    "root_sw":   GenModelParams(alpha=6.58e-3, beta=6.40e-10,
+                                epsilon=6.00e-12, w_t=9),
+    "middle_sw": GenModelParams(alpha=6.58e-3, beta=6.40e-9,
+                                epsilon=1.22e-10, w_t=9),
+    "server":    GenModelParams(alpha=6.58e-3, gamma=6.00e-10,
+                                delta=1.87e-10, w_t=7),
+}
+
+# TPU v5e-flavoured parameters (DESIGN.md §3): units seconds / bytes.
+TPU_V5E = {
+    # inter-pod DCI: ~25 GB/s, higher launch latency
+    "cross_dc":  GenModelParams(alpha=1.0e-5, beta=1 / 25e9,
+                                epsilon=4.0e-12, w_t=4),
+    # pod-level ICI fabric ~50 GB/s per link
+    "root_sw":   GenModelParams(alpha=1.0e-6, beta=1 / 50e9,
+                                epsilon=2.0e-12, w_t=6),
+    "middle_sw": GenModelParams(alpha=1.0e-6, beta=1 / 50e9,
+                                epsilon=2.0e-12, w_t=6),
+    # chip: HBM 819 GB/s → δ per byte; VPU adds
+    "server":    GenModelParams(alpha=1.0e-6, gamma=1 / 4e12,
+                                delta=1 / 819e9, w_t=6),
+}
+
+
+def chi(n: int) -> int:
+    """χ(N) = 0 if N is a power of two, else 1 (Table 1/2)."""
+    return 0 if (n & (n - 1)) == 0 else 1
+
+
+def _incast(fan_in: int, recv: float, p: GenModelParams) -> float:
+    return max(fan_in - p.w_t, 0) * recv * p.epsilon
+
+
+# ---------------------------------------------------------------------------
+# Closed forms (paper Table 2), single-switch, N servers, S data units.
+# ---------------------------------------------------------------------------
+def cost_reduce_broadcast(n: int, s: float, p: GenModelParams) -> float:
+    return (2 * p.alpha + 2 * (n - 1) * s * p.beta + (n - 1) * s * p.gamma
+            + (n + 1) * s * p.delta
+            + max(n - p.w_t, 0) * (n - 1) * s * p.epsilon)
+
+
+def cost_ring(n: int, s: float, p: GenModelParams) -> float:
+    return (2 * (n - 1) * p.alpha + 2 * (n - 1) * s / n * p.beta
+            + (n - 1) * s / n * p.gamma + 3 * (n - 1) * s / n * p.delta)
+
+
+def cost_rhd(n: int, s: float, p: GenModelParams) -> float:
+    base = (2 * math.ceil(math.log2(n)) * p.alpha
+            + 2 * (n - 1) * s / n * p.beta + (n - 1) * s / n * p.gamma
+            + 3 * (n - 1) * s / n * p.delta)
+    return base + chi(n) * (2 * s * p.beta + s * p.gamma + 3 * s * p.delta)
+
+
+def cost_cps(n: int, s: float, p: GenModelParams) -> float:
+    return (2 * p.alpha + 2 * (n - 1) * s / n * p.beta
+            + (n - 1) * s / n * p.gamma + (n + 1) * s / n * p.delta
+            + 2 * (n - 1) * s / n * max(n - p.w_t, 0) * p.epsilon)
+
+
+def cost_hcps(factors: list[int], s: float, p: GenModelParams) -> float:
+    """m-step hierarchical CPS (Table 2 row 5).
+
+    Memory term: step i reduces f_i blocks of size s/(prod_{j<=i} f_j) on
+    each server → D_i = (f_i + 1) * s / prod_{j<=i} f_j; total matches the
+    paper's (2*sum(prod f) + N + 1)/N form.
+    Incast term: per-step fan-in f_i over the data received that step.
+    """
+    n = 1
+    for f in factors:
+        n *= f
+    m = len(factors)
+    t = 2 * m * p.alpha
+    t += 2 * (n - 1) * s / n * p.beta
+    t += (n - 1) * s / n * p.gamma
+    shard = s
+    for f in factors:
+        blk = shard / f
+        t += (f + 1) * blk * p.delta                      # δ of this stage
+        t += _incast(f, (f - 1) * blk, p)                 # ε of this stage
+        shard = blk
+    return t
+
+
+CLOSED_FORMS = {
+    "reduce_broadcast": cost_reduce_broadcast,
+    "ring": cost_ring,
+    "rhd": cost_rhd,
+    "cps": cost_cps,
+}
+
+
+# ---------------------------------------------------------------------------
+# Generic IR evaluator (single-switch assumption: every transfer shares the
+# per-server NIC; per-step time = α + max-per-server comm + max compute).
+# ---------------------------------------------------------------------------
+def evaluate_plan(plan: Plan, p: GenModelParams) -> float:
+    total = 0.0
+    for st in plan.steps:
+        send: dict[int, float] = {}
+        for t in st.transfers:
+            send[t.src] = send.get(t.src, 0.0) + t.size
+        recv = st.recv_bytes_by_dst()
+        fi = st.fan_in_by_dst()
+        comm = 0.0
+        for srv in set(send) | set(recv):
+            b = max(send.get(srv, 0.0), recv.get(srv, 0.0))
+            w = fi.get(srv, 0) + 1 if srv in fi else 0  # w counts self
+            c = b * p.beta + _incast(w, recv.get(srv, 0.0), p)
+            comm = max(comm, c)
+        comp = 0.0
+        by_srv: dict[int, tuple[float, float]] = {}
+        for r in st.reduces:
+            a, d = by_srv.get(r.server, (0.0, 0.0))
+            by_srv[r.server] = (a + r.adds, d + r.mem_ops)
+        for a, d in by_srv.values():
+            comp = max(comp, a * p.gamma + d * p.delta)
+        total += p.alpha + comm + comp
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Model-driven plan-type choice for a flat group (used by GenTree §4.2).
+# ---------------------------------------------------------------------------
+def best_flat_plan(n: int, s: float, p: GenModelParams,
+                   allow: tuple[str, ...] = ("cps", "hcps", "ring", "rhd"),
+                   max_steps: int = 3) -> tuple[str, list[int] | None, float]:
+    """Returns (name, hcps_factors_or_None, predicted_cost)."""
+    cands: list[tuple[str, list[int] | None, float]] = []
+    if "cps" in allow:
+        cands.append(("cps", None, cost_cps(n, s, p)))
+    if "ring" in allow and n >= 2:
+        cands.append(("ring", None, cost_ring(n, s, p)))
+    if "rhd" in allow and n >= 2:
+        cands.append(("rhd", None, cost_rhd(n, s, p)))
+    if "hcps" in allow:
+        for fac in factorizations(n, max_steps=max_steps):
+            cands.append((f"hcps", fac, cost_hcps(fac, s, p)))
+    cands.sort(key=lambda x: x[2])
+    return cands[0]

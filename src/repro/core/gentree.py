@@ -1,0 +1,406 @@
+"""GenTree — recursive AllReduce plan generation on tree topologies (paper §4).
+
+Faithful reimplementation of Algorithms 1 & 2:
+
+  * Algorithm 1 (`generate_basic_plan`): bottom-up computation of the
+    initial/final data placement for every switch-local sub-tree. Each block
+    is assigned to a destination server that already holds it under some
+    child, preferring its own child's holdings ("taken" bookkeeping).
+  * Algorithm 2 (`generate_final_plan`): per switch, (a) the *data
+    rearrangement* decision per child (aggregate the child's scattered
+    results onto a subset sized by the uplink convergence ratio before
+    crossing the switch) and (b) *plan type selection* among
+    CPS / m×n HCPS / Ring / RHD (balanced children) or Asymmetric CPS
+    (unbalanced), each candidate priced by GenModel — here, by simulating
+    the candidate's step IR with the incast-aware simulator, which embodies
+    Eq. (11) on the actual tree.
+
+The output is a complete AllReduce Plan IR (ReduceScatter + mirrored
+AllGather), the per-switch decisions, and the predicted time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .cost_model import GenModelParams, PAPER_TABLE5
+from .plans import Plan, ReduceOp, Step, Transfer, factorizations, ring as ring_plan, \
+    rhd as rhd_plan, cps as cps_plan, hcps as hcps_plan
+from .simulator import Simulator
+from .topology import TopoNode
+
+
+@dataclass
+class SwitchDecision:
+    algo: str
+    factors: list[int] | None = None
+    rearrange: dict[int, int] = field(default_factory=dict)  # child idx -> subset size
+    cost: float = 0.0
+
+
+@dataclass
+class GenTreeResult:
+    plan: Plan
+    decisions: dict[str, SwitchDecision]
+    predicted_time: float
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — basic placement
+# ---------------------------------------------------------------------------
+def generate_basic_plan(node: TopoNode, n_total: int,
+                        place: dict[str, dict[int, list[int]]]) -> None:
+    if node.is_server:
+        place[node.name] = {node._sid: list(range(n_total))}
+        return
+    for c in node.children:
+        generate_basic_plan(c, n_total, place)
+
+    servers = node.server_ids()
+    n = len(servers)
+    num_blocks = n_total // n
+    remain = n_total % n
+    taken = [False] * n_total
+    final: dict[int, list[int]] = {}
+    quota: dict[int, int] = {}
+    for c in node.children:
+        for server, blocks in place[c.name].items():
+            q = num_blocks + (1 if remain > 0 else 0)
+            if remain > 0:
+                remain -= 1
+            quota[server] = q
+            final[server] = []
+            for b in blocks:
+                if not taken[b]:
+                    taken[b] = True
+                    final[server].append(b)
+                    q -= 1
+                    if q == 0:
+                        break
+            quota[server] = q
+    # Fix-up: hand any still-untaken blocks to servers with remaining quota.
+    leftovers = [b for b in range(n_total) if not taken[b]]
+    if leftovers:
+        it = iter(leftovers)
+        for server in final:
+            while quota[server] > 0:
+                try:
+                    b = next(it)
+                except StopIteration:
+                    break
+                final[server].append(b)
+                taken[b] = True
+                quota[server] -= 1
+    place[node.name] = final
+
+
+# ---------------------------------------------------------------------------
+# Switch-local exchange IR builders (cross-children copy combining)
+# ---------------------------------------------------------------------------
+def _holder_of(block: int, child_place: dict[int, list[int]]) -> int:
+    for srv, blocks in child_place.items():
+        if block in blocks:
+            return srv
+    raise KeyError(block)
+
+
+def _index_holders(children_places: list[dict[int, list[int]]],
+                   n_total: int) -> list[dict[int, int]]:
+    out = []
+    for cp in children_places:
+        m: dict[int, int] = {}
+        for srv, blocks in cp.items():
+            for b in blocks:
+                m[b] = srv
+        out.append(m)
+    return out
+
+
+def _exchange_steps_direct(holders: list[dict[int, int]],
+                           dest: dict[int, int], unit: float) -> list[Step]:
+    """One-shot CPS/ACPS across children: every copy goes straight to the
+    destination server; one fused reduce of fan-in = #children there."""
+    st = Step()
+    recv_count: dict[tuple[int, int], int] = {}
+    for hmap in holders:
+        for b, h in hmap.items():
+            d = dest[b]
+            if h != d:
+                st.transfers.append(Transfer(h, d, unit))
+            recv_count[(d, b)] = recv_count.get((d, b), 0) + 1
+    for (d, _b), c in recv_count.items():
+        if c > 1:
+            st.reduces.append(ReduceOp(d, c, unit))
+    return [st]
+
+
+def _exchange_steps_hcps(holders: list[dict[int, int]],
+                         dest: dict[int, int], unit: float,
+                         factors: list[int]) -> list[Step]:
+    """Staged combining of the c copies with fan-in factors[i] per stage."""
+    cur = [dict(h) for h in holders]
+    steps: list[Step] = []
+    radix = 1
+    for si, f in enumerate(factors):
+        last = si == len(factors) - 1
+        st = Step()
+        nxt: list[dict[int, int]] = []
+        for gstart in range(0, len(cur), f):
+            group = cur[gstart:gstart + f]
+            merged: dict[int, int] = {}
+            for b in group[0]:
+                cands = [g[b] for g in group]
+                if last:
+                    recv = dest[b]
+                elif dest[b] in cands:
+                    # keep the copy on the destination's side when possible
+                    recv = dest[b]
+                else:
+                    # balanced, orthogonal receiver choice: pick the group
+                    # member by the block's mixed-radix digit for this stage
+                    recv = cands[(b // radix) % f]
+                fan = 0
+                for g in group:
+                    h = g[b]
+                    if h != recv:
+                        st.transfers.append(Transfer(h, recv, unit))
+                    fan += 1
+                if fan > 1:
+                    st.reduces.append(ReduceOp(recv, fan, unit))
+                merged[b] = recv
+            nxt.append(merged)
+        cur = nxt
+        radix *= f
+        steps.append(st)
+    return steps
+
+
+def _exchange_steps_chain(holders: list[dict[int, int]],
+                          dest: dict[int, int], unit: float) -> list[Step]:
+    """Ring-like pairwise chain across the c copies: c-1 steps, fan-in 2."""
+    c = len(holders)
+    steps: list[Step] = []
+    acc = {b: holders[0][b] for b in holders[0]}
+    for i in range(1, c):
+        st = Step()
+        for b, h in acc.items():
+            nxt = dest[b] if i == c - 1 else holders[i][b]
+            src = h
+            if src != nxt:
+                st.transfers.append(Transfer(src, nxt, unit))
+            st.reduces.append(ReduceOp(nxt, 2, unit))
+            acc[b] = nxt
+        steps.append(st)
+    return steps
+
+
+def _exchange_steps_rhd(holders: list[dict[int, int]],
+                        dest: dict[int, int], unit: float) -> list[Step]:
+    """Pairwise-tree combining (RHD reduce side) across c copies, c po2."""
+    cur = [dict(h) for h in holders]
+    steps: list[Step] = []
+    while len(cur) > 1:
+        last = len(cur) == 2
+        st = Step()
+        nxt = []
+        for i in range(0, len(cur), 2):
+            a, b_ = cur[i], cur[i + 1]
+            merged = {}
+            for blk in a:
+                recv = dest[blk] if last else (
+                    dest[blk] if dest[blk] in (a[blk], b_[blk]) else a[blk])
+                for side in (a[blk], b_[blk]):
+                    if side != recv:
+                        st.transfers.append(Transfer(side, recv, unit))
+                st.reduces.append(ReduceOp(recv, 2, unit))
+                merged[blk] = recv
+            nxt.append(merged)
+        cur = nxt
+        steps.append(st)
+    return steps
+
+
+def _rearrange_step(child_place: dict[int, list[int]], subset: list[int],
+                    unit: float) -> tuple[Step, dict[int, list[int]]]:
+    """Aggregate a child's scattered blocks onto the `subset` servers
+    (paper's data-rearrangement optimization). Pure data movement."""
+    st = Step()
+    new_place: dict[int, list[int]] = {s: [] for s in subset}
+    i = 0
+    for srv in sorted(child_place):
+        for b in child_place[srv]:
+            tgt = subset[i % len(subset)]
+            i += 1
+            if tgt != srv:
+                st.transfers.append(Transfer(srv, tgt, unit))
+            new_place[tgt].append(b)
+    return st, new_place
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 + assembly
+# ---------------------------------------------------------------------------
+def _merge_concurrent(step_lists: list[list[Step]]) -> list[Step]:
+    """Zip-merge step lists of sibling switches (disjoint servers)."""
+    out: list[Step] = []
+    depth = max((len(sl) for sl in step_lists), default=0)
+    for i in range(depth):
+        st = Step()
+        for sl in step_lists:
+            if i < len(sl):
+                st.transfers.extend(sl[i].transfers)
+                st.reduces.extend(sl[i].reduces)
+        out.append(st)
+    return out
+
+
+def _mirror(steps: list[Step]) -> list[Step]:
+    """AllGather = reversed ReduceScatter with src/dst swapped, no reduces."""
+    out = []
+    for st in reversed(steps):
+        m = Step()
+        m.transfers = [Transfer(t.dst, t.src, t.size) for t in st.transfers]
+        out.append(m)
+    return out
+
+
+def gentree(topo: TopoNode, size: float,
+            params: dict[str, GenModelParams] | None = None,
+            candidates: tuple[str, ...] = ("cps", "hcps", "ring", "rhd"),
+            enable_rearrangement: bool = True,
+            max_hcps_steps: int = 3,
+            concurrent: bool = True) -> GenTreeResult:
+    """concurrent=True zip-merges sibling switch-local sub-plans (they
+    touch disjoint servers and links, so real hardware runs them in
+    parallel) — a beyond-paper scheduling improvement. concurrent=False
+    reproduces the paper's stream-emulator behaviour (sub-plans issued
+    sequentially), for apples-to-apples Table-7 comparisons."""
+    params = params or PAPER_TABLE5
+    topo.finalize()
+    n_total = topo.num_servers()
+    unit = size / n_total
+    sim = Simulator(topo, params)
+
+    place: dict[str, dict[int, list[int]]] = {}
+    generate_basic_plan(topo, n_total, place)
+
+    decisions: dict[str, SwitchDecision] = {}
+    # switches bottom-up, grouped by depth for concurrent merging
+    depth_of: dict[str, int] = {}
+
+    def _depth(node: TopoNode) -> int:
+        if node.is_server:
+            return 0
+        d = 1 + max(_depth(c) for c in node.children)
+        depth_of[node.name] = d
+        return d
+
+    _depth(topo)
+    max_depth = depth_of.get(topo.name, 1)
+
+    rs_levels: list[list[Step]] = []
+    # effective placement per child after its own subtree finished (+rearr)
+    eff_place: dict[str, dict[int, list[int]]] = dict(place)
+
+    def _eval(steps: list[Step]) -> float:
+        return sim.simulate(Plan("tmp", n_total, size, steps=steps)).total
+
+    for depth in range(1, max_depth + 1):
+        level_steps: list[list[Step]] = []
+        for sw in [s for s in topo.switches() if depth_of[s.name] == depth]:
+            dest = {}
+            for srv, blocks in place[sw.name].items():
+                for b in blocks:
+                    dest[b] = srv
+            c = len(sw.children)
+            dec = SwitchDecision(algo="?")
+            pre_steps: list[Step] = []
+
+            # ---- rearrangement decision per child (Algorithm 2, lines 8-16)
+            # Subset = the servers under the first k of the child's own
+            # children, k sized by the convergence ratio (paper §4.2): the
+            # child's uplink bandwidth over one grandchild sub-tree's
+            # uplink — enough senders to saturate the bottleneck, no more.
+            child_places = []
+            for ci, ch in enumerate(sw.children):
+                cp = eff_place[ch.name]
+                if (enable_rearrangement and not ch.is_server
+                        and len(cp) > 1):
+                    gc_bw = max(ch.children[0].uplink_bw, 1.0)
+                    k = max(1, min(len(ch.children),
+                                   -(-int(ch.uplink_bw) // int(gc_bw))))
+                    subset = [s for c in ch.children[:k]
+                              for s in c.server_ids() if s in cp]
+                    if not subset:
+                        subset = sorted(cp)[:1]
+                    if len(subset) < len(cp):
+                        rstep, rplace = _rearrange_step(cp, subset, unit)
+                        # cost with vs without rearrangement for this child's
+                        # outbound traffic (priced on the direct exchange)
+                        probe_o = _exchange_steps_direct(
+                            _index_holders([cp], n_total), dest, unit)
+                        probe_r = [rstep] + _exchange_steps_direct(
+                            _index_holders([rplace], n_total), dest, unit)
+                        if _eval(probe_r) < _eval(probe_o):
+                            pre_steps.append(rstep)
+                            cp = rplace
+                            dec.rearrange[ci] = len(subset)
+                child_places.append(cp)
+
+            holders = _index_holders(child_places, n_total)
+            balanced = len({ch.num_servers() for ch in sw.children}) == 1
+
+            # ---- plan type selection (Algorithm 2, lines 17-29)
+            cands: list[tuple[str, list[int] | None, list[Step]]] = []
+            if balanced and c > 1:
+                if "cps" in candidates:
+                    cands.append(("cps", None,
+                                  _exchange_steps_direct(holders, dest, unit)))
+                if "hcps" in candidates:
+                    for fac in factorizations(c, max_steps=max_hcps_steps):
+                        cands.append((f"hcps", fac, _exchange_steps_hcps(
+                            holders, dest, unit, fac)))
+                if "ring" in candidates and c > 2:
+                    cands.append(("ring", None,
+                                  _exchange_steps_chain(holders, dest, unit)))
+                if "rhd" in candidates and c > 1 and (c & (c - 1)) == 0:
+                    cands.append(("rhd", None,
+                                  _exchange_steps_rhd(holders, dest, unit)))
+            if not cands:
+                cands.append(("acps", None,
+                              _exchange_steps_direct(holders, dest, unit)))
+
+            best = min(cands, key=lambda x: _eval(pre_steps + x[2]))
+            dec.algo, dec.factors = best[0], best[1]
+            dec.cost = _eval(pre_steps + best[2])
+            decisions[sw.name] = dec
+            level_steps.append(pre_steps + best[2])
+            eff_place[sw.name] = place[sw.name]
+        if concurrent:
+            rs_levels.append(_merge_concurrent(level_steps))
+        else:
+            rs_levels.append([st for sl in level_steps for st in sl])
+
+    rs_steps = [st for lvl in rs_levels for st in lvl]
+    ag_steps = _mirror(rs_steps)
+    full = Plan("gentree", n_total, size, steps=rs_steps + ag_steps)
+    return GenTreeResult(plan=full, decisions=decisions,
+                         predicted_time=sim.simulate(full).total)
+
+
+# ---------------------------------------------------------------------------
+# Baseline global plans routed over a tree (for Table 7 comparisons)
+# ---------------------------------------------------------------------------
+def baseline_plan(kind: str, topo: TopoNode, size: float) -> Plan:
+    topo.finalize()
+    ids = topo.server_ids()
+    n = len(ids)
+    if kind == "ring":
+        return ring_plan(n, size, servers=ids)
+    if kind == "rhd":
+        return rhd_plan(n, size, servers=ids)
+    if kind == "cps":
+        return cps_plan(n, size, servers=ids)
+    if kind.startswith("hcps:"):
+        fac = [int(x) for x in kind.split(":", 1)[1].split("x")]
+        return hcps_plan(fac, size, servers=ids)
+    raise ValueError(kind)

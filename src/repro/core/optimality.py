@@ -1,0 +1,38 @@
+"""The paper's optimality results as checkable predicates (§3.3).
+
+Theorem 1: memory-access lower bound  D_min = (N+1)·S/N  memory ops.
+Theorem 2: no plan is simultaneously δ-optimal and ε-optimal when N > w_t.
+These are used by property-based tests and by the sync-strategy chooser.
+"""
+from __future__ import annotations
+
+from .plans import Plan
+
+
+def delta_lower_bound_mem_ops(n: int, size: float) -> float:
+    """Theorem 1: min total memory ops of any AllReduce = (N+1)·S/N."""
+    return (n + 1) * size / n
+
+
+def is_delta_optimal(plan: Plan, rel_tol: float = 1e-6) -> bool:
+    """Compares the *parallel* per-server memory cost against Theorem 1's
+    (N+1)S/N bound (servers reduce their blocks concurrently)."""
+    lb = delta_lower_bound_mem_ops(plan.n, plan.size)
+    return plan.max_mem_ops_per_server() <= lb * (1.0 + rel_tol)
+
+
+def is_epsilon_optimal(plan: Plan, w_t: int) -> bool:
+    """ε-optimal ⇔ no step has receive fan-in above the incast threshold."""
+    return plan.max_fan_in() <= w_t
+
+
+def theorem2_holds(plan: Plan, w_t: int) -> bool:
+    """No plan may be both δ- and ε-optimal when N > w_t (Theorem 2)."""
+    if plan.n <= w_t:
+        return True
+    return not (is_delta_optimal(plan) and is_epsilon_optimal(plan, w_t))
+
+
+def mem_ops_with_h_steps(n: int, size: float, h: int) -> float:
+    """Eq. (15): T = (N − 1 + 2h)·S/N·δ  — memory ops for h-step reduction."""
+    return (n - 1 + 2 * h) * size / n

@@ -1,0 +1,304 @@
+"""AllReduce plan IR + builders for the classic plan types (paper §2.1).
+
+A Plan is a sequence of synchronized Steps. Each Step contains point-to-point
+Transfers (server→server, some number of data *blocks*) and ReduceOps (a
+server folds `fan_in` blocks into one). Sizes are in data units ("floats" in
+the paper); the cost model/simulator multiplies by unit size.
+
+The IR is consumed by:
+  * core.cost_model.evaluate_plan  — GenModel closed-form style accounting
+  * core.simulator.simulate        — link-aware flow-level simulation
+  * core.collectives               — mapping onto JAX lax collectives
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Transfer:
+    src: int
+    dst: int
+    size: float  # data units moved (e.g. floats)
+
+
+@dataclass(frozen=True)
+class ReduceOp:
+    server: int
+    fan_in: int   # number of operand blocks folded into one output block
+    size: float   # size of ONE block (= output size)
+
+    @property
+    def adds(self) -> float:
+        """γ-term ops: (fan_in - 1) * size."""
+        return (self.fan_in - 1) * self.size
+
+    @property
+    def mem_ops(self) -> float:
+        """δ-term ops: fan_in reads + 1 write per element (paper §3.1)."""
+        return (self.fan_in + 1) * self.size
+
+
+@dataclass
+class Step:
+    transfers: list[Transfer] = field(default_factory=list)
+    reduces: list[ReduceOp] = field(default_factory=list)
+
+    def recv_bytes_by_dst(self) -> dict[int, float]:
+        out: dict[int, float] = {}
+        for t in self.transfers:
+            out[t.dst] = out.get(t.dst, 0.0) + t.size
+        return out
+
+    def fan_in_by_dst(self) -> dict[int, int]:
+        out: dict[int, int] = {}
+        seen = set()
+        for t in self.transfers:
+            if (t.src, t.dst) not in seen:
+                seen.add((t.src, t.dst))
+                out[t.dst] = out.get(t.dst, 0) + 1
+        return out
+
+
+@dataclass
+class Plan:
+    name: str
+    n: int                 # number of participating servers
+    size: float            # S: total data units per server
+    steps: list[Step] = field(default_factory=list)
+    servers: list[int] | None = None  # actual server ids (default 0..n-1)
+
+    def ids(self) -> list[int]:
+        return self.servers if self.servers is not None else list(range(self.n))
+
+    # -- invariants (used by property tests) --------------------------------
+    def total_traffic_per_server(self) -> dict[int, float]:
+        out = {i: 0.0 for i in self.ids()}
+        for st in self.steps:
+            for t in st.transfers:
+                out[t.src] = out.get(t.src, 0.0) + t.size
+        return out
+
+    def total_mem_ops(self) -> float:
+        return sum(r.mem_ops for st in self.steps for r in st.reduces)
+
+    def mem_ops_per_server(self) -> dict[int, float]:
+        out: dict[int, float] = {}
+        for st in self.steps:
+            for r in st.reduces:
+                out[r.server] = out.get(r.server, 0.0) + r.mem_ops
+        return out
+
+    def max_mem_ops_per_server(self) -> float:
+        """The parallel memory-access cost (Theorem 1 compares this: every
+        server reduces its own block concurrently)."""
+        per = self.mem_ops_per_server()
+        return max(per.values()) if per else 0.0
+
+    def total_adds(self) -> float:
+        return sum(r.adds for st in self.steps for r in st.reduces)
+
+    def max_fan_in(self) -> int:
+        """Max communication fan-in w (paper counts the receiver's own
+        block: w = #senders + 1)."""
+        fi = [0]
+        for st in self.steps:
+            fi.extend(v + 1 for v in st.fan_in_by_dst().values())
+        return max(fi)
+
+
+# ---------------------------------------------------------------------------
+# Builders — single-switch, N servers, S data units each.
+# ---------------------------------------------------------------------------
+def ring(n: int, size: float, servers: list[int] | None = None) -> Plan:
+    """Ring AllReduce: 2(N-1) steps of S/N-sized neighbor exchanges."""
+    ids = servers if servers is not None else list(range(n))
+    blk = size / n
+    p = Plan("ring", n, size, servers=servers)
+    # ReduceScatter phase.
+    for _ in range(n - 1):
+        st = Step()
+        for i in range(n):
+            st.transfers.append(Transfer(ids[i], ids[(i + 1) % n], blk))
+            st.reduces.append(ReduceOp(ids[(i + 1) % n], 2, blk))
+        p.steps.append(st)
+    # AllGather phase.
+    for _ in range(n - 1):
+        st = Step()
+        for i in range(n):
+            st.transfers.append(Transfer(ids[i], ids[(i + 1) % n], blk))
+        p.steps.append(st)
+    return p
+
+
+def cps(n: int, size: float, servers: list[int] | None = None) -> Plan:
+    """Co-located PS: 1 full-mesh ReduceScatter step (fan-in N) + 1 AllGather."""
+    ids = servers if servers is not None else list(range(n))
+    blk = size / n
+    p = Plan("cps", n, size, servers=servers)
+    rs = Step()
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                rs.transfers.append(Transfer(ids[i], ids[j], blk))
+        rs.reduces.append(ReduceOp(ids[i], n, blk))
+    p.steps.append(rs)
+    ag = Step()
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                ag.transfers.append(Transfer(ids[i], ids[j], blk))
+    p.steps.append(ag)
+    return p
+
+
+def reduce_broadcast(n: int, size: float, servers: list[int] | None = None) -> Plan:
+    """Naive PS: everyone → root (reduce), root → everyone (broadcast)."""
+    ids = servers if servers is not None else list(range(n))
+    root = ids[0]
+    p = Plan("reduce_broadcast", n, size, servers=servers)
+    rs = Step()
+    for i in ids[1:]:
+        rs.transfers.append(Transfer(i, root, size))
+    rs.reduces.append(ReduceOp(root, n, size))
+    p.steps.append(rs)
+    bc = Step()
+    for i in ids[1:]:
+        bc.transfers.append(Transfer(root, i, size))
+    p.steps.append(bc)
+    return p
+
+
+def rhd(n: int, size: float, servers: list[int] | None = None) -> Plan:
+    """Recursive Halving & Doubling. Non-power-of-two handled with the
+    standard fold-in/fold-out patch (the χ(N) extra steps of Table 1)."""
+    ids = servers if servers is not None else list(range(n))
+    p = Plan("rhd", n, size, servers=servers)
+    pow2 = 1 << (n.bit_length() - 1)
+    extra = n - pow2  # servers folded into partners
+
+    if extra:
+        st = Step()
+        for e in range(extra):
+            # server pow2+e sends everything to server e.
+            st.transfers.append(Transfer(ids[pow2 + e], ids[e], size))
+            st.reduces.append(ReduceOp(ids[e], 2, size))
+        p.steps.append(st)
+
+    core = ids[:pow2]
+    # Halving (ReduceScatter): step j exchanges size/2^(j+1).
+    for j in range(int(math.log2(pow2))):
+        dist = pow2 >> (j + 1)
+        sz = size / (1 << (j + 1))
+        st = Step()
+        for i in range(pow2):
+            peer = i ^ dist
+            st.transfers.append(Transfer(core[i], core[peer], sz))
+            st.reduces.append(ReduceOp(core[peer], 2, sz))
+        p.steps.append(st)
+    # Doubling (AllGather).
+    for j in reversed(range(int(math.log2(pow2)))):
+        dist = pow2 >> (j + 1)
+        sz = size / (1 << (j + 1))
+        st = Step()
+        for i in range(pow2):
+            peer = i ^ dist
+            st.transfers.append(Transfer(core[i], core[peer], sz))
+        p.steps.append(st)
+
+    if extra:
+        st = Step()
+        for e in range(extra):
+            st.transfers.append(Transfer(ids[e], ids[pow2 + e], size))
+        p.steps.append(st)
+    return p
+
+
+def hcps(factors: list[int], size: float,
+         servers: list[int] | None = None) -> Plan:
+    """m-step Hierarchical Co-located PS with orthogonal groupings
+    (paper Figure 5). factors = [f_0, ..., f_{m-1}], N = prod(factors).
+
+    Grouping for step i: servers whose mixed-radix digits differ only in
+    digit i form a group of size f_i. Each step is a CPS ReduceScatter on
+    the surviving block shard; AllGather mirrors in reverse.
+    """
+    n = 1
+    for f in factors:
+        n *= f
+    ids = servers if servers is not None else list(range(n))
+    p = Plan("hcps_" + "x".join(map(str, factors)), n, size, servers=servers)
+
+    def digits(x: int) -> list[int]:
+        d = []
+        for f in factors:
+            d.append(x % f)
+            x //= f
+        return d
+
+    def groups(step: int) -> list[list[int]]:
+        """Indices grouped by all digits except digit `step`."""
+        by_key: dict[tuple, list[int]] = {}
+        for i in range(n):
+            d = digits(i)
+            key = tuple(d[:step] + d[step + 1:])
+            by_key.setdefault(key, []).append(i)
+        return list(by_key.values())
+
+    # ReduceScatter stages: after stage i each member of a group owns 1/f_i
+    # of the shard it held before the stage.
+    shard = size
+    for si, f in enumerate(factors):
+        st = Step()
+        blk = shard / f
+        for g in groups(si):
+            assert len(g) == f
+            for a in g:
+                for b in g:
+                    if a != b:
+                        st.transfers.append(Transfer(ids[a], ids[b], blk))
+            for a in g:
+                st.reduces.append(ReduceOp(ids[a], f, blk))
+        p.steps.append(st)
+        shard = blk
+
+    # AllGather stages (reverse order, same groupings, no reduce).
+    for si in reversed(range(len(factors))):
+        f = factors[si]
+        blk = shard
+        st = Step()
+        for g in groups(si):
+            for a in g:
+                for b in g:
+                    if a != b:
+                        st.transfers.append(Transfer(ids[a], ids[b], blk))
+        p.steps.append(st)
+        shard = shard * f
+    return p
+
+
+def factorizations(n: int, max_factor: int | None = None,
+                   max_steps: int = 3) -> list[list[int]]:
+    """All ordered factorizations of n into 2..max_steps factors ≥2
+    (optionally capped per-factor). Used by GenTree's plan-type search."""
+    out: list[list[int]] = []
+
+    def rec(rem: int, cur: list[int]):
+        if len(cur) >= 2 and rem == 1:
+            out.append(list(cur))
+            return
+        if len(cur) >= max_steps and rem != 1:
+            return
+        if rem == 1:
+            return
+        f = 2
+        while f <= rem:
+            if rem % f == 0 and (max_factor is None or f <= max_factor):
+                cur.append(f)
+                rec(rem // f, cur)
+                cur.pop()
+            f += 1
+
+    rec(n, [])
+    return out

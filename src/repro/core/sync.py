@@ -1,0 +1,170 @@
+"""Gradient synchronization strategies — where GenTree meets the trainer.
+
+A SyncConfig selects how DP gradients are reduced across the mesh's
+data-parallel axes. `strategy="gentree"` builds the TPU-pod tree topology,
+prices every plan type per level with GenModel (TPU_V5E parameters), and
+picks the winner — typically hierarchical CPS with fan-ins capped by the
+per-level incast threshold w_t, exactly the paper's δ/ε trade-off.
+
+Used inside shard_map train steps (manual engine) and by the launcher to
+pick mesh-axis factorizations for the pjit (auto) engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import collectives
+from .cost_model import GenModelParams, TPU_V5E, best_flat_plan
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisPlan:
+    axis: str
+    strategy: str                   # psum | ring | rhd | cps | hcps
+    factors: tuple[int, ...] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    """strategy: auto|psum|ring|rhd|cps|hcps|gentree; applied per DP axis."""
+    strategy: str = "auto"
+    factors: tuple[int, ...] | None = None   # for explicit hcps
+    compress: str | None = None              # None | "int8"
+    params: dict[str, GenModelParams] | None = None
+
+
+def plan_axes_gentree(axes: Sequence[tuple[str, int]], size_floats: float,
+                      params: dict[str, GenModelParams] | None = None
+                      ) -> list[AxisPlan]:
+    """Per-level plan selection for a hierarchical mesh.
+
+    axes: [(axis_name, size), ...] ordered leaf-level first (e.g.
+    [("data", 16), ("pod", 2)]). Level 0 prices with pod-internal (ICI)
+    parameters, outer levels with the cross-pod (DCI) parameters — the
+    TPU analogue of the paper's Table-5 level classes.
+    """
+    params = params or TPU_V5E
+    levels = ["root_sw"] + ["cross_dc"] * 8  # leaf level ICI, outer DCI
+    out: list[AxisPlan] = []
+    for i, (name, n) in enumerate(axes):
+        p = params[levels[min(i, len(levels) - 1)]]
+        # the γ/δ terms always price at the chip ("server") level
+        srv = params["server"]
+        p = dataclasses.replace(p, gamma=srv.gamma, delta=srv.delta)
+        if n == 1:
+            continue
+        kind, fac, _cost = best_flat_plan(n, size_floats, p)
+        out.append(AxisPlan(name, kind, tuple(fac) if fac else None))
+    return out
+
+
+def resolve_axis_plans(axes: Sequence[tuple[str, int]], cfg: "SyncConfig",
+                       size_floats: float) -> list[AxisPlan]:
+    """Per-axis plan resolution shared by the gradient-sync and ZeRO-3
+    engines. hcps factors are validated per axis (explicit factors only
+    apply where they multiply to the axis size; otherwise the first valid
+    factorization, degrading to cps on prime axes)."""
+    import math as _math
+    from .plans import factorizations
+
+    if cfg.strategy == "gentree":
+        return plan_axes_gentree(axes, size_floats, cfg.params)
+
+    def axis_plan(a: str, n: int) -> AxisPlan:
+        if cfg.strategy != "hcps":
+            return AxisPlan(a, cfg.strategy, cfg.factors)
+        if cfg.factors and _math.prod(cfg.factors) == n:
+            return AxisPlan(a, "hcps", tuple(cfg.factors))
+        facs = factorizations(n)
+        if facs:
+            return AxisPlan(a, "hcps", tuple(facs[0]))
+        return AxisPlan(a, "cps", None)
+
+    return [axis_plan(a, n) for a, n in axes if n > 1]
+
+
+def _quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def allreduce_int8_cps(x: jax.Array, axis_name: str) -> jax.Array:
+    """CPS AllReduce with int8 wire format (gradient compression): 4× less
+    β/ε cost per the paper's model, at one extra γ/δ quantize pass."""
+    n = lax.psum(1, axis_name)
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    q, scale = _quantize_int8(flat)
+    parts = lax.all_to_all(q.reshape(n, -1), axis_name,
+                           split_axis=0, concat_axis=0)
+    scales = lax.all_gather(scale, axis_name)           # (n,)
+    shard = (parts.astype(jnp.float32) * scales[:, None]).sum(0)
+    qs, sc = _quantize_int8(shard)
+    full_q = lax.all_gather(qs, axis_name, axis=0, tiled=True)
+    full_s = lax.all_gather(sc, axis_name)
+    chunk = qs.shape[0]
+    full = full_q.astype(jnp.float32) * jnp.repeat(full_s, chunk)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(shape).astype(x.dtype)
+
+
+def allreduce_topk(x: jax.Array, axis_name: str, k_frac: float = 0.01
+                   ) -> jax.Array:
+    """Top-k sparsified AllReduce for the low-bandwidth (DCI) hop: keep
+    the k·|g| largest-magnitude entries per device, exchange (values,
+    indices) — wire bytes ≈ 2k vs the dense gradient. Error feedback is
+    the caller's concern (runtime keeps the residual); GenModel prices the
+    trade: β/ε shrink by ~1/(2·k_frac) at one extra γ/δ pass for the
+    top-k selection."""
+    n = lax.psum(1, axis_name)
+    shape = x.shape
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * k_frac))
+    vals, idx = lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    # dense scatter of every device's sparse contribution: gather the
+    # (vals, idx) pairs and accumulate locally — the wire cost is the
+    # gathered sparse pairs, not the dense tensor.
+    all_vals = lax.all_gather(vals, axis_name)      # (n, k)
+    all_idx = lax.all_gather(idx, axis_name)        # (n, k)
+    out = jnp.zeros_like(flat).at[all_idx.reshape(-1)].add(
+        all_vals.reshape(-1))
+    return out.reshape(shape)
+
+
+def sync_gradients(grads, axes: Sequence[tuple[str, int]], cfg: SyncConfig,
+                   fused_reduce: Callable | None = None):
+    """AllReduce every gradient leaf across the DP axes per the config.
+
+    Must be called inside shard_map with all `axes` present. Hierarchical:
+    leaf-level axis first, then outer axes — the multi-pod pattern
+    (intra-pod reduce, inter-pod exchange) falls out naturally.
+    """
+    if cfg.strategy == "auto":
+        names = tuple(a for a, n in axes if n > 1)
+        return jax.tree.map(lambda g: lax.psum(g, names), grads)
+
+    plans = resolve_axis_plans(axes, cfg, size_floats=float(
+        sum(x.size for x in jax.tree.leaves(grads))))
+
+    def leaf(g):
+        for pl in plans:
+            if cfg.compress == "int8" and pl.strategy in ("cps", "hcps"):
+                g = allreduce_int8_cps(g, pl.axis)
+            else:
+                g = collectives.allreduce(g, pl.axis, pl.strategy,
+                                          factors=pl.factors,
+                                          fused_reduce=fused_reduce)
+        return g
+
+    return jax.tree.map(leaf, grads)

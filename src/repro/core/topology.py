@@ -1,0 +1,186 @@
+"""Tree-like physical topologies (paper §4.2, Figure 6/11) + TPU pod trees.
+
+A topology is a rooted tree. Leaves are servers (compute endpoints holding
+data); internal nodes are switches. Every non-root node has an uplink to its
+parent with a bandwidth (bytes/s) and a latency contribution. GenModel
+parameters (alpha/beta/gamma/delta/epsilon/w_t) attach per *level class*
+(paper Table 5: Cross-DC / Root-SW / Middle-SW / Server).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+
+@dataclass
+class TopoNode:
+    name: str
+    children: list["TopoNode"] = field(default_factory=list)
+    # Uplink to parent (irrelevant for root).
+    uplink_bw: float = 0.0          # bytes / s
+    uplink_latency: float = 0.0     # s
+    level: str = "server"           # "server" | "middle_sw" | "root_sw" | "cross_dc"
+    parent: "TopoNode | None" = None
+    _sid: int = -1                  # server id (leaves only, assigned by finalize)
+
+    # ---- structure helpers -------------------------------------------------
+    @property
+    def is_server(self) -> bool:
+        return not self.children
+
+    def servers(self) -> list["TopoNode"]:
+        if self.is_server:
+            return [self]
+        out: list[TopoNode] = []
+        for c in self.children:
+            out.extend(c.servers())
+        return out
+
+    def num_servers(self) -> int:
+        return len(self.servers())
+
+    def switches(self) -> list["TopoNode"]:
+        """All internal nodes, bottom-up (children before parents)."""
+        if self.is_server:
+            return []
+        out: list[TopoNode] = []
+        for c in self.children:
+            out.extend(c.switches())
+        out.append(self)
+        return out
+
+    def iter_nodes(self):
+        yield self
+        for c in self.children:
+            yield from c.iter_nodes()
+
+    def finalize(self) -> "TopoNode":
+        """Assign parent pointers and contiguous server ids (DFS order)."""
+        sid = itertools.count()
+
+        def walk(node: TopoNode, parent: TopoNode | None):
+            node.parent = parent
+            if node.is_server:
+                node._sid = next(sid)
+            for c in node.children:
+                walk(c, node)
+
+        walk(self, None)
+        return self
+
+    def server_ids(self) -> list[int]:
+        return [s._sid for s in self.servers()]
+
+    # ---- routing -----------------------------------------------------------
+    def path_links(self, src: "TopoNode", dst: "TopoNode") -> list["TopoNode"]:
+        """Links (represented by their child endpoint node) on src→dst path.
+
+        Full-duplex links: the 'up' direction of node X's uplink and the
+        'down' direction are distinct capacities; we return (node, dir) pairs.
+        """
+        a_path = []
+        n = src
+        while n is not None:
+            a_path.append(n)
+            n = n.parent
+        anc = set(id(x) for x in a_path)
+        down = []
+        n = dst
+        while id(n) not in anc:
+            down.append(n)
+            n = n.parent
+        lca = n
+        up = []
+        for x in a_path:
+            if x is lca:
+                break
+            up.append(x)
+        # 'up' direction uses src-side uplinks; 'down' uses dst-side uplinks.
+        return [(x, "up") for x in up] + [(x, "down") for x in reversed(down)]
+
+
+def _server(name: str, bw: float, lat: float) -> TopoNode:
+    return TopoNode(name=name, uplink_bw=bw, uplink_latency=lat, level="server")
+
+
+# ---------------------------------------------------------------------------
+# Builders (paper Figure 11 instances + TPU pods)
+# ---------------------------------------------------------------------------
+GBPS = 1e9 / 8.0  # 1 Gbps in bytes/s
+
+
+def single_switch(n: int, *, bw: float = 10 * GBPS, lat: float = 5e-6,
+                  name: str = "root", level: str = "middle_sw") -> TopoNode:
+    """In-rack cluster: n servers on one switch. The paper's testbed switch
+    is a 10 Gbps ToR — parameter class 'middle_sw' in Table 5."""
+    root = TopoNode(name=name, level=level)
+    root.children = [_server(f"s{i}", bw, lat) for i in range(n)]
+    return root.finalize()
+
+
+def symmetric_tree(n_middle: int, servers_per_middle: int, *,
+                   server_bw: float = 10 * GBPS,
+                   uplink_bw: float = 100 * GBPS,
+                   lat: float = 5e-6) -> TopoNode:
+    root = TopoNode(name="root", level="root_sw")
+    for m in range(n_middle):
+        sw = TopoNode(name=f"msw{m}", uplink_bw=uplink_bw, uplink_latency=lat,
+                      level="middle_sw")
+        sw.children = [_server(f"s{m}_{i}", server_bw, lat)
+                       for i in range(servers_per_middle)]
+        root.children.append(sw)
+    return root.finalize()
+
+
+def asymmetric_tree(n_middle: int = 16, big: int = 32, small: int = 16, *,
+                    server_bw: float = 10 * GBPS,
+                    uplink_bw: float = 100 * GBPS,
+                    lat: float = 5e-6) -> TopoNode:
+    root = TopoNode(name="root", level="root_sw")
+    for m in range(n_middle):
+        k = big if m < n_middle // 2 else small
+        sw = TopoNode(name=f"msw{m}", uplink_bw=uplink_bw, uplink_latency=lat,
+                      level="middle_sw")
+        sw.children = [_server(f"s{m}_{i}", server_bw, lat) for i in range(k)]
+        root.children.append(sw)
+    return root.finalize()
+
+
+def cross_dc(*, dc0_middle: int = 8, dc0_servers: int = 32,
+             dc1_middle: int = 8, dc1_servers: int = 16,
+             server_bw: float = 10 * GBPS, uplink_bw: float = 100 * GBPS,
+             wan_bw: float = 10 * GBPS, wan_lat: float = 30e-3,
+             lat: float = 5e-6) -> TopoNode:
+    """Two DCs joined by a WAN link. Modelled as a virtual root whose two
+    children are the DC root switches; the WAN link is dc1-root's uplink
+    (dc0-root's uplink to the virtual root is considered infinite/local)."""
+    top = TopoNode(name="wan_root", level="cross_dc")
+    for d, (nm, ns, bw, lt) in enumerate(
+            [(dc0_middle, dc0_servers, 1e18, 0.0),
+             (dc1_middle, dc1_servers, wan_bw, wan_lat)]):
+        dc = TopoNode(name=f"dc{d}", uplink_bw=bw, uplink_latency=lt,
+                      level="root_sw")
+        for m in range(nm):
+            sw = TopoNode(name=f"dc{d}_msw{m}", uplink_bw=uplink_bw,
+                          uplink_latency=lat, level="middle_sw")
+            sw.children = [_server(f"dc{d}_s{m}_{i}", server_bw, lat)
+                           for i in range(ns)]
+            dc.children.append(sw)
+        top.children.append(dc)
+    return top.finalize()
+
+
+def tpu_pod_tree(n_pods: int = 2, chips_per_pod: int = 256, *,
+                 ici_bw: float = 50e9, dci_bw: float = 25e9,
+                 ici_lat: float = 1e-6, dci_lat: float = 1e-5) -> TopoNode:
+    """A multi-pod TPU deployment seen as a tree (DESIGN.md §3): root joins
+    pods via DCI; each pod's chips hang off a virtual 'pod fabric' node whose
+    internal bandwidth is the ICI bisection share per chip."""
+    root = TopoNode(name="dci_root", level="cross_dc")
+    for p in range(n_pods):
+        pod = TopoNode(name=f"pod{p}", uplink_bw=dci_bw, uplink_latency=dci_lat,
+                       level="root_sw")
+        pod.children = [_server(f"chip{p}_{c}", ici_bw, ici_lat)
+                        for c in range(chips_per_pod)]
+        root.children.append(pod)
+    return root.finalize()

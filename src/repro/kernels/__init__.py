@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+fused_reduce — the paper's δ-optimal N-ary reduction (core contribution's
+compute half); flash_attention — long-context attention; wkv — the RWKV6
+chunked recurrence (SSM-family memory bottleneck); rmsnorm — fused
+normalization. Each has a pure-jnp oracle in ref.py and a jit'd wrapper in
+ops.py; interpret=True validates kernel bodies on CPU.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,78 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the Mosaic kernels run natively; elsewhere (this CPU container) the
+wrappers either run interpret-mode Pallas (tests) or fall back to the
+pure-jnp oracle (production CPU path, keeps dry-run HLO clean). Select with
+`impl`: "auto" | "pallas" | "interpret" | "ref".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .fused_reduce import fused_reduce as _fused_reduce, grouped_reduce as _grouped
+from .rmsnorm import rmsnorm as _rmsnorm
+from .wkv import wkv as _wkv
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if _on_tpu() else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def fused_reduce(parts: jax.Array, impl: str = "auto") -> jax.Array:
+    """(x, L) → (L,): δ-optimal single-pass N-ary sum."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.fused_reduce_ref(parts)
+    return _fused_reduce(parts, interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("fan_in", "impl"))
+def grouped_reduce(parts: jax.Array, fan_in: int, impl: str = "auto"
+                   ) -> jax.Array:
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.fused_reduce_ref(parts)
+    return _grouped(parts, fan_in, interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "impl"))
+def attention(q, k, v, causal: bool = True, window: int = 0,
+              softcap: float = 0.0, scale: float | None = None,
+              impl: str = "auto") -> jax.Array:
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, scale=scale)
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  scale=scale, interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rmsnorm(x, w, eps: float = 1e-6, impl: str = "auto") -> jax.Array:
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.rmsnorm_ref(x, w, eps)
+    return _rmsnorm(x, w, eps=eps, interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def wkv(r, k, v, logw, u, s0, chunk: int = 32, impl: str = "auto"):
+    """Chunked RWKV6 recurrence: state + pair tile stay in VMEM on TPU."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.wkv_ref(r, k, v, logw, u, s0, chunk=chunk)
+    return _wkv(r, k, v, logw, u, s0, chunk=chunk,
+                interpret=(mode == "interpret"))

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose-tested in CI)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_reduce_ref(parts: jax.Array) -> jax.Array:
+    """(x, L) → (L,), f32 accumulation."""
+    return parts.astype(jnp.float32).sum(axis=0).astype(parts.dtype)
+
+
+def chained_reduce_ref(parts: jax.Array) -> jax.Array:
+    """The δ-suboptimal pairwise chain (Ring compute pattern), as a
+    numerical oracle for grouped_reduce(fan_in=2)."""
+    acc = parts[0].astype(jnp.float32)
+    for i in range(1, parts.shape[0]):
+        acc = acc + parts[i].astype(jnp.float32)
+    return acc.astype(parts.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * rms * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, scale: float | None = None
+                  ) -> jax.Array:
+    """Dense oracle: q (B,Hq,Tq,D), k/v (B,Hkv,Tk,D) with GQA repeat.
+
+    window > 0 limits attention to the last `window` keys (sliding window);
+    softcap > 0 applies gemma-style logit soft-capping."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    if Hq != Hkv:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    s = (scale if scale is not None else D ** -0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * s
+    if softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    qpos = jnp.arange(Tq)[:, None] + (Tk - Tq)   # right-aligned positions
+    kpos = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def wkv_ref(r, k, v, logw, u, s0, chunk: int = 32):
+    """Chunked-parallel RWKV6 WKV oracle (same math as the Pallas kernel;
+    shared with models/recurrence)."""
+    from repro.models.recurrence import _wkv_chunk
+    T = k.shape[2]
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    return _wkv_chunk(r.astype(jnp.float32), k.astype(jnp.float32),
+                      v.astype(jnp.float32), logw.astype(jnp.float32),
+                      u.astype(jnp.float32), s0.astype(jnp.float32), c)
+
+
+def ssm_scan_ref(u, dt, b, c, log_a, s0):
+    """Sequential selective-SSM oracle: s_t = exp(dt⊙logA)s + (dt·u)⊗b;
+    y_t = s·c. u/dt: (B,T,Di); b/c: (B,T,N); log_a: (Di,N); s0: (B,Di,N)."""
+    import jax.lax as lax
+
+    def step(s, xs):
+        u_t, dt_t, b_t, c_t = xs
+        decay = jnp.exp(dt_t[:, :, None] * log_a[None])
+        s = decay * s + (dt_t * u_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", s, c_t)
+        return s, y
+
+    xs = (u.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    s_fin, ys = lax.scan(step, s0.astype(jnp.float32),
+                         jax.tree.map(lambda a: a.astype(jnp.float32), xs))
+    return ys.transpose(1, 0, 2).astype(u.dtype), s_fin

@@ -1,0 +1,263 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init, and the production meshes need 512 placeholders.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCHS, get_config, supported_shapes  # noqa: E402
+from repro.models.config import SHAPES  # noqa: E402
+from repro.models.registry import build  # noqa: E402
+from repro.optim import AdamWConfig, adamw_init  # noqa: E402
+from . import hlo_analysis as ha  # noqa: E402
+from . import sharding as shr  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .train import make_train_step  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh, print memory/cost analysis, and extract the
+roofline terms (launch.hlo_analysis). No arrays are ever allocated — all
+inputs are ShapeDtypeStructs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k [--multi-pod] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    api = build(get_config(arch))
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return api.train_specs(shape)
+    if shape.kind == "prefill":
+        return api.prefill_specs(shape)
+    return api.decode_specs(shape)
+
+
+def _spec_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _seqpar_hook(mesh):
+    """Sequence-parallel residual stream: (B, T, D) activations carry
+    (dp-batch, model-sequence) sharding between blocks, so the TP
+    boundary collectives become reduce-scatter + all-gather instead of
+    all-reduce (Megatron-SP) — halves TP collective bytes and shards the
+    norms."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dpn = 1
+    for a in dp:
+        dpn *= sizes[a]
+    model = sizes.get("model", 1)
+
+    def hook(x):
+        if x.ndim == 3 and x.shape[0] % dpn == 0 and x.shape[0] > 1 \
+                and x.shape[1] % model == 0:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, "model", None)))
+        if x.ndim >= 2 and x.shape[0] % dpn == 0 and x.shape[0] > 1:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))))
+        return x
+
+    return hook
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *,
+               compile_: bool = True,
+               variants: tuple[str, ...] = ()) -> dict:
+    """variants — §Perf hillclimb knobs, applied on top of the baseline:
+      kvblock=N  flash-in-XLA attention with N-wide KV blocks
+      zero1      params replicated over DP, optimizer state sharded
+      seqpar     sequence-parallel residual stream (T over 'model')
+    """
+    import dataclasses as _dc
+    from repro.models import actsharding
+    cfg = get_config(arch)
+    fsdp = True
+    hook = actsharding.batch_dp_hook(mesh)
+    for v in variants:
+        if v.startswith("kvblock="):
+            cfg = _dc.replace(cfg, attn_kv_block=int(v.split("=")[1]))
+        elif v.startswith("moegroups="):
+            cfg = _dc.replace(cfg, moe_groups=int(v.split("=")[1]))
+        elif v == "moelocal":
+            cfg = _dc.replace(cfg, moe_local=True)
+        elif v == "zero1":
+            fsdp = False
+        elif v == "seqpar":
+            hook = _seqpar_hook(mesh)
+        elif v:
+            raise ValueError(f"unknown variant {v!r}")
+    api = build(cfg)
+    shape = SHAPES[shape_name]
+    chips = mesh.devices.size
+    actsharding.set_hook(hook, mesh)
+    t0 = time.perf_counter()
+
+    if shape.kind == "train":
+        batch_sds = api.train_specs(shape)
+        state_sds = jax.eval_shape(lambda: {
+            "params": api.init_params(jax.random.PRNGKey(0)),
+            "opt": adamw_init(api.init_params(jax.random.PRNGKey(0)))})
+        jitted, *_ = make_train_step(api, mesh, AdamWConfig(), fsdp=fsdp,
+                                     act_hook=hook)
+        with mesh:
+            lowered = jitted(state_sds, batch_sds).lower(state_sds,
+                                                         batch_sds)
+        mf = ha.model_flops_train(cfg, shape.global_batch * shape.seq_len)
+    elif shape.kind == "prefill":
+        batch_sds = api.prefill_specs(shape)
+        params_sds = api.params_spec()
+        p_spec = shr.params_specs(params_sds, mesh, fsdp=fsdp)
+        b_spec = shr.batch_specs(batch_sds, mesh)
+
+        def fn(params, batch):
+            return api.prefill(params, batch, cache_len=shape.seq_len)
+
+        with mesh:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(shr.to_named(p_spec, mesh),
+                              shr.to_named(b_spec, mesh)),
+            ).lower(params_sds, batch_sds)
+        mf = ha.model_flops_forward(cfg, shape.global_batch * shape.seq_len)
+    else:  # decode
+        specs = input_specs(arch, shape_name)
+        batch_sds, cache_sds = specs["batch"], specs["cache"]
+        params_sds = api.params_spec()
+        p_spec = shr.params_specs(params_sds, mesh, fsdp=fsdp)
+        b_spec = shr.batch_specs(batch_sds, mesh)
+        c_spec = shr.cache_specs(cache_sds, mesh)
+
+        def fn(params, cache, batch):
+            return api.decode_step(params, cache, batch)
+
+        with mesh:
+            lowered = jax.jit(
+                fn,
+                in_shardings=(shr.to_named(p_spec, mesh),
+                              shr.to_named(c_spec, mesh),
+                              shr.to_named(b_spec, mesh)),
+                out_shardings=(None, shr.to_named(c_spec, mesh)),
+                donate_argnums=(1,),
+            ).lower(params_sds, cache_sds, batch_sds)
+        mf = ha.model_flops_forward(cfg, shape.global_batch)
+
+    result = {"arch": arch, "shape": shape_name, "chips": chips,
+              "kind": shape.kind, "lower_s": time.perf_counter() - t0}
+    if not compile_:
+        return result
+
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    result["compile_s"] = time.perf_counter() - t1
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result[attr] = int(v)
+        result["bytes_per_device"] = (
+            result.get("argument_size_in_bytes", 0)
+            + result.get("temp_size_in_bytes", 0))
+    cost = compiled.cost_analysis() or {}
+    stats = ha.analyze_hlo(compiled.as_text())
+    rl = ha.roofline_from_stats(stats, chips, model_flops=mf)
+    result.update({
+        "hlo_flops": rl.flops,
+        "hlo_bytes": rl.hbm_bytes,
+        "coll_bytes": rl.coll_bytes,
+        "coll_by_kind": rl.coll_by_kind,
+        "coll_counts": stats.coll_counts,
+        "xla_cost_flops": float(cost.get("flops", 0.0)),
+        "xla_cost_bytes": float(cost.get("bytes accessed", 0.0)),
+        "compute_s": rl.compute_s,
+        "memory_s": rl.memory_s,
+        "collective_s": rl.collective_s,
+        "dominant": rl.dominant,
+        "model_flops": mf,
+        "useful_ratio": rl.useful_ratio,
+        "roofline_fraction": rl.roofline_fraction,
+    })
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None, help="write results JSON here")
+    ap.add_argument("--include-skips", action="store_true")
+    ap.add_argument("--variants", default="",
+                    help="comma-separated §Perf knobs: kvblock=N, zero1, "
+                    "seqpar")
+    args = ap.parse_args()
+    variants = tuple(v for v in args.variants.split(",") if v)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"({mesh.devices.size} chips)")
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch.replace("-", "_"), args.shape))
+
+    results = []
+    failed = 0
+    for arch, shape in cells:
+        sup = supported_shapes(arch)
+        if shape not in sup:
+            results.append({"arch": arch, "shape": shape,
+                            "skipped": "unsupported (DESIGN.md "
+                            "§Arch-applicability)"})
+            print(f"[skip] {arch} × {shape} — documented skip")
+            continue
+        try:
+            r = lower_cell(arch, shape, mesh, variants=variants)
+            results.append(r)
+            print(f"[ ok ] {arch} × {shape}: "
+                  f"flops={r['hlo_flops']:.3e} bytes={r['hlo_bytes']:.3e} "
+                  f"coll={r['coll_bytes']:.3e} dom={r['dominant']} "
+                  f"t_comp={r['compute_s']*1e3:.2f}ms "
+                  f"t_mem={r['memory_s']*1e3:.2f}ms "
+                  f"t_coll={r['collective_s']*1e3:.2f}ms "
+                  f"(compile {r['compile_s']:.1f}s)")
+        except Exception as e:
+            failed += 1
+            results.append({"arch": arch, "shape": shape,
+                            "error": repr(e)})
+            print(f"[FAIL] {arch} × {shape}: {e!r}")
+            traceback.print_exc()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"multi_pod": args.multi_pod, "results": results}, f,
+                      indent=1)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,430 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+XLA's HloCostAnalysis (exposed as compiled.cost_analysis()) counts each
+computation ONCE — a lax.scan over 64 layers contributes its body a single
+time, which under-counts FLOPs/bytes by ~L×. We therefore parse the
+optimized HLO text ourselves and weight every while-loop body by its trip
+count (XLA annotates `backend_config={"known_trip_count":{"n":...}}` on
+while ops; fall back to the loop-condition constant).
+
+Per-module accounting (per device, SPMD):
+  * FLOPs      — 2·prod(result)·prod(contracting dims) per dot
+                 (convolutions are not used by these models);
+  * HBM bytes  — Σ (operand + result bytes) over top-level compute ops;
+    fusions count once at the call site (a fusion is one HBM pass), their
+    internals contribute FLOPs only;
+  * collective bytes — operand bytes of all-reduce / reduce-scatter /
+    all-to-all / collective-permute, result bytes of all-gather (the wire
+    cost of gathering is the gathered size), × trip counts.
+
+Roofline terms (TPU v5e-class constants):
+  compute   = FLOPs_total / (chips × 197 TFLOP/s)
+  memory    = bytes_total / (chips × 819 GB/s)
+  collective= coll_bytes_total / (chips × 50 GB/s)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (per-chip usable per direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops that don't touch HBM (metadata / aliasing / control)
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+    "custom-call", "copy-start", "copy-done", "rng-bit-generator",
+}
+
+# ops whose HBM traffic we count (operands + result). Standalone
+# elementwise ops (convert/add/multiply/exp/...) are *excluded*: the CPU
+# backend leaves them unfused where TPU's XLA would fuse them into the
+# producer — counting them would inflate the memory term with
+# CPU-lowering artifacts. Their traffic is approximated by the
+# producer/consumer boundary ops below.
+_HBM_OPS = {
+    "fusion", "dot", "convolution", "reduce", "reduce-window", "sort",
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+    "concatenate", "pad", "slice", "reverse", "transpose", "copy",
+    "select-and-scatter", "cholesky", "triangular-solve", "fft",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    """Dims of the FIRST array shape in the string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    op: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"^\s*([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(")
+
+
+def _parse_instr_line(line: str) -> tuple[str, str, str, str] | None:
+    """'%x = <type> op(<rest>' → (name, type, op, rest) with balanced-paren
+    type scanning (tuple types contain '=' in /*index=k*/ comments)."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    i = m.end()
+    n = len(line)
+    if i < n and line[i] == "(":          # tuple type
+        depth = 0
+        j = i
+        while j < n:
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        rtype = line[i:j + 1]
+        i = j + 1
+    else:                                  # scalar/array type token
+        m2 = re.match(r"[\w\[\]\{\},\d]+", line[i:])
+        if not m2:
+            return None
+        rtype = m2.group(0)
+        i += m2.end()
+    m3 = _OP_RE.match(line[i:])
+    if not m3:
+        return None
+    return name, rtype, m3.group(1), line[i + m3.end():]
+
+
+def _split_operands(args: str) -> list[str]:
+    """Operand names from the call-paren contents (up to matching paren)."""
+    depth = 0
+    out = []
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                args = args[:i]
+                break
+            depth -= 1
+    return re.findall(r"%([\w\.\-]+)", args)
+
+
+class Computation:
+    def __init__(self, name: str, header: str):
+        self.name = name
+        self.header = header
+        self.params: dict[str, str] = {}      # param name -> type str
+        self.instrs: list[Instr] = []
+        self.types: dict[str, str] = {}       # instr/param name -> type
+        # parse signature params: "(x: f32[2,3], y: (s32[], f32[4]))"
+        sig = header[header.index("("):]
+        for m in re.finditer(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?[\w\[\]\{\},/\* ]*)",
+                             sig):
+            pass  # simple splitting below is more robust
+        # robust: split on top-level commas inside the first paren group
+        depth = 0
+        start = header.index("(") + 1
+        buf = ""
+        groups = []
+        for ch in header[start:]:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    groups.append(buf)
+                    break
+                depth -= 1
+            elif ch == "," and depth == 0:
+                groups.append(buf)
+                buf = ""
+                continue
+            buf += ch
+        for g in groups:
+            if ":" in g:
+                pname, ptype = g.split(":", 1)
+                self.params[pname.strip().lstrip("%")] = ptype.strip()
+
+    def add(self, line: str) -> None:
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            return
+        name, rtype, op, rest = parsed
+        ops = _split_operands(rest)
+        self.instrs.append(Instr(name, rtype, op, ops, rest, line))
+        self.types[name] = rtype
+
+    def type_of(self, operand: str) -> str:
+        if operand in self.types:
+            return self.types[operand]
+        if operand in self.params:
+            return self.params[operand]
+        return ""
+
+    def operand_bytes(self, ins: Instr) -> int:
+        return sum(_shape_bytes(self.type_of(o)) for o in ins.operands)
+
+
+def parse_module(hlo: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(2), line)
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+        else:
+            if line.strip() == "}":
+                cur = None
+            else:
+                # parameters also appear as instructions inside the body
+                pm = re.match(r"^\s*%([\w\.\-]+)\s*=\s*(\S+)\s+parameter\(",
+                              line)
+                if pm:
+                    cur.types[pm.group(1)] = pm.group(2)
+                cur.add(line)
+    if not entry and comps:
+        entry = max(comps, key=lambda n: len(comps[n].instrs))
+    return comps, entry
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+
+
+def _trip_count(ins: Instr, comps: dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(ins.line)
+    if m:
+        return int(m.group(1))
+    cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+    if cm and cm.group(1) in comps:
+        consts = []
+        for i2 in comps[cm.group(1)].instrs:
+            for c in re.finditer(r"constant\((\d+)\)", i2.line):
+                consts.append(int(c.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    rdims = _shape_dims(ins.result_type)
+    out = 1
+    for d in rdims:
+        out *= d
+    lhs_t = comp.type_of(ins.operands[0]) if ins.operands else ""
+    ldims = _shape_dims(lhs_t)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contract = 1
+    if m and ldims:
+        for ax in m.group(1).split(","):
+            if ax:
+                ax = int(ax)
+                if ax < len(ldims):
+                    contract *= ldims[ax]
+    return 2.0 * out * contract
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add_coll(self, kind: str, b: float, n: int = 1) -> None:
+        self.coll_bytes += b
+        self.coll_by_kind[kind] = self.coll_by_kind.get(kind, 0.0) + b
+        self.coll_counts[kind] = self.coll_counts.get(kind, 0) + n
+
+
+def analyze_hlo(hlo: str, breakdown: dict | None = None) -> ModuleStats:
+    """breakdown (optional): dict filled with per-computation
+    (direct_bytes, total_multiplied_bytes, trips_seen) for debugging."""
+    comps, entry = parse_module(hlo)
+    stats = ModuleStats()
+    # memoized per-computation totals (flops, bytes, coll...) then weight
+    memo: dict[tuple[str, bool], ModuleStats] = {}
+
+    def visit(name: str, in_fusion: bool, depth: int = 0) -> ModuleStats:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(name)
+        s = ModuleStats()
+        if comp is None or depth > 64:
+            return s
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                cm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                trips = _trip_count(ins, comps)
+                if breakdown is not None and cm:
+                    breakdown.setdefault("whiles", []).append(
+                        (name, cm.group(1), trips))
+                if cm:
+                    sub = visit(cm.group(1), False, depth + 1)
+                    s.flops += sub.flops * trips
+                    s.hbm_bytes += sub.hbm_bytes * trips
+                    s.coll_bytes += sub.coll_bytes * trips
+                    for k, v in sub.coll_by_kind.items():
+                        s.coll_by_kind[k] = s.coll_by_kind.get(k, 0) \
+                            + v * trips
+                    for k, v in sub.coll_counts.items():
+                        s.coll_counts[k] = s.coll_counts.get(k, 0) \
+                            + v * trips
+                continue
+            if op == "fusion":
+                fm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+                if fm:
+                    sub = visit(fm.group(1), True, depth + 1)
+                    s.flops += sub.flops            # fusion: flops only
+                if not in_fusion:
+                    s.hbm_bytes += comp.operand_bytes(ins) \
+                        + _shape_bytes(ins.result_type)
+                continue
+            if op == "conditional" or op == "call":
+                for cm in re.finditer(r"(?:branch_computations=\{([^}]*)\}"
+                                      r"|to_apply=%?([\w\.\-]+))", ins.line):
+                    names = (cm.group(1) or cm.group(2) or "")
+                    for nm in re.findall(r"%?([\w\.\-]+)", names):
+                        if nm in comps:
+                            sub = visit(nm, in_fusion, depth + 1)
+                            s.flops += sub.flops
+                            s.hbm_bytes += sub.hbm_bytes
+                            s.coll_bytes += sub.coll_bytes
+                continue
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                if base == "all-gather":
+                    b = _shape_bytes(ins.result_type)
+                else:
+                    b = comp.operand_bytes(ins)
+                s.add_coll(base, float(b))
+                if not in_fusion:
+                    s.hbm_bytes += comp.operand_bytes(ins) \
+                        + _shape_bytes(ins.result_type)
+                continue
+            if op == "dot":
+                s.flops += _dot_flops(comp, ins)
+                if not in_fusion:
+                    s.hbm_bytes += comp.operand_bytes(ins) \
+                        + _shape_bytes(ins.result_type)
+                continue
+            if op in _FREE_OPS:
+                continue
+            # data-movement / reduction ops count; standalone elementwise
+            # ops are treated as fused away (see _HBM_OPS note)
+            if not in_fusion and op in _HBM_OPS:
+                s.hbm_bytes += comp.operand_bytes(ins) \
+                    + _shape_bytes(ins.result_type)
+        memo[key] = s
+        return s
+
+    top = visit(entry, False)
+    return top
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # total FLOPs across all chips
+    hbm_bytes: float             # total HBM bytes across all chips
+    coll_bytes: float            # total collective bytes across all chips
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    coll_by_kind: dict[str, float]
+    model_flops: float = 0.0
+
+    @property
+    def bound(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """model-FLOPs time at peak vs the dominant-term time (an MFU-style
+        score derivable without wall clocks)."""
+        if self.bound <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound
+
+
+def roofline_from_stats(per_device: ModuleStats, chips: int,
+                        model_flops: float = 0.0) -> Roofline:
+    """per_device: stats of ONE SPMD partition's module; totals are ×chips
+    (so per-chip rates divide back out)."""
+    flops = per_device.flops * chips
+    hbm = per_device.hbm_bytes * chips
+    cb = per_device.coll_bytes * chips
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = hbm / (chips * HBM_BW)
+    coll_s = cb / (chips * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=cb, chips=chips,
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=coll_s, dominant=dominant,
+                    coll_by_kind={k: v * chips
+                                  for k, v in per_device.coll_by_kind.items()},
+                    model_flops=model_flops)
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) per the assignment."""
+    return 6.0 * cfg.active_params_count() * tokens
+
+
+def model_flops_forward(cfg, tokens: int) -> float:
+    return 2.0 * cfg.active_params_count() * tokens

@@ -1,0 +1,167 @@
+"""Sharding rules: map every pytree leaf to a PartitionSpec.
+
+Generic rule (FSDP × TP, ZeRO over data):
+  * pick the largest axis divisible by the 'model' size → TP axis;
+  * among the remaining axes, pick the largest divisible by the 'data'
+    size → FSDP axis (only for leaves above a size threshold — norms and
+    biases replicate);
+  * the 'pod' axis (multi-pod mesh) is pure DP for params (replicated) and
+    batch-sharded for data — cross-pod traffic is gradient sync only,
+    which is exactly where GenTree's plan applies.
+
+Batch / cache rules:
+  * leading batch axis shards over all DP axes when divisible;
+  * KV caches: KV-head axis over 'model' when divisible, else the sequence
+    axis (long-context sequence sharding);
+  * recurrent states: channel axis over 'model'.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+REPLICATE_BELOW = 1 << 18       # leaves smaller than 256 Ki elements replicate
+
+
+def _sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def leaf_spec(shape: tuple[int, ...], mesh: Mesh, *,
+              skip_first: bool = True,
+              fsdp: bool = True) -> P:
+    """Generic TP(+FSDP) spec for a parameter leaf.
+
+    skip_first: axis 0 is the scanned layer-stack axis — never sharded
+    (keeps per-layer slices local to the scan)."""
+    sz = _sizes(mesh)
+    model = sz.get("model", 1)
+    data = sz.get("data", 1)
+    n = int(np.prod(shape)) if shape else 1
+    spec: list[Any] = [None] * len(shape)
+    if n < REPLICATE_BELOW or not shape:
+        return P(*spec)
+    lo = 1 if (skip_first and len(shape) > 1) else 0
+    # TP axis: largest axis divisible by model size
+    cands = [(shape[i], i) for i in range(lo, len(shape))
+             if model > 1 and shape[i] % model == 0]
+    ti = None
+    if cands:
+        _, ti = max(cands)
+        spec[ti] = "model"
+    # FSDP axis: largest remaining axis divisible by data size
+    if fsdp and data > 1:
+        cands = [(shape[i], i) for i in range(lo, len(shape))
+                 if i != ti and shape[i] % data == 0]
+        if cands:
+            _, di = max(cands)
+            spec[di] = "data"
+    return P(*spec)
+
+
+def params_specs(params: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    return jax.tree.map(
+        lambda x: leaf_spec(x.shape, mesh, fsdp=fsdp), params)
+
+
+def opt_specs(opt_state: Any, params_spec_tree: Any,
+              mesh: Mesh | None = None) -> Any:
+    """Optimizer moments are ALWAYS fully sharded (ZeRO): when params are
+    FSDP-sharded they share the spec; when params are replicated over the
+    DP axes (ZeRO-1) the moments still shard there — pass `mesh` to derive
+    the sharded spec independently of the param spec."""
+    if mesh is not None:
+        mv = jax.tree.map(
+            lambda x: leaf_spec(x.shape, mesh, fsdp=True),
+            opt_state["m"])
+    else:
+        mv = params_spec_tree
+    return {"m": mv, "v": mv, "step": P()}
+
+
+def _dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _dp_size(mesh: Mesh) -> int:
+    sz = _sizes(mesh)
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= sz[a]
+    return n
+
+
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Shard the leading batch axis over the DP axes (mrope_positions has
+    batch at axis 1)."""
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+
+    def spec(path, x) -> P:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = x.shape
+        if name == "mrope_positions":       # (3, B, T)
+            return P(None, dp if shape[1] % dpn == 0 else None, None)
+        s: list[Any] = [None] * len(shape)
+        if shape and shape[0] % dpn == 0 and shape[0] > 1:
+            s[0] = dp
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Any:
+    """KV caches (L, B, Hkv, S, hd): batch over DP if divisible; then
+    KV-heads over 'model' if divisible, else sequence over 'model'.
+    Recurrent states (L, B, H|Di, ...): channel axis over 'model'."""
+    sz = _sizes(mesh)
+    model = sz.get("model", 1)
+    dp = _dp_axes(mesh)
+    dpn = _dp_size(mesh)
+
+    def spec(path, x) -> P:
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        shape = x.shape
+        if name == "pos":
+            return P(shape[0] % dpn == 0 and dp or None)
+        s: list[Any] = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dpn == 0 and shape[1] > 1:
+            s[1] = dp          # batch axis of (L, B, ...)
+        if name in ("k", "v", "xk", "xv") and len(shape) == 5:
+            # KV heads over 'model' when divisible, else sequence.
+            # Sequence sharding makes the per-token cache update replicate
+            # (SPMD can't partition the dynamic-update at `pos`; §Perf
+            # iter 12 measured the alternatives — head_dim sharding is
+            # WORSE because RoPE/GQA-repeat reshard); the production fix
+            # is a paged/ring KV cache with manual decode collectives,
+            # out of scope for GSPMD auto-sharding.
+            if model > 1 and shape[2] % model == 0:
+                s[2] = "model"                  # KV heads
+            elif model > 1 and shape[3] % model == 0:
+                s[3] = "model"                  # sequence
+            # long-context, small batch: spend the idle DP axes on the
+            # sequence axis too (e.g. long_500k with global_batch=1)
+            if s[1] is None and s[3] is None and len(dp) \
+                    and shape[3] % dpn == 0 and shape[3] >= 4 * dpn:
+                s[3] = dp
+        elif name == "wkv" and len(shape) == 5:
+            if model > 1 and shape[2] % model == 0:
+                s[2] = "model"                  # wkv heads
+        elif name == "ssm" and len(shape) == 4:
+            if model > 1 and shape[2] % model == 0:
+                s[2] = "model"                  # expanded channels
+        elif name in ("tm_shift", "cm_shift") and len(shape) == 4:
+            if model > 1 and shape[3] % model == 0:
+                s[3] = "model"
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def to_named(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,305 @@
+"""Training drivers.
+
+Two engines:
+
+* **auto** — jax.jit + NamedSharding (FSDP × TP × pod-DP). XLA SPMD inserts
+  every collective. This is the baseline engine every dry-run cell lowers
+  with.
+* **manual** — shard_map over the DP axes ('pod', 'data'); parameters are
+  ZeRO-3 sharded (flat shards per leaf), gathered with a *plan-selected*
+  AllGather and gradients reduced with a *plan-selected* ReduceScatter —
+  ring / rhd / cps / hcps per core.sync's GenModel pricing. This is the
+  paper's technique as a first-class training feature: GenTree decides the
+  collective schedule, the engine executes it.
+
+`python -m repro.launch.train --arch <id> --steps N` runs a reduced-config
+training loop on the local device (examples/tests); full-size configs are
+exercised via launch.dryrun.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import collectives
+from repro.core.sync import AxisPlan, SyncConfig, plan_axes_gentree
+from repro.models.registry import ModelAPI
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from . import sharding as shr
+from .mesh import dp_axes, axis_sizes
+
+
+# ---------------------------------------------------------------------------
+# auto engine (pjit)
+# ---------------------------------------------------------------------------
+def make_train_step(api: ModelAPI, mesh: Mesh,
+                    opt_cfg: AdamWConfig = AdamWConfig(), *,
+                    donate: bool = True, fsdp: bool = True,
+                    act_hook=None):
+    """Returns (jitted_step, state_shardings_fn, batch_shardings_fn).
+    fsdp=False → ZeRO-1 (params replicated over DP, moments sharded)."""
+    from repro.models import actsharding
+
+    def step(state, batch):
+        actsharding.set_hook(act_hook or actsharding.batch_dp_hook(mesh),
+                             mesh)
+        loss, grads = jax.value_and_grad(
+            lambda p: api.loss_fn(p, batch))(state["params"])
+        params, opt, gnorm = adamw_update(state["params"], grads,
+                                          state["opt"], opt_cfg)
+        return ({"params": params, "opt": opt},
+                {"loss": loss, "gnorm": gnorm})
+
+    def state_shardings(state_shape):
+        p_spec = shr.params_specs(state_shape["params"], mesh, fsdp=fsdp)
+        return shr.to_named(
+            {"params": p_spec,
+             "opt": shr.opt_specs(state_shape["opt"], p_spec, mesh)},
+            mesh)
+
+    def batch_shardings(batch_shape):
+        return shr.to_named(shr.batch_specs(batch_shape, mesh), mesh)
+
+    def jitted(state_shape, batch_shape):
+        ss = state_shardings(state_shape)
+        bs = batch_shardings(batch_shape)
+        ms = shr.to_named({"loss": P(), "gnorm": P()}, mesh)
+        return jax.jit(step, in_shardings=(ss, bs),
+                       out_shardings=(ss, ms),
+                       donate_argnums=(0,) if donate else ())
+
+    return jitted, state_shardings, batch_shardings
+
+
+# ---------------------------------------------------------------------------
+# manual engine (shard_map, ZeRO-3 with plan-selected collectives)
+# ---------------------------------------------------------------------------
+def _flat_shard(x: jax.Array, n: int, idx: jax.Array) -> jax.Array:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return jax.lax.dynamic_slice_in_dim(flat, idx * (flat.size // n),
+                                        flat.size // n)
+
+
+def shard_params_zero3(params: Any, mesh: Mesh) -> Any:
+    """Host-side: split every leaf into flat per-DP-rank shards, placed with
+    P(dp) on a leading shard axis."""
+    dp = dp_axes(mesh)
+    sizes = axis_sizes(mesh)
+    n = 1
+    for a in dp:
+        n *= sizes[a]
+
+    def split(x):
+        flat = jnp.asarray(x).reshape(-1)
+        pad = (-flat.size) % n
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        out = flat.reshape(n, -1)
+        return jax.device_put(out, NamedSharding(mesh, P(dp, None)))
+
+    return jax.tree.map(split, params)
+
+
+def _gather_leaf(shard: jax.Array, shape, dtype, plans: Sequence[AxisPlan]):
+    flat = shard
+    for pl in plans:
+        if pl.strategy in ("psum", "auto"):
+            flat = jax.lax.all_gather(flat, pl.axis, axis=0, tiled=True)
+        elif pl.strategy == "ring":
+            flat = collectives.all_gather_ring(flat, pl.axis)
+        elif pl.strategy == "rhd":
+            flat = collectives.all_gather_rhd(flat, pl.axis)
+        elif pl.strategy == "cps":
+            flat = collectives.all_gather_cps(flat, pl.axis)
+        elif pl.strategy == "hcps":
+            flat = collectives.all_gather_hcps(flat, pl.axis, pl.factors)
+        else:
+            raise ValueError(pl.strategy)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def _scatter_leaf(full: jax.Array, plans: Sequence[AxisPlan]):
+    flat = full.reshape(-1)
+    for pl in reversed(plans):
+        flat = collectives.reduce_scatter(flat, pl.axis, pl.strategy,
+                                          factors=pl.factors)
+    return flat
+
+
+def make_manual_train_step(api: ModelAPI, mesh: Mesh,
+                           opt_cfg: AdamWConfig = AdamWConfig(), *,
+                           sync: SyncConfig = SyncConfig(strategy="gentree")):
+    """ZeRO-3 shard_map engine. Parameter AllGather and gradient
+    ReduceScatter run the GenModel-selected plan per mesh level (intra-pod
+    first, cross-pod second — the paper's hierarchical structure)."""
+    dp = dp_axes(mesh)
+    sizes = axis_sizes(mesh)
+    axes = [(a, sizes[a]) for a in dp if sizes[a] > 1]
+    shapes = api.params_spec()
+    leaf_shapes = jax.tree.map(lambda l: (l.shape, l.dtype), shapes,
+                               is_leaf=lambda x: hasattr(x, "shape"))
+
+    def plans_for(size_floats: float) -> list[AxisPlan]:
+        from repro.core.sync import resolve_axis_plans
+        if sync.strategy == "auto":
+            return [AxisPlan(a, "psum") for a, _ in axes]
+        return resolve_axis_plans(axes, sync, size_floats)
+
+    flat_sd, sd_treedef = jax.tree.flatten(
+        jax.tree.map(lambda l: (tuple(l.shape), l.dtype), shapes,
+                     is_leaf=lambda x: hasattr(x, "shape")),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+
+    def step(state, batch):
+        from repro.models import actsharding
+        actsharding.set_hook(None)    # shard_map bodies are fully manual
+
+        def inner(p_shards, opt, batch_local):
+            total_size = sum(
+                float(jnp.size(s)) for s in jax.tree.leaves(p_shards)) or 1.0
+            plans = plans_for(total_size)
+
+            flat_shards = jax.tree.leaves(p_shards)
+            gathered = [
+                _gather_leaf(s[0], sd[0], sd[1], plans)
+                for s, sd in zip(flat_shards, flat_sd)]
+            params = jax.tree.unflatten(jax.tree.structure(p_shards),
+                                        gathered)
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss_fn(p, batch_local, remat=True))(params)
+            # mean over DP shards happens inside the reduce; rescale
+            ndp = 1
+            for _, s in axes:
+                ndp *= s
+            g_shards = jax.tree.map(
+                lambda g: (_scatter_leaf(g, plans) / ndp)[None], grads)
+            loss = jax.lax.pmean(loss, tuple(a for a, _ in axes))
+            new_p, new_o, gn = adamw_update(p_shards, g_shards, opt, opt_cfg)
+            gn = jax.lax.pmean(gn, tuple(a for a, _ in axes))
+            return new_p, new_o, loss, gn
+
+        from jax import shard_map
+        spec_shard = jax.tree.map(lambda _: P(dp, None), state["params"])
+        spec_opt = {"m": spec_shard, "v": spec_shard, "step": P()}
+        bspec = shr.batch_specs(batch, mesh)
+        new_p, new_o, loss, gn = shard_map(
+            inner, mesh=mesh,
+            in_specs=(spec_shard, spec_opt, bspec),
+            out_specs=(spec_shard, spec_opt, P(), P()),
+            check_vma=False)(state["params"], state["opt"], batch)
+        return ({"params": new_p, "opt": new_o},
+                {"loss": loss, "gnorm": gn})
+
+    return jax.jit(step, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# driver (reduced-config local training; examples import run_training)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TrainConfig:
+    arch: str = "stablelm-12b"
+    steps: int = 50
+    seq_len: int = 128
+    global_batch: int = 8
+    engine: str = "auto"            # auto | manual
+    sync: str = "auto"              # auto|psum|ring|rhd|cps|hcps|gentree
+    lr: float = 1e-3
+    ckpt_dir: str | None = None
+    ckpt_every: int = 25
+    seed: int = 0
+    log_every: int = 10
+
+
+def run_training(tc: TrainConfig, mesh: Mesh | None = None,
+                 smoke: bool = True, on_log=print) -> dict:
+    from repro.configs import get_config
+    from repro.data import DataConfig, SyntheticLM
+    from repro.models.config import smoke_config
+    from repro.models.registry import build
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime import FaultTolerantLoop
+
+    cfg = get_config(tc.arch)
+    if smoke:
+        cfg = smoke_config(cfg)
+    api = build(cfg)
+    mesh = mesh or jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+
+    dcfg = DataConfig(
+        vocab=cfg.vocab, seq_len=tc.seq_len, global_batch=tc.global_batch,
+        seed=tc.seed,
+        embed_dim=cfg.d_model if cfg.embeds_input else 0,
+        frames=32 if cfg.family == "audio" else 0)
+    data = SyntheticLM(dcfg)
+    opt_cfg = AdamWConfig(lr=tc.lr)
+
+    params = api.init_params(jax.random.PRNGKey(tc.seed))
+    state = {"params": params, "opt": adamw_init(params)}
+
+    if tc.engine == "manual":
+        state = {"params": shard_params_zero3(state["params"], mesh),
+                 "opt": adamw_init(shard_params_zero3(params, mesh))}
+        step_fn = make_manual_train_step(
+            api, mesh, opt_cfg, sync=SyncConfig(strategy=tc.sync))
+    else:
+        jitted, ss_fn, bs_fn = make_train_step(api, mesh, opt_cfg)
+        b0 = jax.tree.map(jnp.asarray, data.batch_at(0))
+        step_fn = jitted(jax.eval_shape(lambda: state),
+                         jax.eval_shape(lambda: b0))
+
+    losses = []
+
+    def one_step(state, step):
+        batch = jax.tree.map(jnp.asarray, data.batch_at(step))
+        state, metrics = step_fn(state, batch)
+        if step % tc.log_every == 0:
+            on_log(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                   f"gnorm {float(metrics['gnorm']):.3f}")
+        losses.append(float(metrics["loss"]))
+        return state
+
+    if tc.ckpt_dir:
+        mgr = CheckpointManager(tc.ckpt_dir, keep=2)
+        loop = FaultTolerantLoop(one_step, state, mgr,
+                                 ckpt_every=tc.ckpt_every)
+        state = loop.run(tc.steps)
+    else:
+        for s in range(tc.steps):
+            state = one_step(state, s)
+
+    return {"state": state, "losses": losses}
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-12b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--engine", default="auto")
+    ap.add_argument("--sync", default="auto")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    out = run_training(TrainConfig(
+        arch=args.arch, steps=args.steps, engine=args.engine,
+        sync=args.sync, seq_len=args.seq_len, global_batch=args.batch,
+        ckpt_dir=args.ckpt_dir))
+    print(f"final loss: {out['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Activation-sharding constraints.
+
+XLA SPMD propagation can drop the batch sharding of activations inside
+scan-over-layers bodies (observed: hymba's 25-head attention replicating
+the global batch on every device — a 16× HBM/FLOP inflation). Production
+frameworks pin activations explicitly; model code calls `constrain(x)`
+at block boundaries and the launcher installs a mesh-aware hook.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+_HOOK: Optional[Callable] = None
+_MESH = None          # mesh for layer-level shard_map regions (MoE)
+
+
+def set_hook(fn: Optional[Callable], mesh=None) -> None:
+    global _HOOK, _MESH
+    _HOOK = fn
+    _MESH = mesh
+
+
+def mesh_ctx():
+    """(mesh, dp_axes) for layer-level shard_map regions, or None."""
+    if _MESH is None:
+        return None
+    dp = tuple(a for a in _MESH.axis_names if a != "model")
+    return _MESH, dp
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    """Apply the installed activation constraint (identity by default)."""
+    if _HOOK is None:
+        return x
+    return _HOOK(x)
+
+
+def batch_dp_hook(mesh) -> Callable:
+    """Constrain axis 0 (batch) of (B, T, D) activations to the DP axes,
+    leaving the rest to the partitioner."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dpn = 1
+    for a in dp:
+        dpn *= sizes[a]
+
+    def hook(x):
+        if x.ndim >= 2 and x.shape[0] % dpn == 0 and x.shape[0] > 1:
+            spec = P(dp, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, spec))
+        return x
+
+    return hook

@@ -1,0 +1,216 @@
+"""Whisper-style encoder-decoder. The conv/mel frontend is a STUB —
+``input_specs`` provides precomputed frame embeddings (B, T_audio, D); the
+backbone (bidirectional encoder, causal decoder with cross-attention) is
+implemented in full.
+
+Decode state = self-attention KV cache + the (static) cross-attention K/V
+computed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .actsharding import constrain
+from .config import ModelConfig
+from .layers import (Params, _qkv, attention, attention_decode, dense_init,
+                     init_attention, init_mlp, mlp, rmsnorm)
+
+N_AUDIO_FRAMES = 1500   # whisper: 30 s of audio → 1500 frames post-conv
+
+
+def _init_cross(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype=dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    keys = jax.random.split(key, cfg.n_encoder_layers + cfg.n_layers + 3)
+
+    def enc_layer(k):
+        ks = jax.random.split(k, 2)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(ks[0], cfg, dtype),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    def dec_layer(k):
+        ks = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln_x": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(ks[0], cfg, dtype),
+            "xattn": _init_cross(ks[1], cfg, dtype),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    enc = jax.tree.map(lambda *xs: jnp.stack(xs),
+                       *[enc_layer(keys[i])
+                         for i in range(cfg.n_encoder_layers)])
+    dec = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[dec_layer(keys[cfg.n_encoder_layers + i])
+          for i in range(cfg.n_layers)])
+    i0 = cfg.n_encoder_layers + cfg.n_layers
+    return {
+        "encoder": enc,
+        "decoder": dec,
+        "ln_enc": jnp.zeros((cfg.d_model,), dtype),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "embed": dense_init(keys[i0], (cfg.vocab, cfg.d_model), scale=0.02,
+                            dtype=dtype),
+        "lm_head": dense_init(keys[i0 + 1], (cfg.d_model, cfg.vocab),
+                              dtype=dtype),
+    }
+
+
+def encode(params: Params, cfg: ModelConfig, frames: jax.Array,
+           remat: bool = True) -> jax.Array:
+    """frames: (B, T_audio, D) stub embeddings → encoder states."""
+    x = frames
+    B, T, _ = x.shape
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        h = attention(lp["attn"], rmsnorm(x, lp["ln1"]), cfg, causal=False,
+                      positions=positions)
+        x = x + h
+        return constrain(x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"]))), None
+
+    blk = jax.checkpoint(body) if remat else body
+    x, _ = lax.scan(blk, x, params["encoder"])
+    return rmsnorm(x, params["ln_enc"])
+
+
+def _cross_attend(xp: Params, z: jax.Array, xk: jax.Array, xv: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """z: (B, T, D) queries; xk/xv: (B, Hkv, Te, hd) precomputed."""
+    B, T, _ = z.shape
+    hd = cfg.head_dim
+    q = (z @ xp["wq"]).reshape(B, T, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(xk, rep, axis=1) if rep > 1 else xk
+    v = jnp.repeat(xv, rep, axis=1) if rep > 1 else xv
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    o = o.astype(z.dtype).transpose(0, 2, 1, 3).reshape(B, T, -1)
+    return o @ xp["wo"]
+
+
+def _cross_kv(xp: Params, enc: jax.Array, cfg: ModelConfig):
+    B, Te, _ = enc.shape
+    hd = cfg.head_dim
+    k = (enc @ xp["wk"]).reshape(B, Te, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (enc @ xp["wv"]).reshape(B, Te, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            frames: jax.Array, remat: bool = True, **_kw) -> jax.Array:
+    """Teacher-forced training forward: audio frames + decoder tokens."""
+    enc = encode(params, cfg, frames, remat=remat)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, _ = x.shape
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        h = attention(lp["attn"], rmsnorm(x, lp["ln1"]), cfg,
+                      positions=positions)
+        x = x + h
+        xk, xv = _cross_kv(lp["xattn"], enc, cfg)
+        x = x + _cross_attend(lp["xattn"], rmsnorm(x, lp["ln_x"]), xk, xv, cfg)
+        return constrain(x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"]))), None
+
+    blk = jax.checkpoint(body) if remat else body
+    x, _ = lax.scan(blk, x, params["decoder"])
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["lm_head"]
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict, **kw) -> jax.Array:
+    logits = forward(params, cfg, batch["tokens"], frames=batch["frames"],
+                     **kw)
+    labels = batch["labels"]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, seq, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, seq, hd), dtype),
+        "xk": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads,
+                         N_AUDIO_FRAMES, hd), dtype),
+        "xv": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads,
+                         N_AUDIO_FRAMES, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            frames: jax.Array, cache_len: int, **_kw
+            ) -> tuple[jax.Array, dict]:
+    enc = encode(params, cfg, frames, remat=True)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, _ = x.shape
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :]
+
+    def body(x, lp):
+        z = rmsnorm(x, lp["ln1"])
+        _, k, v = _qkv(lp["attn"], z, cfg, positions, None)
+        x = x + attention(lp["attn"], z, cfg, positions=positions)
+        xk, xv = _cross_kv(lp["xattn"], enc, cfg)
+        x = x + _cross_attend(lp["xattn"], rmsnorm(x, lp["ln_x"]), xk, xv, cfg)
+        x = constrain(x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"])))
+        return x, (k, v, xk, xv)
+
+    x, (ks, vs, xks, xvs) = lax.scan(jax.checkpoint(body), x,
+                                     params["decoder"])
+    x = rmsnorm(x, params["ln_f"])
+    logits = x[:, -1:] @ params["lm_head"]
+    cache = init_cache(cfg, B, cache_len, ks.dtype)
+    cache["k"] = lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0))
+    cache["v"] = lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0))
+    cache["xk"], cache["xv"] = xks, xvs
+    cache["pos"] = jnp.full((B,), T, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array, **_kw) -> tuple[jax.Array, dict]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos = cache["pos"]
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        z = rmsnorm(x, lp["ln1"])
+        h, nk, nv = attention_decode(lp["attn"], z, ck, cv, pos, cfg)
+        x = x + h
+        x = x + _cross_attend(lp["xattn"], rmsnorm(x, lp["ln_x"]), xk, xv,
+                              cfg)
+        x = constrain(x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"])))
+        return x, (nk, nv)
+
+    x, (nks, nvs) = lax.scan(body, x, (params["decoder"], cache["k"],
+                                       cache["v"], cache["xk"],
+                                       cache["xv"]))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return logits, {"k": nks, "v": nvs, "xk": cache["xk"],
+                    "xv": cache["xv"], "pos": pos + 1}

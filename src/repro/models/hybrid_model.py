@@ -1,0 +1,155 @@
+"""Hymba-style hybrid: every layer runs attention heads and a Mamba SSM
+branch *in parallel* on the same input, normalizes each branch output, and
+averages them (arXiv:2411.13676, meta-tokens omitted — DESIGN.md
+§Arch-applicability).
+
+Decode state = KV cache (bounded by the sliding window for local layers)
++ per-layer SSM state, so `long_500k` decode is O(window + state), not O(T).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import (Params, attention, attention_decode, dense_init,
+                     init_attention, init_mlp, mlp, rmsnorm)
+from .actsharding import constrain
+from .recurrence import init_mamba, mamba_ssm
+from .transformer import window_array
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    L = cfg.n_layers
+    keys = jax.random.split(key, L + 2)
+
+    def layer(k):
+        ks = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "ln_attn": jnp.zeros((cfg.d_model,), dtype),
+            "ln_ssm": jnp.zeros((cfg.d_model,), dtype),
+            "attn": init_attention(ks[0], cfg, dtype),
+            "ssm": init_mamba(ks[1], cfg, dtype),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+        }
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[layer(keys[i]) for i in range(L)])
+    return {
+        "layers": stacked,
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "embed": dense_init(keys[L], (cfg.vocab, cfg.d_model), scale=0.02,
+                            dtype=dtype),
+        "lm_head": dense_init(keys[L + 1], (cfg.d_model, cfg.vocab),
+                              dtype=dtype),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    hd = cfg.head_dim
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, seq, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, seq, hd), dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, di, cfg.ssm_state),
+                         jnp.float32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _combine(cfg, lp, a, s):
+    a = rmsnorm(a, lp["ln_attn"])
+    s = rmsnorm(s, lp["ln_ssm"])
+    return ((a.astype(jnp.float32) + s.astype(jnp.float32)) * 0.5
+            ).astype(a.dtype)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            remat: bool = True, ssm_chunk: int = 16, **_kw) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, _ = x.shape
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :]
+    wins = window_array(cfg)
+
+    def body(x, inp):
+        lp, w = inp
+        z = rmsnorm(x, lp["ln1"])
+        a = attention(lp["attn"], z, cfg, window=w, positions=positions)
+        s, _ = mamba_ssm(lp["ssm"], z, cfg, chunk=ssm_chunk)
+        x = x + _combine(cfg, lp, a, s)
+        x = constrain(x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"])))
+        return x, None
+
+    blk = jax.checkpoint(body) if remat else body
+    x, _ = lax.scan(blk, x, (params["layers"], wins))
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["lm_head"]
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict, **kw) -> jax.Array:
+    logits = forward(params, cfg, batch["tokens"], **kw)
+    labels = batch["labels"]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            cache_len: int, ssm_chunk: int = 16, **_kw
+            ) -> tuple[jax.Array, dict]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, _ = x.shape
+    positions = jnp.arange(T, dtype=jnp.int32)[None, :]
+    wins = window_array(cfg)
+
+    def body(x, inp):
+        lp, w = inp
+        z = rmsnorm(x, lp["ln1"])
+        from .layers import _qkv
+        _, k, v = _qkv(lp["attn"], z, cfg, positions, None)
+        a = attention(lp["attn"], z, cfg, window=w, positions=positions)
+        s, s_fin = mamba_ssm(lp["ssm"], z, cfg, chunk=ssm_chunk)
+        x = x + _combine(cfg, lp, a, s)
+        x = constrain(x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"])))
+        return x, (k, v, s_fin)
+
+    x, (ks, vs, ss) = lax.scan(jax.checkpoint(body), x,
+                               (params["layers"], wins))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x[:, -1:] @ params["lm_head"]
+    cache = init_cache(cfg, B, cache_len, ks.dtype)
+    cache["k"] = lax.dynamic_update_slice(cache["k"], ks, (0, 0, 0, 0, 0))
+    cache["v"] = lax.dynamic_update_slice(cache["v"], vs, (0, 0, 0, 0, 0))
+    cache["ssm"] = ss
+    cache["pos"] = jnp.full((B,), T, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: dict,
+                tokens: jax.Array, **_kw) -> tuple[jax.Array, dict]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B = x.shape[0]
+    pos = cache["pos"]
+    wins = window_array(cfg)
+
+    def body(x, inp):
+        lp, w, ck, cv, cs = inp
+        z = rmsnorm(x, lp["ln1"])
+        a, nk, nv = attention_decode(lp["attn"], z, ck, cv, pos, cfg,
+                                     window=w)
+        s, ns = mamba_ssm(lp["ssm"], z, cfg, state=cs, chunk=1)
+        x = x + _combine(cfg, lp, a, s)
+        x = constrain(x + mlp(lp["mlp"], rmsnorm(x, lp["ln2"])))
+        return x, (nk, nv, ns)
+
+    x, (nks, nvs, nss) = lax.scan(
+        body, x, (params["layers"], wins, cache["k"], cache["v"],
+                  cache["ssm"]))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return logits, {"k": nks, "v": nvs, "ssm": nss, "pos": pos + 1}

@@ -1,0 +1,177 @@
+"""Uniform model API over all families + per-cell input specs.
+
+`build(cfg)` returns a ModelAPI exposing init / loss / prefill / decode and
+`input_specs(shape)` — ShapeDtypeStruct stand-ins for every input of the
+step that the (arch × shape) cell lowers (train_step for train shapes,
+prefill for prefill shapes, decode_step for decode shapes). No allocation:
+cache/state specs come from jax.eval_shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, ShapeConfig
+from . import encdec, hybrid_model, rwkv_model, transformer
+from .encdec import N_AUDIO_FRAMES
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable            # (params, batch) -> scalar
+    forward: Callable
+    prefill: Callable            # (params, batch, cache_len) -> (logits, cache)
+    decode_step: Callable        # (params, cache, batch) -> (logits, cache)
+    init_cache: Callable         # (batch, seq) -> cache pytree
+
+    # -- spec helpers --------------------------------------------------------
+    def train_specs(self, shape: ShapeConfig) -> dict:
+        B, T = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        batch = {"labels": sds((B, T), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["embeds"] = sds((B, T, cfg.d_model), jnp.bfloat16)
+            batch["mrope_positions"] = sds((3, B, T), jnp.int32)
+        elif cfg.family == "audio":
+            batch["frames"] = sds((B, N_AUDIO_FRAMES, cfg.d_model),
+                                  jnp.bfloat16)
+            batch["tokens"] = sds((B, T), jnp.int32)
+        else:
+            batch["tokens"] = sds((B, T), jnp.int32)
+        return batch
+
+    def prefill_specs(self, shape: ShapeConfig) -> dict:
+        B, T = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        batch = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = sds((B, T, cfg.d_model), jnp.bfloat16)
+            batch["mrope_positions"] = sds((3, B, T), jnp.int32)
+        elif cfg.family == "audio":
+            batch["frames"] = sds((B, N_AUDIO_FRAMES, cfg.d_model),
+                                  jnp.bfloat16)
+            batch["tokens"] = sds((B, T), jnp.int32)
+        else:
+            batch["tokens"] = sds((B, T), jnp.int32)
+        return batch
+
+    def decode_specs(self, shape: ShapeConfig) -> dict:
+        """{tokens/embeds: (B, 1, ...), cache: <family cache at seq_len>}."""
+        B, S = shape.global_batch, shape.seq_len
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        batch: dict = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = sds((B, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = sds((B, 1), jnp.int32)
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        return {"batch": batch, "cache": cache}
+
+    def params_spec(self):
+        return jax.eval_shape(
+            lambda: self.init_params(jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+def _dense_api(cfg: ModelConfig) -> ModelAPI:
+    def prefill(params, batch, cache_len, **kw):
+        return transformer.prefill(
+            params, cfg, batch.get("tokens"), cache_len=cache_len,
+            embeds=batch.get("embeds"),
+            mrope_positions=batch.get("mrope_positions"), **kw)
+
+    def decode(params, cache, batch, **kw):
+        return transformer.decode_step(
+            params, cfg, cache, batch.get("tokens"),
+            embeds=batch.get("embeds"), **kw)
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key, dtype=jnp.bfloat16: transformer.init_params(
+            key, cfg, dtype),
+        loss_fn=lambda p, b, **kw: transformer.loss_fn(p, cfg, b, **kw),
+        forward=lambda p, b, **kw: transformer.forward(
+            p, cfg, b.get("tokens"), embeds=b.get("embeds"),
+            mrope_positions=b.get("mrope_positions"), **kw),
+        prefill=prefill,
+        decode_step=decode,
+        init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+    )
+
+
+def _rwkv_api(cfg: ModelConfig) -> ModelAPI:
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key, dtype=jnp.bfloat16: rwkv_model.init_params(
+            key, cfg, dtype),
+        loss_fn=lambda p, b, **kw: rwkv_model.loss_fn(p, cfg, b, **kw),
+        forward=lambda p, b, **kw: rwkv_model.forward(
+            p, cfg, b["tokens"], **kw)[0],
+        prefill=lambda p, b, cache_len: rwkv_model.prefill(
+            p, cfg, b["tokens"], cache_len=cache_len),
+        decode_step=lambda p, c, b: rwkv_model.decode_step(
+            p, cfg, c, b["tokens"]),
+        # the recurrent state is seq-length independent
+        init_cache=lambda b, s: rwkv_model.init_state(cfg, b),
+    )
+
+
+def _hybrid_api(cfg: ModelConfig) -> ModelAPI:
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key, dtype=jnp.bfloat16: hybrid_model.init_params(
+            key, cfg, dtype),
+        loss_fn=lambda p, b, **kw: hybrid_model.loss_fn(p, cfg, b, **kw),
+        forward=lambda p, b, **kw: hybrid_model.forward(
+            p, cfg, b["tokens"], **kw),
+        prefill=lambda p, b, cache_len: hybrid_model.prefill(
+            p, cfg, b["tokens"], cache_len=cache_len),
+        decode_step=lambda p, c, b: hybrid_model.decode_step(
+            p, cfg, c, b["tokens"]),
+        init_cache=lambda b, s: hybrid_model.init_cache(cfg, b, s),
+    )
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelAPI:
+    def prefill(params, batch, cache_len):
+        return encdec.prefill(params, cfg, batch["tokens"],
+                              frames=batch["frames"], cache_len=cache_len)
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda key, dtype=jnp.bfloat16: encdec.init_params(
+            key, cfg, dtype),
+        loss_fn=lambda p, b, **kw: encdec.loss_fn(p, cfg, b, **kw),
+        forward=lambda p, b, **kw: encdec.forward(
+            p, cfg, b["tokens"], frames=b["frames"], **kw),
+        prefill=prefill,
+        decode_step=lambda p, c, b: encdec.decode_step(
+            p, cfg, c, b["tokens"]),
+        init_cache=lambda b, s: encdec.init_cache(cfg, b, s),
+    )
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "ssm":
+        return _rwkv_api(cfg)
+    if cfg.family == "hybrid":
+        return _hybrid_api(cfg)
+    if cfg.family == "audio":
+        return _encdec_api(cfg)
+    # dense / moe / vlm share the unified decoder stack
+    return _dense_api(cfg)
+
+
+def build_by_name(name: str) -> ModelAPI:
+    from repro.configs import get_config
+    return build(get_config(name))

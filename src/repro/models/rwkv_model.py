@@ -1,0 +1,101 @@
+"""RWKV6 (Finch) language model — attention-free, recurrent state.
+
+State per layer: the (B, H, K, V) wkv matrix plus the 1-token shift buffers
+for time-mix and channel-mix. Decode carries state instead of a KV cache —
+O(1) per token regardless of context length, which is why the `long_500k`
+shape runs for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .actsharding import constrain
+from .layers import Params, dense_init, rmsnorm
+from .recurrence import (init_rwkv, rwkv_channel_mix, rwkv_time_mix,
+                         _token_shift)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    L = cfg.n_layers
+    keys = jax.random.split(key, L + 2)
+
+    def layer(k):
+        p = init_rwkv(k, cfg, dtype)
+        p["ln1"] = jnp.zeros((cfg.d_model,), dtype)
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        return p
+
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                           *[layer(keys[i]) for i in range(L)])
+    return {
+        "layers": stacked,
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "embed": dense_init(keys[L], (cfg.vocab, cfg.d_model), scale=0.02,
+                            dtype=dtype),
+        "lm_head": dense_init(keys[L + 1], (cfg.d_model, cfg.vocab),
+                              dtype=dtype),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    hd = cfg.head_dim
+    return {
+        "wkv": jnp.zeros((cfg.n_layers, batch, cfg.n_heads, hd, hd),
+                         jnp.float32),
+        "tm_shift": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+        "cm_shift": jnp.zeros((cfg.n_layers, batch, 1, cfg.d_model), dtype),
+    }
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            state: dict | None = None, chunk: int = 32,
+            remat: bool = True, **_kw) -> tuple[jax.Array, dict]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, T, _ = x.shape
+    # shift buffers carry x's dtype: storing them narrower than the
+    # activations breaks prefill→decode consistency
+    st = state or init_state(cfg, B, dtype=x.dtype)
+
+    def body(x, inp):
+        lp, s_wkv, tm_prev, cm_prev = inp
+        z = rmsnorm(x, lp["ln1"])
+        h, s_new = rwkv_time_mix(lp, z, cfg, state=s_wkv, chunk=chunk,
+                                 shift_prev=tm_prev.astype(z.dtype))
+        x = x + h
+        z2 = rmsnorm(x, lp["ln2"])
+        x = constrain(x + rwkv_channel_mix(
+            lp, z2, shift_prev=cm_prev.astype(z2.dtype)))
+        return x, (s_new, z[:, -1:].astype(tm_prev.dtype),
+                   z2[:, -1:].astype(cm_prev.dtype))
+
+    blk = jax.checkpoint(body) if remat else body
+    x, (wkv, tms, cms) = lax.scan(
+        blk, x, (params["layers"], st["wkv"], st["tm_shift"],
+                 st["cm_shift"]))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["lm_head"]
+    return logits, {"wkv": wkv, "tm_shift": tms, "cm_shift": cms}
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict, **kw) -> jax.Array:
+    logits, _ = forward(params, cfg, batch["tokens"], **kw)
+    labels = batch["labels"]
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            cache_len: int = 0, **kw) -> tuple[jax.Array, dict]:
+    logits, state = forward(params, cfg, tokens, remat=False, **kw)
+    return logits[:, -1:], state
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: dict,
+                tokens: jax.Array, **kw) -> tuple[jax.Array, dict]:
+    """One token: T=1 forward threading the recurrent state (chunk=1)."""
+    return forward(params, cfg, tokens, state=state, chunk=1, remat=False)

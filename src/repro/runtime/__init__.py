@@ -1,0 +1,1 @@
+from .ft import FaultTolerantLoop, StragglerWatchdog, elastic_remesh  # noqa: F401

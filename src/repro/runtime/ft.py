@@ -1,0 +1,102 @@
+"""Fault tolerance + straggler mitigation + elastic scaling.
+
+* FaultTolerantLoop — checkpoint/restart driver. Runs `step_fn` repeatedly,
+  checkpoints every `ckpt_every` steps (async), and on any step failure
+  (preemption, device loss, injected fault) restores the latest checkpoint
+  and replays. The data pipeline is pure-in-step, so replay is exact.
+* StragglerWatchdog — per-step timing EWMA; a step slower than
+  `threshold ×` the EWMA is flagged. In a multi-host deployment the driver
+  reacts by excluding the slow host from the next allocation (here: the
+  hook records the event and the loop optionally re-meshes).
+* elastic_remesh — reshard a host-state pytree onto a new mesh/sharding:
+  the checkpoint is device-agnostic (numpy), so scaling from e.g. 512 to
+  256 chips is a restore-with-different-shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    threshold: float = 2.0
+    halflife: int = 20
+    _ewma: float | None = None
+    events: list = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step straggled."""
+        if self._ewma is None:
+            self._ewma = dt
+            return False
+        straggled = dt > self.threshold * self._ewma
+        k = 2 ** (-1.0 / self.halflife)
+        # slow steps don't poison the baseline
+        if not straggled:
+            self._ewma = k * self._ewma + (1 - k) * dt
+        if straggled:
+            self.events.append((step, dt, self._ewma))
+        return straggled
+
+
+class FaultTolerantLoop:
+    def __init__(self, step_fn: Callable[[Any, int], Any],
+                 state: Any, ckpt: CheckpointManager, *,
+                 ckpt_every: int = 50,
+                 max_restarts: int = 10,
+                 watchdog: StragglerWatchdog | None = None,
+                 on_event: Callable[[str, dict], None] | None = None):
+        self.step_fn = step_fn
+        self.state = state
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.watchdog = watchdog or StragglerWatchdog()
+        self.on_event = on_event or (lambda kind, info: None)
+        self.restarts = 0
+
+    def resume_or_init(self) -> int:
+        last = self.ckpt.latest_step()
+        if last is not None:
+            self.state, step = self.ckpt.restore(self.state)
+            self.on_event("resume", {"step": step})
+            return step
+        return 0
+
+    def run(self, total_steps: int, start_step: int | None = None) -> Any:
+        step = self.resume_or_init() if start_step is None else start_step
+        while step < total_steps:
+            t0 = time.perf_counter()
+            try:
+                self.state = self.step_fn(self.state, step)
+            except Exception as e:           # device loss / preemption
+                self.restarts += 1
+                self.on_event("failure", {"step": step, "error": repr(e),
+                                          "restart": self.restarts})
+                if self.restarts > self.max_restarts:
+                    raise
+                step = self.resume_or_init()
+                continue
+            dt = time.perf_counter() - t0
+            if self.watchdog.observe(step, dt):
+                self.on_event("straggler", {"step": step, "dt": dt})
+            step += 1
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(step, self.state)
+                self.on_event("checkpoint", {"step": step})
+        self.ckpt.save(step, self.state)
+        self.ckpt.wait()
+        return self.state
+
+
+def elastic_remesh(state: Any, shardings: Any) -> Any:
+    """Re-place a host (or differently-sharded) pytree onto new shardings.
+    `shardings` is a pytree of jax.sharding.Sharding matching `state`."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, shardings)

@@ -1,0 +1,109 @@
+"""GenModel closed forms vs the generic plan-IR evaluator + paper anchors."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_model as cm, plans
+from repro.core.cost_model import GenModelParams
+
+
+P = GenModelParams()
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 8, 12, 15, 16, 24, 32])
+@pytest.mark.parametrize("name,builder", [
+    ("ring", plans.ring), ("cps", plans.cps),
+    ("reduce_broadcast", plans.reduce_broadcast)])
+def test_closed_form_matches_ir(n, name, builder):
+    s = 1e7
+    ir = cm.evaluate_plan(builder(n, s), P)
+    cf = cm.CLOSED_FORMS[name](n, s, P)
+    assert ir == pytest.approx(cf, rel=1e-6), (name, n)
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32])
+def test_rhd_closed_form_pow2(n):
+    s = 1e7
+    ir = cm.evaluate_plan(plans.rhd(n, s), P)
+    cf = cm.cost_rhd(n, s, P)
+    assert ir == pytest.approx(cf, rel=1e-6)
+
+
+@pytest.mark.parametrize("factors", [[2, 2], [6, 2], [4, 2], [8, 4],
+                                     [2, 2, 2], [5, 3]])
+def test_hcps_closed_form(factors):
+    s = 1e7
+    ir = cm.evaluate_plan(plans.hcps(factors, s), P)
+    cf = cm.cost_hcps(factors, s, P)
+    assert ir == pytest.approx(cf, rel=1e-6)
+
+
+def test_table2_coefficient_structure():
+    """β and γ coefficients keep the paper's 2:1 ratio for all
+    bandwidth-optimal plans; δ matches Table 2 exactly."""
+    n, s = 12, 1e8
+    only_beta = GenModelParams(alpha=0, beta=1, gamma=0, delta=0, epsilon=0)
+    only_gamma = GenModelParams(alpha=0, beta=0, gamma=1, delta=0, epsilon=0)
+    only_delta = GenModelParams(alpha=0, beta=0, gamma=0, delta=1, epsilon=0)
+    for cf in (cm.cost_ring, cm.cost_cps):
+        assert cf(n, s, only_beta) == pytest.approx(2 * (n - 1) * s / n)
+        assert cf(n, s, only_gamma) == pytest.approx((n - 1) * s / n)
+    assert cm.cost_ring(n, s, only_delta) == pytest.approx(3 * (n - 1) * s / n)
+    assert cm.cost_cps(n, s, only_delta) == pytest.approx((n + 1) * s / n)
+
+
+def test_incast_term_thresholded():
+    """No ε cost below w_t; linear growth above (paper Eq. 7)."""
+    from dataclasses import replace
+    s = 1e8
+    no_eps = replace(P, epsilon=0.0)
+    below = cm.cost_cps(P.w_t - 1, s, P)
+    assert below == pytest.approx(cm.cost_cps(P.w_t - 1, s, no_eps))
+    n = P.w_t + 5
+    extra = 2 * (n - 1) * s / n * (n - P.w_t) * P.epsilon
+    assert cm.cost_cps(n, s, P) - cm.cost_cps(n, s, no_eps) == \
+        pytest.approx(extra)
+
+
+def test_paper_prediction_12_processors():
+    """Paper §5.1/Fig. 8: at N=12 the best plan is 6×2 HCPS (w_t=9)."""
+    s = 1e8
+    name, fac, cost = cm.best_flat_plan(12, s, P)
+    assert (name, fac) == ("hcps", [6, 2])
+    # and the (α,β,γ) model would NOT pick it (it can't see δ/ε):
+    legacy = P.legacy()
+    c_cps = cm.cost_cps(12, s, legacy)
+    c_hcps = cm.cost_hcps([6, 2], s, legacy)
+    assert c_cps < c_hcps     # legacy model prefers plain CPS
+
+
+def test_paper_prediction_15_processors():
+    """Paper §5.2: for 15 servers GenTree chooses 5×3 HCPS."""
+    s = 1e8
+    name, fac, _ = cm.best_flat_plan(15, s, P)
+    assert name == "hcps" and fac in ([5, 3], [3, 5])
+
+
+def test_paper_prediction_8_processors_cps():
+    """Paper §5.2: for 8 servers (≤ w_t) GenTree chooses plain CPS."""
+    s = 1e8
+    name, _, _ = cm.best_flat_plan(8, s, P)
+    assert name == "cps"
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(2, 64), s=st.floats(1e3, 1e9))
+def test_chi(n, s):
+    assert cm.chi(n) == (0 if (n & (n - 1)) == 0 else 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 40))
+def test_hcps_beats_neither_extreme_universally(n):
+    """Theorem 2 consequence: when N > w_t the best plan has fan-in
+    strictly between 2 and N (trade-off), priced by GenModel."""
+    s = 1e8
+    name, fac, cost = cm.best_flat_plan(n, s, P)
+    assert cost <= cm.cost_cps(n, s, P) + 1e-12
+    assert cost <= cm.cost_ring(n, s, P) + 1e-12

@@ -1,0 +1,130 @@
+"""GenTree plan generation: Algorithm 1/2 behaviour + paper's Table-6
+selection pattern + simulator consistency."""
+import math
+
+import pytest
+
+from repro.core import topology as topo_mod
+from repro.core.cost_model import PAPER_TABLE5
+from repro.core.gentree import baseline_plan, generate_basic_plan, gentree
+from repro.core.simulator import Simulator
+
+
+def test_basic_plan_placement_single_switch():
+    topo = topo_mod.single_switch(6)
+    place = {}
+    generate_basic_plan(topo, 6, place)
+    final = place["root"]
+    owned = sorted(b for blocks in final.values() for b in blocks)
+    assert owned == list(range(6))                 # every block exactly once
+    assert all(len(b) == 1 for b in final.values())  # balanced
+
+
+def test_basic_plan_placement_asymmetric():
+    root = topo_mod.TopoNode(name="root", level="root_sw")
+    a = topo_mod.single_switch(4, name="swa")
+    b = topo_mod.single_switch(2, name="swb")
+    a.uplink_bw = b.uplink_bw = 1e9
+    root.children = [a, b]
+    root.finalize()
+    place = {}
+    generate_basic_plan(root, 6, place)
+    owned = sorted(b_ for blocks in place["root"].values() for b_ in blocks)
+    assert owned == list(range(6))
+
+
+@pytest.mark.parametrize("n,algo,factors", [
+    (8, "cps", None),
+    (12, "hcps", [6, 2]),
+    (15, "hcps", [5, 3]),
+])
+def test_single_switch_choices_match_paper(n, algo, factors):
+    """Paper §5.2 CPU-testbed choices: CPS@8, 6×2@12, 5×3@15."""
+    r = gentree(topo_mod.single_switch(n), 1e8)
+    dec = r.decisions["root"]
+    assert dec.algo == algo
+    if factors:
+        assert dec.factors == factors
+
+
+def test_gentree_beats_baselines_single_switch():
+    for n in (12, 15, 24):
+        topo = topo_mod.single_switch(n)
+        sim = Simulator(topo, PAPER_TABLE5)
+        t_gen = gentree(topo, 1e8).predicted_time
+        for kind in ("ring", "cps"):
+            t_base = sim.simulate(baseline_plan(kind, topo, 1e8)).total
+            assert t_gen <= t_base * 1.001, (n, kind)
+
+
+def test_gentree_symmetric_tree():
+    """SYM384-like (smaller): plans complete and beat global baselines."""
+    topo = topo_mod.symmetric_tree(4, 6)
+    sim = Simulator(topo, PAPER_TABLE5)
+    r = gentree(topo, 1e7)
+    assert len(r.decisions) == 5                  # 4 middle + root
+    merges = sum((x.fan_in - 1) * x.size
+                 for st in r.plan.steps for x in st.reduces)
+    assert merges == pytest.approx((24 - 1) * 1e7)
+    for kind in ("ring", "cps"):
+        t_base = sim.simulate(baseline_plan(kind, topo, 1e7)).total
+        assert r.predicted_time <= t_base * 1.001, kind
+
+
+def test_gentree_asymmetric_tree_uses_acps():
+    """Unbalanced children → Asymmetric CPS at the root (paper Table 6)."""
+    root = topo_mod.TopoNode(name="root", level="root_sw")
+    for name, k in (("sw0", 6), ("sw1", 3)):
+        sw = topo_mod.TopoNode(name=name, uplink_bw=100 * topo_mod.GBPS,
+                               uplink_latency=5e-6, level="middle_sw")
+        sw.children = [topo_mod._server(f"{name}_s{i}", 10 * topo_mod.GBPS,
+                                        5e-6) for i in range(k)]
+        root.children.append(sw)
+    root.finalize()
+    r = gentree(root, 1e7)
+    assert r.decisions["root"].algo == "acps"
+
+
+@pytest.mark.slow
+def test_gentree_cross_dc_rearrangement_wins():
+    """Paper §5.3 CDC384: data rearrangement pays on the WAN-linked
+    topology once enough senders share the WAN link (sender count ≫ w_t).
+    GenTree consolidates DC1's results onto one middle-switch subtree
+    before crossing the WAN."""
+    r_with = gentree(topo_mod.cross_dc(), 1e7, enable_rearrangement=True)
+    r_without = gentree(topo_mod.cross_dc(), 1e7,
+                        enable_rearrangement=False)
+    assert any(d.rearrange for d in r_with.decisions.values())
+    assert r_with.predicted_time < r_without.predicted_time
+
+
+def test_gentree_merge_conservation_everywhere():
+    for topo in (topo_mod.single_switch(9),
+                 topo_mod.symmetric_tree(3, 4),
+                 topo_mod.tpu_pod_tree(2, 8)):
+        n = topo.num_servers()
+        s = 1e6
+        r = gentree(topo, s)
+        merges = sum((x.fan_in - 1) * x.size
+                     for st in r.plan.steps for x in st.reduces)
+        assert merges == pytest.approx((n - 1) * s), topo.name
+
+
+def test_simulator_monotone_in_size():
+    topo = topo_mod.single_switch(8)
+    sim = Simulator(topo, PAPER_TABLE5)
+    t1 = sim.simulate(baseline_plan("cps", topo, 1e6)).total
+    t2 = sim.simulate(baseline_plan("cps", topo, 1e8)).total
+    assert t2 > t1
+
+
+def test_simulator_incast_grows_with_fanin():
+    """x-to-x full mesh beyond w_t shows extra overhead (paper Fig. 3)."""
+    times = []
+    for n in (4, 8, 12, 15):
+        topo = topo_mod.single_switch(n)
+        sim = Simulator(topo, PAPER_TABLE5)
+        res = sim.simulate(baseline_plan("cps", topo, 1e7))
+        times.append((n, res.incast_extra))
+    assert times[0][1] == 0 and times[1][1] == 0      # below w_t = 9
+    assert times[2][1] > 0 and times[3][1] > times[2][1]

@@ -1,0 +1,273 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracles,
+swept over shapes and dtypes (as required for every kernel in kernels/)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_reduce import fused_reduce, grouped_reduce
+from repro.kernels.rmsnorm import rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# fused_reduce — the paper's δ-optimal N-ary add
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("x,L", [(2, 128), (3, 1000), (8, 4096), (16, 257),
+                                 (64, 64), (5, 8192)])
+def test_fused_reduce_sweep(x, L, dtype):
+    parts = jax.random.normal(jax.random.PRNGKey(x * L), (x, L), jnp.float32)
+    parts = parts.astype(dtype)
+    got = fused_reduce(parts, interpret=True)
+    want = ref.fused_reduce_ref(parts)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("fan_in", [2, 3, 4, 7])
+@pytest.mark.parametrize("x,L", [(2, 256), (6, 512), (12, 1000)])
+def test_grouped_reduce_sweep(x, L, fan_in):
+    parts = jax.random.normal(jax.random.PRNGKey(1), (x, L), jnp.float32)
+    got = grouped_reduce(parts, fan_in, interpret=True)
+    want = ref.fused_reduce_ref(parts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_fanin2_matches_chained_oracle():
+    parts = jax.random.normal(jax.random.PRNGKey(2), (9, 300), jnp.float32)
+    got = grouped_reduce(parts, 2, interpret=True)
+    want = ref.chained_reduce_ref(parts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(x=st.integers(2, 10), L=st.integers(1, 600))
+def test_fused_reduce_property(x, L):
+    parts = jax.random.normal(jax.random.PRNGKey(x + L), (x, L), jnp.float32)
+    got = fused_reduce(parts, tile_l=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(parts).sum(0), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention — causal / window / softcap / GQA, shape+dtype sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,T,D", [
+    (1, 2, 2, 128, 32), (2, 4, 2, 256, 64), (1, 8, 1, 128, 64),
+    (2, 2, 2, 512, 16)])
+def test_flash_causal_sweep(B, Hq, Hkv, T, D, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * T), 3)
+    q = jax.random.normal(ks[0], (B, Hq, T, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, T, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, T, D), jnp.float32).astype(dtype)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 128, 200])
+def test_flash_sliding_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 32))
+    k = jax.random.normal(ks[1], (1, 2, 256, 32))
+    v = jax.random.normal(ks[2], (1, 2, 256, 32))
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [20.0, 50.0])
+def test_flash_softcap(softcap):
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32)) * 4
+    k = jax.random.normal(ks[1], (1, 2, 128, 32)) * 4
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    got = flash_attention(q, k, v, softcap=softcap, interpret=True)
+    want = ref.attention_ref(q, k, v, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_cross_attention_lengths():
+    """Tq != Tk (decode-style right-aligned queries)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 256, 32))
+    v = jax.random.normal(ks[2], (1, 2, 256, 32))
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows,d", [(1, 64), (33, 128), (300, 256),
+                                    (256, 512)])
+def test_rmsnorm_sweep(rows, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(rows), 2)
+    x = jax.random.normal(ks[0], (rows, d), jnp.float32).astype(dtype)
+    w = jax.random.normal(ks[1], (d,), jnp.float32).astype(dtype)
+    got = rmsnorm(x, w, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_rmsnorm_3d():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 7, 128))
+    w = jnp.ones((128,))
+    got = rmsnorm(x, w, interpret=True)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ops.py dispatch
+# ---------------------------------------------------------------------------
+def test_ops_ref_dispatch_cpu():
+    from repro.kernels import ops
+    parts = jax.random.normal(jax.random.PRNGKey(3), (4, 256))
+    np.testing.assert_allclose(np.asarray(ops.fused_reduce(parts)),
+                               np.asarray(parts.sum(0)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wkv — chunked RWKV6 recurrence (the SSM-family memory hotspot)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,H,T,K,chunk", [
+    (1, 1, 8, 4, 4), (2, 3, 16, 8, 4), (1, 2, 32, 16, 8),
+    (2, 2, 24, 8, 8), (1, 4, 64, 32, 16)])
+def test_wkv_kernel_sweep(B, H, T, K, chunk):
+    from repro.kernels.wkv import wkv
+    ks = jax.random.split(jax.random.PRNGKey(B * T + K), 6)
+    r = jax.random.normal(ks[0], (B, H, T, K))
+    k = jax.random.normal(ks[1], (B, H, T, K))
+    v = jax.random.normal(ks[2], (B, H, T, K))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, H, T, K)))
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, K, K)) * 0.1
+    got, s_got = wkv(r, k, v, lw, u, s0, chunk=chunk, interpret=True)
+    want, s_want = ref.wkv_ref(r, k, v, lw, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s_got), np.asarray(s_want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_wkv_kernel_state_handoff():
+    """Running two half-sequences with carried state == one full run."""
+    from repro.kernels.wkv import wkv
+    B, H, T, K = 1, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(9), 6)
+    r = jax.random.normal(ks[0], (B, H, T, K))
+    k = jax.random.normal(ks[1], (B, H, T, K))
+    v = jax.random.normal(ks[2], (B, H, T, K))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, H, T, K)))
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    s0 = jnp.zeros((B, H, K, K))
+    full, s_full = wkv(r, k, v, lw, u, s0, chunk=8, interpret=True)
+    h1, s1 = wkv(r[:, :, :8], k[:, :, :8], v[:, :, :8], lw[:, :, :8],
+                 u, s0, chunk=8, interpret=True)
+    h2, s2 = wkv(r[:, :, 8:], k[:, :, 8:], v[:, :, 8:], lw[:, :, 8:],
+                 u, s1, chunk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(full[:, :, 8:]),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan — selective-SSM chunked scan (hymba's mamba branch)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,Di,N,chunk,bd", [
+    (1, 8, 4, 2, 4, 4), (2, 16, 12, 4, 4, 6), (1, 32, 16, 8, 8, 16),
+    (2, 24, 10, 4, 8, 5)])
+def test_ssm_scan_kernel_sweep(B, T, Di, N, chunk, bd):
+    from repro.kernels.ssm_scan import ssm_scan
+    ks = jax.random.split(jax.random.PRNGKey(B * T + Di), 6)
+    u = jax.random.normal(ks[0], (B, T, Di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, Di)))
+    b = jax.random.normal(ks[2], (B, T, N))
+    c = jax.random.normal(ks[3], (B, T, N))
+    la = -jnp.exp(jax.random.normal(ks[4], (Di, N)) * 0.5)
+    s0 = jax.random.normal(ks[5], (B, Di, N)) * 0.1
+    got, sg = ssm_scan(u, dt, b, c, la, s0, chunk=chunk, block_d=bd,
+                       interpret=True)
+    want, sw = ref.ssm_scan_ref(u, dt, b, c, la, s0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(sg), np.asarray(sw),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssm_scan_state_handoff():
+    from repro.kernels.ssm_scan import ssm_scan
+    B, T, Di, N = 1, 16, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    u = jax.random.normal(ks[0], (B, T, Di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, Di)))
+    b = jax.random.normal(ks[2], (B, T, N))
+    c = jax.random.normal(ks[3], (B, T, N))
+    la = -jnp.exp(jax.random.normal(ks[4], (Di, N)) * 0.5)
+    s0 = jnp.zeros((B, Di, N))
+    full, s_full = ssm_scan(u, dt, b, c, la, s0, chunk=4, interpret=True)
+    h1, s1 = ssm_scan(u[:, :8], dt[:, :8], b[:, :8], c[:, :8], la, s0,
+                      chunk=4, interpret=True)
+    h2, s2 = ssm_scan(u[:, 8:], dt[:, 8:], b[:, 8:], c[:, 8:], la, s1,
+                      chunk=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(full[:, 8:]),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssm_scan_matches_model_recurrence():
+    """The kernel recurrence must equal models/recurrence.mamba_ssm's
+    inner scan (same inputs derived from a real mamba layer)."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.config import smoke_config
+    from repro.models.recurrence import init_mamba, mamba_ssm
+    from repro.kernels.ssm_scan import ssm_scan
+    cfg = smoke_config(get_config("hymba_1_5b"))
+    p = init_mamba(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y_model, s_model = mamba_ssm(p, x, cfg, chunk=8)
+    # recompute the scan inputs exactly as mamba_ssm does
+    di, n = p["log_a"].shape
+    xb = (x @ p["in_x"]).astype(jnp.float32)
+    z = jax.nn.silu((x @ p["in_z"]).astype(jnp.float32))
+    dt = jax.nn.softplus(xb @ p["w_dt"] + p["dt_bias"][None, None])
+    b_t = xb @ p["w_b"].astype(jnp.float32) / di ** 0.5
+    c_t = xb @ p["w_c"].astype(jnp.float32) / di ** 0.5
+    u = jax.nn.silu(xb)
+    s0 = jnp.zeros((2, di, n), jnp.float32)
+    ys, s_fin = ssm_scan(u, dt, b_t, c_t, p["log_a"], s0, chunk=8,
+                         block_d=di, interpret=True)
+    y = (ys + u * p["d_skip"][None, None]) * z
+    y = y.astype(x.dtype) @ p["out"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_model),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_fin), np.asarray(s_model),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,131 @@
+"""Plan-IR invariants (property-based): correctness of the builders and the
+paper's optimality results (Theorems 1 & 2)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import optimality as opt, plans
+
+
+def _factor_lists(draw):
+    pass
+
+
+factors_st = st.lists(st.integers(2, 6), min_size=2, max_size=3)
+
+
+def blocks_reduced_correctly(plan: plans.Plan) -> bool:
+    """Simulate block ownership: after the ReduceScatter phase each block
+    must have absorbed exactly N contributions; after AllGather each server
+    holds the result. We verify the conservation law via reduce counts:
+    total (fan_in - 1) summed = (N - 1) per owned block."""
+    total_merges = sum((r.fan_in - 1) * r.size
+                       for st_ in plan.steps for r in st_.reduces)
+    expect = (plan.n - 1) * plan.size
+    return math.isclose(total_merges, expect, rel_tol=1e-9)
+
+
+@pytest.mark.parametrize("builder,kw", [
+    (plans.ring, {}), (plans.cps, {}), (plans.rhd, {}),
+    (plans.reduce_broadcast, {})])
+@pytest.mark.parametrize("n", [2, 3, 4, 7, 8, 12, 15, 16])
+def test_merge_conservation(builder, kw, n):
+    p = builder(n, float(n * 12))
+    assert blocks_reduced_correctly(p)
+
+
+@settings(max_examples=40, deadline=None)
+@given(factors=factors_st)
+def test_hcps_merge_conservation(factors):
+    n = math.prod(factors)
+    p = plans.hcps(factors, float(n * 8))
+    assert blocks_reduced_correctly(p)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 32))
+def test_bandwidth_optimality(n):
+    """Ring / CPS traffic per server == the Patarasuk–Yuan lower bound
+    2(N−1)S/N (paper Eq. 2); RHD matches iff N is a power of two."""
+    s = float(n * 16)
+    bound = 2 * (n - 1) * s / n
+    for b in (plans.ring, plans.cps):
+        traffic = b(n, s).total_traffic_per_server()
+        assert all(math.isclose(v, bound, rel_tol=1e-9)
+                   for v in traffic.values())
+    if (n & (n - 1)) == 0:
+        traffic = plans.rhd(n, s).total_traffic_per_server()
+        assert all(math.isclose(v, bound, rel_tol=1e-9)
+                   for v in traffic.values())
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 32))
+def test_theorem1_delta_lower_bound(n):
+    """No plan beats (N+1)S/N memory ops; CPS achieves it (δ-optimal),
+    Ring costs 3(N−1)S/N."""
+    s = float(n * 16)
+    lb = opt.delta_lower_bound_mem_ops(n, s)
+    cps = plans.cps(n, s)
+    ring = plans.ring(n, s)
+    rhd = plans.rhd(n, s)
+    assert cps.max_mem_ops_per_server() == pytest.approx(lb)
+    assert opt.is_delta_optimal(cps)
+    for p in (ring, rhd):
+        assert p.max_mem_ops_per_server() >= lb - 1e-9
+    assert ring.max_mem_ops_per_server() == pytest.approx(
+        3 * (n - 1) * s / n)
+
+
+@settings(max_examples=40, deadline=None)
+@given(factors=factors_st)
+def test_theorem1_h_steps(factors):
+    """Eq. 15: a reduction whose per-block DAG has h ops costs
+    (N−1+2h)·S/N memory ops. For m-stage HCPS the DAG for one block has
+    h = Σ_i ∏_{j>i} f_j ops (N/f_0 groups at stage 0, …, 1 at the last),
+    and the per-server parallel cost matches because work is balanced.
+    This also equals Table 2's (2·Σ_{i≥1}∏_{j≤i}f_j + N + 1)·S/N row."""
+    n = math.prod(factors)
+    s = float(n * 8)
+    p = plans.hcps(factors, s)
+    h = sum(math.prod(factors[i + 1:]) for i in range(len(factors)))
+    assert p.max_mem_ops_per_server() == pytest.approx(
+        opt.mem_ops_with_h_steps(n, s, h))
+    # Table-2 row form; the paper's ∏_{j=1}^{i} f_j runs over the *last*
+    # stages first (reverse of execution order)
+    rev = factors[::-1]
+    table2 = (2 * sum(math.prod(rev[:i + 1])
+                      for i in range(len(rev) - 1)) + n + 1) * s / n
+    assert p.max_mem_ops_per_server() == pytest.approx(table2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(2, 32), w_t=st.integers(2, 12))
+def test_theorem2_impossibility(n, w_t):
+    """No plan is both δ- and ε-optimal when N > w_t — checked on every
+    builder we have."""
+    s = float(n * 16)
+    cand = [plans.ring(n, s), plans.cps(n, s), plans.rhd(n, s),
+            plans.reduce_broadcast(n, s)]
+    for f in plans.factorizations(n, max_steps=3)[:5]:
+        cand.append(plans.hcps(f, s))
+    for p in cand:
+        assert opt.theorem2_holds(p, w_t), (p.name, n, w_t)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 24))
+def test_ring_epsilon_optimal(n):
+    """Ring has fan-in 2 everywhere — ε-optimal for any w_t ≥ 2."""
+    p = plans.ring(n, float(n * 4))
+    assert p.max_fan_in() <= 2
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(2, 30))
+def test_factorizations_products(n):
+    for f in plans.factorizations(n):
+        assert math.prod(f) == n
+        assert all(x >= 2 for x in f)
+        assert 2 <= len(f) <= 3

@@ -1,0 +1,94 @@
+"""Property tests for the launcher's sharding rules: every generated
+PartitionSpec must be valid for its shape on the production mesh (each
+named axis divides the corresponding dim; no mesh axis used twice)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shr
+
+
+class FakeMesh:
+    """Shape/axis-name stand-in (leaf_spec only reads these)."""
+    def __init__(self, shape, names):
+        self.devices = np.empty(shape)
+        self.axis_names = names
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+SIZES = dict(zip(MESH.axis_names, MESH.devices.shape))
+
+
+def _check_valid(spec: P, shape, sizes):
+    used = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for nm in names:
+            assert nm not in used, f"axis {nm} used twice in {spec}"
+            used.append(nm)
+            total *= sizes[nm]
+        assert dim % total == 0, (spec, shape)
+
+
+dims = st.integers(1, 9).map(lambda k: [1, 2, 3, 8, 16, 64, 100, 128,
+                                        4096][k - 1])
+
+
+@settings(max_examples=100, deadline=None)
+@given(shape=st.lists(dims, min_size=1, max_size=4))
+def test_leaf_spec_always_valid(shape):
+    spec = shr.leaf_spec(tuple(shape), MESH)
+    _check_valid(spec, shape, SIZES)
+
+
+@settings(max_examples=60, deadline=None)
+@given(shape=st.lists(dims, min_size=2, max_size=5))
+def test_leaf_spec_never_shards_layer_axis(shape):
+    spec = shr.leaf_spec(tuple(shape), MESH, skip_first=True)
+    entries = tuple(spec)
+    if entries:
+        assert entries[0] is None
+
+
+def test_known_param_layouts():
+    # attention projection (L, D, H·hd): TP on the output, FSDP on D
+    spec = shr.leaf_spec((40, 5120, 5120), MESH)
+    assert "model" in tuple(spec) and "data" in tuple(spec)
+    # small norm scale replicates (spec entries all None)
+    assert all(e is None for e in tuple(shr.leaf_spec((5120,), MESH)))
+    # embedding (V, D)
+    spec = shr.leaf_spec((100352, 5120), MESH, skip_first=False)
+    _check_valid(spec, (100352, 5120), SIZES)
+
+
+def test_cache_specs_never_shard_sequence_and_heads_together():
+    import jax.numpy as jnp
+    cache = {
+        "k": jax.ShapeDtypeStruct((40, 128, 8, 32768, 160), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((40, 128, 8, 32768, 160), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((128,), jnp.int32),
+    }
+    specs = shr.cache_specs(cache, MESH)
+    for name in ("k", "v"):
+        entries = tuple(specs[name])
+        model_dims = [i for i, e in enumerate(entries) if e == "model"]
+        assert len(model_dims) <= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.sampled_from([1, 2, 16, 32, 128, 256, 512]),
+       t=st.sampled_from([1, 128, 4096]))
+def test_batch_specs_divisibility(b, t):
+    import jax.numpy as jnp
+    batch = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+    spec = shr.batch_specs(batch, MESH)["tokens"]
+    _check_valid(spec, (b, t), SIZES)
+    spec3 = shr.batch_specs(batch, MESH3)["tokens"]
+    _check_valid(spec3, (b, t),
+                 dict(zip(MESH3.axis_names, MESH3.devices.shape)))

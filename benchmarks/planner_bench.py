@@ -1,0 +1,86 @@
+"""Planner service — cold vs. warm `get_plan` latency and cache hit rate.
+
+Acceptance gate: a warm (memory-cached) lookup for a 64-server, 3-level
+tree must be >= 100x faster than cold GenTree generation. Also reports the
+disk-warm path (restart with a persisted cache) and the hit rate over a
+sweep of message sizes that exercises the geometric buckets.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.core.topology import symmetric_tree
+from repro.planner.service import PlannerService
+
+from .common import fmt_table
+
+REQUIRED_SPEEDUP = 100.0
+
+
+def _median_seconds(fn, repeats: int = 15) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def run() -> dict:
+    # 3 levels: root_sw -> 8 middle_sw -> 8 servers each = 64 servers.
+    topo = symmetric_tree(8, 8)
+    nbytes = 64 << 20
+
+    svc = PlannerService()
+    t0 = time.perf_counter()
+    cold = svc.get_plan(topo, nbytes)
+    cold_s = time.perf_counter() - t0
+    assert cold.source == "cold"
+
+    warm_s = _median_seconds(lambda: svc.get_plan(topo, nbytes))
+    speedup = cold_s / warm_s
+
+    # Disk-warm: persist, "restart" into a fresh service, first lookup
+    # deserializes from JSON instead of re-running GenTree.
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "plans.json")
+        svc.save(path)
+        svc2 = PlannerService(cache_path=path)
+        t0 = time.perf_counter()
+        disk = svc2.get_plan(topo, nbytes)
+        disk_s = time.perf_counter() - t0
+        assert disk.source == "disk"
+
+    # Hit rate over a size sweep: 24 sizes across 3 decades land in a
+    # handful of geometric buckets, so most lookups are warm.
+    sweep = PlannerService()
+    for i in range(24):
+        sweep.get_plan(topo, int(1e6 * 1.35 ** i))
+    hit_rate = sweep.cache.stats.hit_rate
+
+    rows = [
+        {"path": "cold (GenTree + simulate)", "seconds": f"{cold_s:.4f}"},
+        {"path": "warm (memory LRU)", "seconds": f"{warm_s:.6f}"},
+        {"path": "warm (disk restart)", "seconds": f"{disk_s:.6f}"},
+    ]
+    print(fmt_table(rows, ["path", "seconds"],
+                    "planner: get_plan latency, 64-server 3-level tree"))
+    print(f"speedup cold/warm: {speedup:.0f}x (required >= "
+          f"{REQUIRED_SPEEDUP:.0f}x)")
+    print(f"size-sweep hit rate: {hit_rate:.0%} "
+          f"({sweep.cache.stats.hits} hits / "
+          f"{sweep.cache.stats.misses} misses, "
+          f"{len(sweep.cache)} entries)")
+
+    assert speedup >= REQUIRED_SPEEDUP, (
+        f"warm get_plan only {speedup:.0f}x faster than cold "
+        f"(need >= {REQUIRED_SPEEDUP:.0f}x)")
+    return {"ok": True, "speedups": f"{speedup:.0f}x",
+            "cold_s": cold_s, "warm_s": warm_s, "disk_s": disk_s,
+            "hit_rate": hit_rate}
+
+
+if __name__ == "__main__":
+    run()

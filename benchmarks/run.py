@@ -1,13 +1,16 @@
 """Benchmark harness — one entry per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig4,table7]
+                                            [--json BENCH_planner.json]
 
 Each module prints its own human-readable table; this driver finishes with
-a machine-readable `name,seconds,derived` CSV summary.
+a machine-readable `name,seconds,derived` CSV summary (and, with --json, a
+JSON file mapping name -> {seconds, derived}).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -16,11 +19,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig4,table7")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the summary as JSON, e.g. "
+                         "BENCH_planner.json")
     args = ap.parse_args()
 
     from . import (fig3_incast, fig4_delta_microbench, fig8_model_accuracy,
-                   roofline, table3_cpu_testbed, table4_gpu_testbed,
-                   table5_fitting, table6_plan_selection, table7_large_scale)
+                   planner_bench, roofline, table3_cpu_testbed,
+                   table4_gpu_testbed, table5_fitting, table6_plan_selection,
+                   table7_large_scale)
     all_benches = [
         ("fig3", fig3_incast.run),
         ("fig4", fig4_delta_microbench.run),
@@ -31,6 +38,7 @@ def main() -> None:
         ("table6", table6_plan_selection.run),
         ("table7", table7_large_scale.run),
         ("roofline", roofline.run),
+        ("planner", planner_bench.run),
     ]
     only = set(args.only.split(",")) if args.only else None
 
@@ -61,6 +69,11 @@ def main() -> None:
     print(f"\n{'=' * 72}\nname,seconds,derived")
     for name, dt, derived in summary:
         print(f"{name},{dt:.2f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({name: {"seconds": round(dt, 4), "derived": derived}
+                       for name, dt, derived in summary}, f, indent=2)
+        print(f"wrote {args.json}")
     sys.exit(1 if failed else 0)
 
 

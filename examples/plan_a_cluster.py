@@ -5,6 +5,8 @@ used by the launcher's gradient-sync strategy.
 
 Run:  PYTHONPATH=src python examples/plan_a_cluster.py
 """
+import time
+
 import numpy as np
 
 from repro.core import cost_model as cm
@@ -47,3 +49,26 @@ plans = plan_axes_gentree([("data", 16), ("pod", 2)],
 print("\ngradient-sync plans for mesh axes (data=16, pod=2):")
 for p in plans:
     print(f"  axis {p.axis!r}: {p.strategy}{p.factors or ''}")
+
+# -- 5. productionized: the cached, calibrated, skew-aware PlannerService --
+# Steps 1-3 by hand are what the planner subsystem automates (DESIGN.md §5):
+# calibrate() refits every level class from microbench curves, get_plan()
+# memoizes GenTree output behind a fingerprinted, size-bucketed LRU cache,
+# and a SkewModel re-ranks candidates by expected cost under imbalanced
+# process arrivals instead of assuming synchronized starts.
+from repro.planner import CalibrationConfig, PlannerService, SkewModel
+
+svc = PlannerService(skew=SkewModel(dist="exponential", scale=5e-3))
+svc.calibrate(cfg=CalibrationConfig(backend="simulator"))
+for attempt in ("cold", "warm"):
+    t0 = time.perf_counter()
+    resp = svc.get_plan(topo, nbytes=128 << 20)
+    dt = time.perf_counter() - t0
+    print(f"\n{attempt} get_plan ({resp.source}): algo={resp.algo}, "
+          f"predicted {resp.predicted_time * 1e3:.1f} ms"
+          + (f", expected under skew {resp.expected_skewed_time * 1e3:.1f} ms"
+             if resp.expected_skewed_time is not None else "")
+          + f"  [{dt * 1e3:.2f} ms lookup]")
+cs = svc.stats()["cache"]
+print(f"cache: {cs['hits']} hits / {cs['misses']} misses, "
+      f"hit rate {cs['hit_rate']:.0%}")

@@ -15,7 +15,7 @@ os.environ.setdefault("XLA_FLAGS",
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
+from repro.core.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import cost_model as cm

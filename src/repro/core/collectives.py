@@ -244,6 +244,26 @@ def allreduce(x: jax.Array, axis_name: str, strategy: str = "psum",
     return full.reshape(shape)
 
 
+def allreduce_planned(x: jax.Array, axis_name: str, *,
+                      service=None,
+                      fused_reduce: Callable | None = None) -> jax.Array:
+    """AllReduce whose plan type is chosen by the PlannerService (cached,
+    GenModel-priced — DESIGN.md §5). The lookup happens at trace time (the
+    axis size and per-device shard size are static), so the selected
+    schedule is staged straight into the jitted computation; warm lookups
+    are a cache probe, not a GenTree run.
+    """
+    from repro.planner.service import default_service
+    svc = service or default_service()
+    n = lax.psum(1, axis_name)        # static: psum of a python int
+    plans = svc.get_axis_plans([(axis_name, int(n))], float(x.size))
+    if not plans:
+        return lax.psum(x, axis_name)
+    pl = plans[0]
+    return allreduce(x, axis_name, pl.strategy, factors=pl.factors,
+                     fused_reduce=fused_reduce)
+
+
 def reduce_scatter(x: jax.Array, axis_name: str, strategy: str = "psum",
                    factors: Sequence[int] | None = None,
                    fused_reduce: Callable | None = None) -> jax.Array:

@@ -1,0 +1,36 @@
+"""JAX version compatibility shims (DESIGN.md §6).
+
+The codebase targets the modern `jax.shard_map` surface (`check_vma`,
+`axis_names`). Older jax releases (< 0.5) only ship
+`jax.experimental.shard_map.shard_map`, whose equivalents are `check_rep`
+and `auto` (the complement of `axis_names` over the mesh). This wrapper
+presents the modern signature on both, so engines, kernels and tests can
+import one name:
+
+    from repro.core.compat import shard_map
+"""
+from __future__ import annotations
+
+try:
+    from jax import shard_map as _shard_map
+    _MODERN = True
+except ImportError:                      # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _MODERN = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              axis_names=None, **kw):
+    if _MODERN:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

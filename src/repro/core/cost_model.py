@@ -172,6 +172,8 @@ def best_flat_plan(n: int, s: float, p: GenModelParams,
         cands.append(("rhd", None, cost_rhd(n, s, p)))
     if "hcps" in allow:
         for fac in factorizations(n, max_steps=max_steps):
-            cands.append((f"hcps", fac, cost_hcps(fac, s, p)))
-    cands.sort(key=lambda x: x[2])
+            cands.append(("hcps", fac, cost_hcps(fac, s, p)))
+    # Deterministic tie-break: equal-cost candidates order by name, then
+    # factors, so plan choice is stable across runs and platforms.
+    cands.sort(key=lambda x: (x[2], x[0], tuple(x[1] or ())))
     return cands[0]

@@ -357,7 +357,7 @@ def gentree(topo: TopoNode, size: float,
                                   _exchange_steps_direct(holders, dest, unit)))
                 if "hcps" in candidates:
                     for fac in factorizations(c, max_steps=max_hcps_steps):
-                        cands.append((f"hcps", fac, _exchange_steps_hcps(
+                        cands.append(("hcps", fac, _exchange_steps_hcps(
                             holders, dest, unit, fac)))
                 if "ring" in candidates and c > 2:
                     cands.append(("ring", None,
@@ -369,7 +369,8 @@ def gentree(topo: TopoNode, size: float,
                 cands.append(("acps", None,
                               _exchange_steps_direct(holders, dest, unit)))
 
-            best = min(cands, key=lambda x: _eval(pre_steps + x[2]))
+            best = min(cands, key=lambda x: (_eval(pre_steps + x[2]),
+                                             x[0], tuple(x[1] or ())))
             dec.algo, dec.factors = best[0], best[1]
             dec.cost = _eval(pre_steps + best[2])
             decisions[sw.name] = dec

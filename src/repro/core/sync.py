@@ -73,7 +73,13 @@ def resolve_axis_plans(axes: Sequence[tuple[str, int]], cfg: "SyncConfig",
     from .plans import factorizations
 
     if cfg.strategy == "gentree":
-        return plan_axes_gentree(axes, size_floats, cfg.params)
+        # Route through the planner service: lookups are fingerprinted,
+        # size-bucketed and LRU-cached (repro.planner, DESIGN.md §5), so
+        # repeated train steps don't re-price the mesh. Lazy import —
+        # planner depends on this module.
+        from repro.planner.service import default_service
+        return default_service().get_axis_plans(axes, size_floats,
+                                                params=cfg.params)
 
     def axis_plan(a: str, n: int) -> AxisPlan:
         if cfg.strategy != "hcps":

@@ -33,6 +33,22 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
     if smoke:
         cfg = smoke_config(cfg)
     api = build(cfg)
+
+    # Pre-warm the shared plan cache with the tensor-parallel decode
+    # AllReduce shape (one per layer, batch × d_model activations over the
+    # local devices) and report the plan a TP deployment of this config
+    # would execute via collectives.allreduce_planned. This driver's decode
+    # loop itself is single-host (api.decode_step), so the plan is
+    # advisory here; it is returned so callers can act on it.
+    from repro.planner.service import default_service
+    tp_plans = default_service().get_axis_plans(
+        [("model", len(jax.devices()))], float(sc.batch * cfg.d_model))
+    if tp_plans:
+        desc = ", ".join(f"{p.axis}:{p.strategy}{list(p.factors) if p.factors else ''}"
+                         for p in tp_plans)
+        on_log(f"planner: decode AllReduce plan {desc}")
+    else:
+        on_log("planner: single device, no decode collective needed")
     key = jax.random.PRNGKey(sc.seed)
     params = api.init_params(key)
 
@@ -66,7 +82,7 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
     gen = np.stack(out, axis=1)
     on_log(f"served batch={sc.batch} prompt={sc.prompt_len} "
            f"new={sc.max_new}: first row {gen[0][:8].tolist()}...")
-    return {"tokens": gen}
+    return {"tokens": gen, "tp_plans": tp_plans}
 
 
 def main():

@@ -139,10 +139,18 @@ def _scatter_leaf(full: jax.Array, plans: Sequence[AxisPlan]):
 
 def make_manual_train_step(api: ModelAPI, mesh: Mesh,
                            opt_cfg: AdamWConfig = AdamWConfig(), *,
-                           sync: SyncConfig = SyncConfig(strategy="gentree")):
+                           sync: SyncConfig = SyncConfig(strategy="gentree"),
+                           planner=None):
     """ZeRO-3 shard_map engine. Parameter AllGather and gradient
     ReduceScatter run the GenModel-selected plan per mesh level (intra-pod
-    first, cross-pod second — the paper's hierarchical structure)."""
+    first, cross-pod second — the paper's hierarchical structure).
+
+    Plan lookups route through the PlannerService (repro.planner): plans
+    are resolved once at engine-build (trace) time, and the fingerprinted,
+    size-bucketed cache pays off across engine rebuilds and — with
+    $REPRO_PLAN_CACHE set — across process restarts, which skip the
+    GenModel search entirely. Pass `planner` to use a calibrated or
+    skew-aware service instead of the process-wide default."""
     dp = dp_axes(mesh)
     sizes = axis_sizes(mesh)
     axes = [(a, sizes[a]) for a in dp if sizes[a] > 1]
@@ -154,6 +162,11 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
         from repro.core.sync import resolve_axis_plans
         if sync.strategy == "auto":
             return [AxisPlan(a, "psum") for a, _ in axes]
+        if planner is not None and sync.strategy == "gentree":
+            return planner.get_axis_plans(axes, size_floats,
+                                          params=sync.params)
+        # gentree routes through the process-wide PlannerService inside
+        # resolve_axis_plans; only an explicit override needs handling here.
         return resolve_axis_plans(axes, sync, size_floats)
 
     flat_sd, sd_treedef = jax.tree.flatten(
@@ -190,7 +203,7 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
             gn = jax.lax.pmean(gn, tuple(a for a, _ in axes))
             return new_p, new_o, loss, gn
 
-        from jax import shard_map
+        from repro.core.compat import shard_map
         spec_shard = jax.tree.map(lambda _: P(dp, None), state["params"])
         spec_opt = {"m": spec_shard, "v": spec_shard, "step": P()}
         bspec = shr.batch_specs(batch, mesh)
@@ -279,6 +292,18 @@ def run_training(tc: TrainConfig, mesh: Mesh | None = None,
     else:
         for s in range(tc.steps):
             state = one_step(state, s)
+
+    if tc.engine == "manual" and tc.sync == "gentree":
+        # Plans resolve once at trace time, so a fresh process shows one
+        # miss per axis-plan request; hits appear on engine rebuilds and
+        # on warm restarts via $REPRO_PLAN_CACHE.
+        from repro.planner.service import default_service
+        st = default_service().stats()
+        cs = st["cache"]
+        on_log(f"planner cache: {st['entries']} entries, "
+               f"{cs['hits']} hits / {cs['misses']} misses"
+               + (f", {cs['disk_loads']} loaded from disk"
+                  if cs["disk_loads"] else ""))
 
     return {"state": state, "losses": losses}
 

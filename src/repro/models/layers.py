@@ -466,7 +466,8 @@ def _moe_local_shardmap(p, xt, topi, topv, cfg, E, k, D,
         return _moe_sorted_block(xt_l, ti_l, tv_l, w, E, k, D,
                                  capacity_factor)
 
-    return jax.shard_map(
+    from repro.core.compat import shard_map
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(w_specs, P(dp, None), P(dp, None), P(dp, None)),

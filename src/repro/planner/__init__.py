@@ -1,0 +1,23 @@
+"""Planner subsystem — cached, measurement-calibrated AllReduce plan service.
+
+The paper's workflow (measure → fit GenModel → GenTree-generate → execute)
+productionized as one entry point (DESIGN.md §5):
+
+  * fingerprint — canonical hashing of topologies + GenModel params so
+    isomorphic trees share cache entries;
+  * cache       — size-bucketed, thread-safe LRU plan cache with disk
+    persistence (warm plans survive restarts);
+  * calibrate   — microbench harness that refits GenModelParams from
+    measured (size, time) curves per level class;
+  * skew        — arrival-skew (process-arrival-pattern) re-pricing of
+    candidate plans under imbalance;
+  * service     — the PlannerService facade: `get_plan(topo, nbytes)` and
+    `get_axis_plans(axes, size_floats)`, wired into core.collectives,
+    core.sync, launch.train and launch.serve.
+"""
+from . import cache, calibrate, fingerprint, service, skew  # noqa: F401
+from .cache import PlanCache  # noqa: F401
+from .calibrate import CalibrationConfig, calibrate_levels  # noqa: F401
+from .fingerprint import fingerprint_topo, plan_key  # noqa: F401
+from .service import PlannerService, default_service, get_plan  # noqa: F401
+from .skew import SkewModel, expected_time, pick_plan_under_skew  # noqa: F401

@@ -1,0 +1,190 @@
+"""Size-bucketed, thread-safe LRU plan cache with JSON disk persistence.
+
+Message sizes are continuous but plans are not size-sensitive within a
+small factor, so requests are snapped to *geometric buckets*: bucket k
+covers (base·g^(k-1), base·g^k] and is represented by its upper bound.
+Every request inside a bucket shares one cached plan, which keeps the
+cache small (log-many buckets across the whole useful size range) while
+bounding the pricing error a shared plan can introduce.
+
+Entries are JSON-serializable dicts (see plan_to_json/plan_from_json), so
+`save()`/`load()` round-trip through disk and warm plans survive process
+restarts.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from repro.core.plans import Plan, ReduceOp, Step, Transfer
+
+
+# ---------------------------------------------------------------------------
+# Plan IR <-> JSON
+# ---------------------------------------------------------------------------
+def plan_to_json(plan: Plan) -> dict:
+    return {
+        "name": plan.name, "n": plan.n, "size": plan.size,
+        "servers": plan.servers,
+        "steps": [{
+            "transfers": [[t.src, t.dst, t.size] for t in st.transfers],
+            "reduces": [[r.server, r.fan_in, r.size] for r in st.reduces],
+        } for st in plan.steps],
+    }
+
+
+def plan_from_json(d: dict) -> Plan:
+    steps = []
+    for sd in d["steps"]:
+        st = Step()
+        st.transfers = [Transfer(int(s), int(t), float(z))
+                        for s, t, z in sd["transfers"]]
+        st.reduces = [ReduceOp(int(s), int(f), float(z))
+                      for s, f, z in sd["reduces"]]
+        steps.append(st)
+    return Plan(d["name"], int(d["n"]), float(d["size"]), steps=steps,
+                servers=d.get("servers"))
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    disk_loads: int = 0
+    puts: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "disk_loads": self.disk_loads,
+                "puts": self.puts, "hit_rate": self.hit_rate}
+
+
+class PlanCache:
+    """LRU over canonical plan keys. Values are JSON-serializable dicts;
+    callers attach deserialized objects under the `_obj` key (kept out of
+    the persisted form) to avoid re-parsing on every warm hit."""
+
+    def __init__(self, capacity: int = 128, *, bucket_base: int = 4096,
+                 bucket_growth: float = 2.0, path: str | None = None,
+                 autosave: bool = False):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if bucket_growth <= 1.0:
+            raise ValueError("bucket_growth must be > 1")
+        self.capacity = capacity
+        self.bucket_base = int(bucket_base)
+        self.bucket_growth = float(bucket_growth)
+        self.path = path
+        self.autosave = autosave
+        self.stats = CacheStats()
+        self._lock = threading.RLock()
+        self._entries: OrderedDict[str, dict] = OrderedDict()
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # ---- size bucketing ----------------------------------------------------
+    def bucket(self, nbytes: int | float) -> int:
+        """Snap a request size to its geometric bucket's representative
+        (upper-bound) size. bucket(base) == base; bucket(base+1) == the
+        next bucket up."""
+        nbytes = float(nbytes)
+        if nbytes <= self.bucket_base:
+            return self.bucket_base
+        k = math.ceil(round(
+            math.log(nbytes / self.bucket_base)
+            / math.log(self.bucket_growth), 12))
+        return int(round(self.bucket_base * self.bucket_growth ** k))
+
+    # ---- core ops ----------------------------------------------------------
+    def get(self, key: str) -> dict | None:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return entry
+
+    def put(self, key: str, entry: dict) -> None:
+        snapshot = None
+        with self._lock:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            self.stats.puts += 1
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+            if self.autosave and self.path:
+                snapshot = self._snapshot_locked()
+        # Serialize + write outside the lock: an autosave (whole-file JSON
+        # rewrite) must not block concurrent get()s on the hot path.
+        # Concurrent writers each replace atomically; last one wins.
+        if snapshot is not None:
+            self._write(self.path, snapshot)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    # ---- persistence -------------------------------------------------------
+    def _snapshot_locked(self) -> dict:
+        return {k: {kk: vv for kk, vv in v.items()
+                    if not kk.startswith("_")}
+                for k, v in self._entries.items()}
+
+    @staticmethod
+    def _write(path: str, payload: dict) -> None:
+        tmp = f"{path}.tmp{os.getpid()}-{threading.get_ident()}"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": payload}, f)
+        os.replace(tmp, path)
+
+    def save(self, path: str | None = None) -> None:
+        path = path or self.path
+        if not path:
+            raise ValueError("no persistence path configured")
+        with self._lock:
+            payload = self._snapshot_locked()
+        self._write(path, payload)
+
+    def load(self, path: str | None = None) -> int:
+        path = path or self.path
+        if not path:
+            raise ValueError("no persistence path configured")
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            return 0
+        entries = payload.get("entries", {})
+        with self._lock:
+            for k, v in entries.items():
+                if k not in self._entries:
+                    self._entries[k] = v
+                    self.stats.disk_loads += 1
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+        return len(entries)

@@ -1,0 +1,237 @@
+"""PlannerService — the one cached, calibrated entry point for plan lookup.
+
+Every AllReduce in the repo resolves its schedule here (DESIGN.md §5):
+
+  * `get_plan(topo, nbytes, dtype)` — full GenTree plan for a physical
+    topology, cache-bucketed by size, optionally re-ranked against the
+    global baselines under an arrival-skew model;
+  * `get_axis_plans(axes, size_floats)` — per-mesh-axis plan selection for
+    the training/serving hot paths (launch.train's ZeRO-3 engine,
+    core.sync.sync_gradients, core.collectives.allreduce_planned).
+
+Plan generation (GenTree + candidate simulation) costs hundreds of
+milliseconds at cluster scale; a warm lookup is a fingerprint hash plus an
+LRU probe. With a cache path configured (or $REPRO_PLAN_CACHE), warm plans
+persist across restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Mapping, Sequence
+
+from repro.core import gentree as gentree_mod
+from repro.core.cost_model import GenModelParams, PAPER_TABLE5
+from repro.core.plans import Plan
+from repro.core.simulator import Simulator
+from repro.core.sync import AxisPlan, plan_axes_gentree
+from repro.core.topology import TopoNode
+
+from .cache import PlanCache, plan_from_json, plan_to_json
+from .calibrate import CalibrationConfig, CalibrationResult, calibrate_levels
+from .fingerprint import axis_key, plan_key
+from .skew import SkewModel, expected_time
+
+DTYPE_BYTES = {"float64": 8, "float32": 4, "int32": 4, "bfloat16": 2,
+               "bf16": 2, "float16": 2, "int8": 1}
+
+
+@dataclass
+class PlanResponse:
+    plan: Plan
+    algo: str                        # "gentree" or a baseline name
+    predicted_time: float            # synchronized simulator pricing
+    decisions: dict = field(default_factory=dict)   # gentree plans only
+    # simulator price + arrival-gated skew delta (skew.pick_plan_under_skew)
+    expected_skewed_time: float | None = None
+    source: str = "cold"             # cold | memory | disk
+    key: str = ""
+    nbytes_bucket: int = 0
+    size_floats: float = 0.0
+
+
+def _decisions_to_json(decisions) -> dict:
+    return {sw: {"algo": d.algo, "factors": d.factors,
+                 "rearrange": {str(k): v for k, v in d.rearrange.items()},
+                 "cost": d.cost}
+            for sw, d in decisions.items()}
+
+
+class PlannerService:
+    """Thread-safe facade over fingerprint + cache + calibrate + skew."""
+
+    def __init__(self, params: Mapping[str, GenModelParams] | None = None,
+                 cache: PlanCache | None = None, *,
+                 cache_path: str | None = None, capacity: int = 128,
+                 autosave: bool = False,
+                 skew: SkewModel | None = None,
+                 baseline_kinds: tuple[str, ...] = ("cps", "ring", "rhd"),
+                 gentree_kwargs: dict | None = None):
+        self.params = dict(params) if params else None
+        self.cache = cache or PlanCache(capacity=capacity, path=cache_path,
+                                        autosave=autosave)
+        self.skew = skew
+        self.baseline_kinds = baseline_kinds
+        self.gentree_kwargs = dict(gentree_kwargs or {})
+        self.calibration: CalibrationResult | None = None
+        self._lock = threading.RLock()
+
+    # ---- calibration -------------------------------------------------------
+    def calibrate(self, source: Mapping[str, GenModelParams] | None = None,
+                  cfg: CalibrationConfig | None = None) -> CalibrationResult:
+        """Refit GenModelParams from measurements and make the fitted set
+        the service's pricing basis. Invalidates nothing explicitly — the
+        params fingerprint is part of every cache key, so plans priced
+        under the old params simply stop being hit."""
+        result = calibrate_levels(source or self.params or PAPER_TABLE5,
+                                  cfg)
+        with self._lock:
+            self.params = dict(result.params)
+            self.calibration = result
+        return result
+
+    # ---- full-topology plans ----------------------------------------------
+    def _effective_params(self) -> dict[str, GenModelParams]:
+        return self.params or PAPER_TABLE5
+
+    def get_plan(self, topo: TopoNode, nbytes: int | float,
+                 dtype: str = "float32") -> PlanResponse:
+        topo.finalize()
+        dsize = DTYPE_BYTES.get(dtype, 4)
+        bucket = self.cache.bucket(nbytes)
+        size_floats = float(bucket) / dsize
+        params = self._effective_params()
+        extra = (tuple(sorted(self.gentree_kwargs.items())),
+                 self.skew.key() if self.skew else None)
+        key = plan_key(topo, params, bucket, dtype, extra=extra)
+
+        entry = self.cache.get(key)
+        if entry is not None:
+            obj = entry.get("_obj")
+            source = "memory" if obj is not None else "disk"
+            plan = obj if obj is not None else plan_from_json(entry["plan"])
+            if obj is None:
+                entry["_obj"] = plan
+            return PlanResponse(
+                plan=plan, algo=entry["algo"],
+                predicted_time=entry["predicted_time"],
+                decisions=entry.get("decisions", {}),
+                expected_skewed_time=entry.get("expected_skewed_time"),
+                source=source, key=key, nbytes_bucket=bucket,
+                size_floats=size_floats)
+
+        # ---- cold path: generate, (optionally) re-rank under skew --------
+        result = gentree_mod.gentree(topo, size_floats, params=params,
+                                     **self.gentree_kwargs)
+        algo, plan = "gentree", result.plan
+        decisions = _decisions_to_json(result.decisions)
+        skewed = None
+        if self.skew is not None and self.skew.scale > 0.0:
+            candidates = [("gentree", result.plan)]
+            n = topo.num_servers()
+            for kind in self.baseline_kinds:
+                if kind == "rhd" and (n & (n - 1)) != 0:
+                    continue
+                if n < 2:
+                    continue
+                candidates.append(
+                    (kind, gentree_mod.baseline_plan(kind, topo,
+                                                     size_floats)))
+            from .skew import pick_plan_under_skew
+            algo, plan, skewed = pick_plan_under_skew(
+                candidates, topo, self.skew, params, unit_bytes=dsize)
+            if algo != "gentree":
+                # per-switch decisions describe the discarded GenTree
+                # plan, not the baseline that won — don't mis-report them
+                decisions = {}
+        sim = Simulator(topo, params, unit_bytes=dsize)
+        predicted = sim.simulate(plan).total
+
+        entry = {"plan": plan_to_json(plan), "algo": algo,
+                 "predicted_time": predicted, "decisions": decisions,
+                 "expected_skewed_time": skewed,
+                 "nbytes_bucket": bucket, "_obj": plan}
+        self.cache.put(key, entry)
+        return PlanResponse(plan=plan, algo=algo, predicted_time=predicted,
+                            decisions=decisions, expected_skewed_time=skewed,
+                            source="cold", key=key, nbytes_bucket=bucket,
+                            size_floats=size_floats)
+
+    # ---- per-mesh-axis plans (training/serving hot path) -------------------
+    def get_axis_plans(self, axes: Sequence[tuple[str, int]],
+                       size_floats: float,
+                       params: Mapping[str, GenModelParams] | None = None
+                       ) -> list[AxisPlan]:
+        axes = [(str(a), int(n)) for a, n in axes]
+        eff = params if params is not None else self.params
+        bucket = self.cache.bucket(max(size_floats, 1.0) * 4)
+        from repro.core.cost_model import TPU_V5E
+        key = axis_key(axes, eff if eff is not None else TPU_V5E, bucket)
+        entry = self.cache.get(key)
+        if entry is not None:
+            obj = entry.get("_obj")
+            if obj is None:
+                obj = [AxisPlan(a, s, tuple(f) if f else None)
+                       for a, s, f in entry["axis_plans"]]
+                entry["_obj"] = obj
+            return list(obj)
+        plans = plan_axes_gentree(axes, float(bucket) / 4.0, eff)
+        entry = {"axis_plans": [[p.axis, p.strategy,
+                                 list(p.factors) if p.factors else None]
+                                for p in plans],
+                 "_obj": list(plans)}
+        self.cache.put(key, entry)
+        return list(plans)
+
+    # ---- housekeeping ------------------------------------------------------
+    def stats(self) -> dict:
+        out = {"cache": self.cache.stats.as_dict(),
+               "entries": len(self.cache),
+               "calibrated": self.calibration is not None}
+        if self.params:
+            out["params"] = {lvl: dataclasses.asdict(p)
+                             for lvl, p in self.params.items()}
+        return out
+
+    def save(self, path: str | None = None) -> None:
+        self.cache.save(path)
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default service (what the hot paths use)
+# ---------------------------------------------------------------------------
+_default: PlannerService | None = None
+_default_lock = threading.Lock()
+
+
+def default_service() -> PlannerService:
+    """Lazily-created singleton. $REPRO_PLAN_CACHE, when set, points at the
+    JSON persistence file so warm plans survive restarts."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            path = os.environ.get("REPRO_PLAN_CACHE") or None
+            # autosave so the promise holds without an explicit save():
+            # nothing on the train/serve hot paths calls save() for us.
+            _default = PlannerService(cache_path=path,
+                                      autosave=path is not None)
+        return _default
+
+
+def set_default_service(svc: PlannerService | None) -> None:
+    """Swap the process-wide service (tests, custom calibration)."""
+    global _default
+    with _default_lock:
+        _default = svc
+
+
+def get_plan(topo: TopoNode, nbytes: int | float,
+             dtype: str = "float32") -> PlanResponse:
+    return default_service().get_plan(topo, nbytes, dtype)
+
+
+def axis_plans(axes: Sequence[tuple[str, int]],
+               size_floats: float) -> list[AxisPlan]:
+    return default_service().get_axis_plans(axes, size_floats)

@@ -1,0 +1,185 @@
+"""Arrival-skew pricing: expected AllReduce cost under imbalanced arrivals.
+
+GenModel (and the synchronized simulator) assume every server enters the
+collective at t=0. Real training steps don't: stragglers, imbalanced
+process-arrival patterns (Proficz; Faraj/Patarasuk/Yuan) and multi-job
+interference stagger the start times, and the *ranking* of plan types
+changes — heavily pipelined or high-fan-in plans lose their edge when the
+cost after the last arrival is what matters.
+
+Model: an arrival-gated per-server dataflow over the Plan IR. Each server
+carries a clock that starts at its arrival offset; a step's transfers
+leave when the sender's clock allows, and a receiver's reduce completes
+only when the slowest input has arrived. Two effects fall out naturally:
+
+  * work not depending on a late server overlaps the wait, so few-round
+    plans (CPS) recover faster than long pipelines once skew dominates;
+  * incast is charged only on flows that arrive *simultaneously* (within
+    one launch latency α of the last one) — staggered arrivals drain
+    buffers instead of overflowing them, so the ε penalty that made CPS
+    lose under synchronized starts fades as skew grows.
+
+Pricing is NIC-granularity (per-server uplinks, γ/δ compute, per-level α
+and ε) and intentionally ignores shared upper-link contention: it is a
+*comparative* model, not a replacement for core.simulator. Plan selection
+therefore anchors on the simulator: each candidate is priced as its
+synchronized simulator cost plus the *arrival-gated delta* (expected gated
+time under the skew draws minus gated time at zero offsets), so at zero
+skew the ranking is exactly the synchronized simulator's, and only the
+skew-induced difference comes from this model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import GenModelParams, PAPER_TABLE5
+from repro.core.plans import Plan
+from repro.core.topology import TopoNode
+
+
+@dataclass(frozen=True)
+class SkewModel:
+    """Distribution of per-server arrival offsets (seconds).
+
+    dist: "exponential" | "uniform" | "none"; `frac` is the fraction of
+    servers that are skewed at all (the rest arrive at t=0); `draws`
+    Monte-Carlo draws from a fixed seed keep pricing deterministic.
+    """
+    dist: str = "exponential"
+    scale: float = 0.0
+    frac: float = 1.0
+    draws: int = 8
+    seed: int = 0
+
+    def key(self) -> tuple:
+        return (self.dist, "%.9g" % self.scale, "%.9g" % self.frac,
+                self.draws, self.seed)
+
+
+def draw_offsets(model: SkewModel, n: int) -> np.ndarray:
+    """(draws, n) matrix of non-negative arrival offsets."""
+    if model.dist == "none" or model.scale <= 0.0:
+        return np.zeros((1, n))
+    rng = np.random.default_rng(model.seed)
+    out = np.zeros((model.draws, n))
+    k = max(1, int(round(model.frac * n)))
+    for d in range(model.draws):
+        idx = rng.permutation(n)[:k]
+        if model.dist == "exponential":
+            out[d, idx] = rng.exponential(model.scale, size=k)
+        elif model.dist == "uniform":
+            out[d, idx] = rng.uniform(0.0, model.scale, size=k)
+        else:
+            raise ValueError(f"unknown skew dist {model.dist!r}")
+    return out
+
+
+def arrival_gated_time(plan: Plan, topo: TopoNode,
+                       params: Mapping[str, GenModelParams] | None = None,
+                       offsets: Sequence[float] | None = None,
+                       unit_bytes: int = 4) -> float:
+    """Completion time of `plan` on `topo` with per-server arrival offsets
+    (indexed by server id; missing/None = all zero)."""
+    params = params or PAPER_TABLE5
+    psrv = params.get("server", GenModelParams())
+
+    def _p(level: str) -> GenModelParams:
+        return params.get(level, psrv)
+
+    srv = {s._sid: s for s in topo.servers()}
+    scale = unit_bytes / 4.0
+    clock = {sid: 0.0 for sid in srv}
+    if offsets is not None:
+        for i, sid in enumerate(sorted(srv)):
+            if i < len(offsets):
+                clock[sid] = float(offsets[i])
+
+    for st in plan.steps:
+        send_units: dict[int, float] = {}
+        senders_to: dict[int, list[int]] = {}
+        for t in st.transfers:
+            send_units[t.src] = send_units.get(t.src, 0.0) + t.size
+            senders_to.setdefault(t.dst, []).append(t.src)
+        recv_units = st.recv_bytes_by_dst()
+        comp: dict[int, float] = {}
+        for r in st.reduces:
+            comp[r.server] = comp.get(r.server, 0.0) + (
+                r.adds * psrv.gamma + r.mem_ops * psrv.delta) * scale
+
+        participants = set(send_units) | set(recv_units) | set(comp)
+        if not participants:
+            continue
+
+        start: dict[int, float] = {}
+        send_done: dict[int, float] = {}
+        for s in participants:
+            node = srv[s]
+            lvl = node.parent.level if node.parent is not None else "server"
+            start[s] = clock[s] + max(_p(lvl).alpha, psrv.alpha)
+        for s, units in send_units.items():
+            node = srv[s]
+            bw = node.uplink_bw
+            t_send = units * unit_bytes / bw if bw else 0.0
+            send_done[s] = start[s] + t_send + node.uplink_latency
+
+        new_clock = dict(clock)
+        for s in participants:
+            t = start[s]
+            if s in send_done:
+                t = max(t, send_done[s])
+            if s in recv_units:
+                node = srv[s]
+                plvl = _p(node.parent.level if node.parent else "root_sw")
+                arrivals = [send_done[src] for src in senders_to[s]]
+                last = max(arrivals)
+                # incast: only flows landing within one round latency of
+                # the last one overflow buffers together (+1 for self)
+                w = sum(1 for a in arrivals if a >= last - plvl.alpha) + 1
+                extra = max(w - plvl.w_t, 0) * recv_units[s] * scale \
+                    * plvl.epsilon
+                bw = node.uplink_bw
+                t_recv = recv_units[s] * unit_bytes / bw if bw else 0.0
+                t = max(t, last + t_recv + extra)
+            t += comp.get(s, 0.0)
+            new_clock[s] = t
+        clock = new_clock
+    return max(clock.values()) if clock else 0.0
+
+
+def expected_time(plan: Plan, topo: TopoNode, model: SkewModel,
+                  params: Mapping[str, GenModelParams] | None = None,
+                  unit_bytes: int = 4) -> float:
+    """Mean arrival-gated completion time over the model's draws."""
+    offs = draw_offsets(model, topo.num_servers())
+    return float(np.mean([
+        arrival_gated_time(plan, topo, params, o, unit_bytes)
+        for o in offs]))
+
+
+def pick_plan_under_skew(candidates: Sequence[tuple[str, Plan]],
+                         topo: TopoNode, model: SkewModel,
+                         params: Mapping[str, GenModelParams] | None = None,
+                         unit_bytes: int = 4
+                         ) -> tuple[str, Plan, float]:
+    """argmin of simulator cost + arrival-gated skew delta (see module
+    docstring); deterministic tie-break on name. The gated model only
+    contributes the *difference* skew makes, so at zero skew this reduces
+    to the synchronized simulator ranking."""
+    from repro.core.simulator import Simulator
+
+    if not candidates:
+        raise ValueError("no candidate plans")
+    sim = Simulator(topo, dict(params) if params else None,
+                    unit_bytes=unit_bytes)
+    priced = []
+    for name, p in candidates:
+        sync = sim.simulate(p).total
+        delta = (expected_time(p, topo, model, params, unit_bytes)
+                 - arrival_gated_time(p, topo, params, None, unit_bytes))
+        priced.append((sync + max(delta, 0.0), name, p))
+    priced.sort(key=lambda x: (x[0], x[1]))
+    cost, name, plan = priced[0]
+    return name, plan, cost

@@ -18,7 +18,7 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.core.compat import shard_map
 from repro.core import collectives as C
 from repro.core.sync import SyncConfig, allreduce_int8_cps, sync_gradients
 
@@ -122,7 +122,7 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.core.compat import shard_map
 from repro.core.sync import allreduce_topk
 
 mesh = jax.make_mesh((8,), ("x",))

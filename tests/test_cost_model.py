@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import cost_model as cm, plans
 from repro.core.cost_model import GenModelParams

@@ -1,0 +1,349 @@
+"""Planner subsystem (repro.planner): cache bucketing + LRU + persistence,
+fingerprint isomorphism, calibration round-trip, skew-aware selection, and
+the PlannerService facade the launch hot paths use."""
+import math
+
+import pytest
+
+from repro.core import cost_model as cm, plans as plans_mod
+from repro.core.sync import plan_axes_gentree
+from repro.core.topology import TopoNode, single_switch, symmetric_tree
+from repro.planner.cache import PlanCache, plan_from_json, plan_to_json
+from repro.planner.calibrate import CalibrationConfig, calibrate_levels
+from repro.planner.fingerprint import (axis_key, fingerprint_params,
+                                       fingerprint_topo, plan_key)
+from repro.planner.service import PlannerService
+from repro.planner.skew import (SkewModel, arrival_gated_time, draw_offsets,
+                                expected_time, pick_plan_under_skew)
+
+
+# ---------------------------------------------------------------------------
+# Cache: geometric size buckets
+# ---------------------------------------------------------------------------
+class TestBuckets:
+    def test_base_is_its_own_bucket(self):
+        c = PlanCache(bucket_base=4096, bucket_growth=2.0)
+        assert c.bucket(4096) == 4096
+        assert c.bucket(1) == 4096
+        assert c.bucket(0) == 4096
+
+    def test_boundary_rolls_to_next_bucket(self):
+        c = PlanCache(bucket_base=4096, bucket_growth=2.0)
+        assert c.bucket(4097) == 8192
+        assert c.bucket(8192) == 8192
+        assert c.bucket(8193) == 16384
+
+    def test_idempotent_and_monotonic(self):
+        c = PlanCache(bucket_base=4096, bucket_growth=2.0)
+        prev = 0
+        for nbytes in (1, 4096, 5000, 1 << 20, 1 << 26, 3.7e9):
+            b = c.bucket(nbytes)
+            assert b >= nbytes
+            assert c.bucket(b) == b, "bucket must be a fixed point"
+            assert b >= prev
+            prev = b
+
+    def test_sizes_inside_one_bucket_share_it(self):
+        c = PlanCache(bucket_base=4096, bucket_growth=2.0)
+        assert c.bucket(9000) == c.bucket(16384) == 16384
+
+    def test_non_integer_growth(self):
+        c = PlanCache(bucket_base=1000, bucket_growth=1.5)
+        b = c.bucket(1001)
+        assert b == 1500
+        assert c.bucket(1500) == 1500
+        assert c.bucket(1501) == 2250
+
+    def test_bad_config_rejected(self):
+        with pytest.raises(ValueError):
+            PlanCache(capacity=0)
+        with pytest.raises(ValueError):
+            PlanCache(bucket_growth=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Cache: LRU + stats
+# ---------------------------------------------------------------------------
+class TestCacheLRU:
+    def test_miss_then_hit(self):
+        c = PlanCache(capacity=4)
+        assert c.get("k") is None
+        c.put("k", {"v": 1})
+        assert c.get("k") == {"v": 1}
+        assert c.stats.misses == 1 and c.stats.hits == 1
+        assert c.stats.hit_rate == 0.5
+
+    def test_lru_eviction_order(self):
+        c = PlanCache(capacity=2)
+        c.put("a", {"v": 1})
+        c.put("b", {"v": 2})
+        assert c.get("a")          # refresh a; b is now LRU
+        c.put("c", {"v": 3})       # evicts b
+        assert "a" in c and "c" in c and "b" not in c
+        assert c.stats.evictions == 1
+        assert len(c) == 2
+
+    def test_put_updates_existing_without_eviction(self):
+        c = PlanCache(capacity=2)
+        c.put("a", {"v": 1})
+        c.put("a", {"v": 2})
+        assert len(c) == 1 and c.stats.evictions == 0
+        assert c.get("a") == {"v": 2}
+
+
+# ---------------------------------------------------------------------------
+# Cache: disk persistence
+# ---------------------------------------------------------------------------
+class TestPersistence:
+    def test_plan_json_round_trip(self):
+        plan = plans_mod.hcps([2, 3], 600.0)
+        d = plan_to_json(plan)
+        back = plan_from_json(d)
+        assert back.name == plan.name and back.n == plan.n
+        assert len(back.steps) == len(plan.steps)
+        for a, b in zip(back.steps, plan.steps):
+            assert a.transfers == b.transfers
+            assert a.reduces == b.reduces
+
+    def test_save_load_round_trip(self, tmp_path):
+        path = str(tmp_path / "plans.json")
+        c = PlanCache(capacity=8)
+        c.put("k1", {"algo": "cps", "_obj": object()})   # _obj not persisted
+        c.put("k2", {"algo": "ring"})
+        c.save(path)
+
+        c2 = PlanCache(capacity=8, path=path)
+        assert c2.stats.disk_loads == 2
+        assert c2.get("k1") == {"algo": "cps"}
+        assert c2.get("k2") == {"algo": "ring"}
+
+    def test_load_missing_or_corrupt_is_empty(self, tmp_path):
+        c = PlanCache(capacity=4)
+        assert c.load(str(tmp_path / "nope.json")) == 0
+        bad = tmp_path / "bad.json"
+        bad.write_text("{not json")
+        assert c.load(str(bad)) == 0
+        assert len(c) == 0
+
+    def test_no_path_configured_raises(self):
+        with pytest.raises(ValueError):
+            PlanCache().save()
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints
+# ---------------------------------------------------------------------------
+def _tree(perm: bool, names: str) -> TopoNode:
+    """Two middle switches (3 + 2 servers); `perm` flips child order."""
+    root = TopoNode(name=f"{names}root", level="root_sw")
+    a = TopoNode(name=f"{names}a", uplink_bw=1e10, uplink_latency=1e-6,
+                 level="middle_sw")
+    a.children = [TopoNode(name=f"{names}a{i}", uplink_bw=1e9,
+                           uplink_latency=5e-6) for i in range(3)]
+    b = TopoNode(name=f"{names}b", uplink_bw=1e10, uplink_latency=1e-6,
+                 level="middle_sw")
+    b.children = [TopoNode(name=f"{names}b{i}", uplink_bw=1e9,
+                           uplink_latency=5e-6) for i in range(2)]
+    root.children = [b, a] if perm else [a, b]
+    return root.finalize()
+
+
+class TestFingerprint:
+    def test_isomorphic_trees_share_fingerprint(self):
+        # Different names AND different child order: same canonical form.
+        assert fingerprint_topo(_tree(False, "x")) == \
+            fingerprint_topo(_tree(True, "zzz"))
+
+    def test_structure_changes_fingerprint(self):
+        t1 = _tree(False, "x")
+        t2 = _tree(False, "x")
+        t2.children[0].children[0].uplink_bw *= 2       # one faster NIC
+        assert fingerprint_topo(t1) != fingerprint_topo(t2)
+        t3 = single_switch(5)
+        assert fingerprint_topo(t1) != fingerprint_topo(t3)
+
+    def test_params_fingerprint(self):
+        assert fingerprint_params(cm.PAPER_TABLE5) == \
+            fingerprint_params(dict(cm.PAPER_TABLE5))
+        assert fingerprint_params(cm.PAPER_TABLE5) != \
+            fingerprint_params(cm.TPU_V5E)
+        assert fingerprint_params(None) == fingerprint_params({})
+
+    def test_plan_key_sensitivity(self):
+        t = single_switch(4)
+        k = plan_key(t, cm.PAPER_TABLE5, 4096)
+        assert k == plan_key(t, cm.PAPER_TABLE5, 4096)
+        assert k != plan_key(t, cm.PAPER_TABLE5, 8192)
+        assert k != plan_key(t, cm.TPU_V5E, 4096)
+        assert k != plan_key(t, cm.PAPER_TABLE5, 4096, dtype="bfloat16")
+
+    def test_axis_key_sensitivity(self):
+        k = axis_key([("data", 8)], cm.PAPER_TABLE5, 4096)
+        assert k == axis_key([("data", 8)], cm.PAPER_TABLE5, 4096)
+        assert k != axis_key([("data", 16)], cm.PAPER_TABLE5, 4096)
+        assert k != axis_key([("pod", 8)], cm.PAPER_TABLE5, 4096)
+
+
+# ---------------------------------------------------------------------------
+# Calibration round-trip
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["closed_form", "simulator"])
+def test_calibration_recovers_injected_params(backend):
+    cfg = CalibrationConfig(backend=backend)
+    res = calibrate_levels(cm.PAPER_TABLE5, cfg)
+    assert res.backend == backend
+    assert set(res.params) == set(cfg.levels)
+    for level in cfg.levels:
+        src = cm.PAPER_TABLE5[level]
+        fit = res.params[level]
+        for f in ("alpha", "delta", "epsilon"):
+            true = getattr(src, f)
+            got = getattr(fit, f)
+            assert got == pytest.approx(true, rel=0.05, abs=1e-14), \
+                f"{level}.{f}: {got} vs {true}"
+        assert fit.w_t == src.w_t
+        # Only 2β+γ is identifiable from the CPS curve; the Fig.-4 bench
+        # pins γ, so the combination must round-trip even if the split
+        # differs slightly.
+        assert 2 * fit.beta + fit.gamma == pytest.approx(
+            2 * src.beta + src.gamma, rel=0.05, abs=1e-14)
+        samples = res.samples[level]
+        assert len(samples.times) == len(cfg.ns) * len(cfg.sizes)
+        assert samples.as_dict()["level"] == level
+
+
+def test_service_calibrate_swaps_pricing_basis():
+    svc = PlannerService()
+    assert svc.stats()["calibrated"] is False
+    res = svc.calibrate(cfg=CalibrationConfig(backend="closed_form"))
+    assert svc.stats()["calibrated"] is True
+    assert svc.params == res.params
+    # New params → new fingerprints: a lookup after calibration is a miss,
+    # not a stale hit priced under the old params.
+    topo = single_switch(4)
+    svc.get_plan(topo, 1 << 16)
+    assert svc.get_plan(topo, 1 << 16).source == "memory"
+    before = svc.cache.stats.misses
+    svc.calibrate(cm.TPU_V5E, cfg=CalibrationConfig(backend="closed_form"))
+    svc.get_plan(topo, 1 << 16)
+    assert svc.cache.stats.misses == before + 1
+
+
+# ---------------------------------------------------------------------------
+# Skew-aware selection
+# ---------------------------------------------------------------------------
+class TestSkew:
+    def test_offsets_deterministic_and_gated_on_scale(self):
+        m = SkewModel(scale=0.1, draws=4, seed=3)
+        a = draw_offsets(m, 8)
+        b = draw_offsets(m, 8)
+        assert (a == b).all() and a.shape == (4, 8) and (a >= 0).all()
+        z = draw_offsets(SkewModel(scale=0.0), 8)
+        assert z.shape == (1, 8) and not z.any()
+
+    def test_zero_skew_matches_synchronized_pricing(self):
+        topo = single_switch(8)
+        plan = plans_mod.cps(8, 1e6)
+        m = SkewModel(scale=0.0)
+        assert expected_time(plan, topo, m) == pytest.approx(
+            arrival_gated_time(plan, topo, offsets=None))
+
+    def test_late_arrival_lower_bounds_completion(self):
+        topo = single_switch(8)
+        plan = plans_mod.ring(8, 1e6)
+        base = arrival_gated_time(plan, topo, offsets=[0.0] * 8)
+        late = arrival_gated_time(plan, topo, offsets=[0.0] * 7 + [0.5])
+        assert late >= base + 0.5 * 0.99  # straggler's data gates the result
+
+    def test_high_imbalance_changes_the_winner(self):
+        # n=15 on the paper's ToR: CPS pays full incast twice when starts
+        # are synchronized (w = n > w_t in both all-to-all steps), so
+        # ring's 2(n-1) cheap rounds win. Under heavy arrival skew the
+        # scatter-step incast fades (flows no longer land together) while
+        # ring still pays all 28 α rounds — the winner flips to CPS.
+        n, s = 15, 1.8e8
+        params = {"middle_sw": cm.PAPER_TABLE5["middle_sw"],
+                  "server": cm.PAPER_TABLE5["server"]}
+        topo = single_switch(n)
+        cands = [("ring", plans_mod.ring(n, s)), ("cps", plans_mod.cps(n, s))]
+        sync_winner, _, _ = pick_plan_under_skew(
+            cands, topo, SkewModel(scale=0.0), params)
+        skew_winner, _, cost = pick_plan_under_skew(
+            cands, topo, SkewModel(scale=0.1, draws=8, seed=0), params)
+        assert sync_winner == "ring"
+        assert skew_winner == "cps"
+        assert cost > 0
+
+    def test_service_reranks_under_skew(self):
+        topo = single_switch(15)
+        svc = PlannerService(skew=SkewModel(scale=0.1, draws=4, seed=0))
+        r = svc.get_plan(topo, 1 << 22)
+        assert r.expected_skewed_time is not None
+        assert r.algo in ("gentree", "cps", "ring", "rhd")
+        # skew config is part of the cache key
+        r2 = svc.get_plan(topo, 1 << 22)
+        assert r2.source == "memory" and r2.algo == r.algo
+        svc_nosk = PlannerService(cache=svc.cache)
+        r3 = svc_nosk.get_plan(topo, 1 << 22)
+        assert r3.source == "cold" and r3.expected_skewed_time is None
+
+
+# ---------------------------------------------------------------------------
+# PlannerService facade
+# ---------------------------------------------------------------------------
+class TestService:
+    def test_cold_then_memory_hit(self):
+        svc = PlannerService()
+        topo = symmetric_tree(2, 4)
+        r1 = svc.get_plan(topo, 1 << 20)
+        r2 = svc.get_plan(topo, 1 << 20)
+        assert r1.source == "cold" and r2.source == "memory"
+        assert r2.plan is r1.plan                 # no re-parse on warm hit
+        assert r1.predicted_time > 0 and r1.algo == "gentree"
+        assert r1.decisions                       # per-switch decisions kept
+
+    def test_same_bucket_shares_entry(self):
+        svc = PlannerService()
+        topo = symmetric_tree(2, 4)
+        r1 = svc.get_plan(topo, 1 << 20)
+        r2 = svc.get_plan(topo, (1 << 20) - 1000)  # same geometric bucket
+        assert r2.source == "memory"
+        assert r2.nbytes_bucket == r1.nbytes_bucket
+
+    def test_isomorphic_topologies_share_entry(self):
+        svc = PlannerService()
+        svc.get_plan(_tree(False, "x"), 1 << 18)
+        r = svc.get_plan(_tree(True, "renamed"), 1 << 18)
+        assert r.source == "memory"
+
+    def test_disk_warm_restart(self, tmp_path):
+        path = str(tmp_path / "plans.json")
+        topo = symmetric_tree(2, 4)
+        svc = PlannerService(cache_path=path)
+        svc.get_plan(topo, 1 << 20)
+        svc.save()
+
+        svc2 = PlannerService(cache_path=path)   # "restarted" process
+        r = svc2.get_plan(topo, 1 << 20)
+        assert r.source == "disk"                # deserialized, not re-planned
+        assert svc2.get_plan(topo, 1 << 20).source == "memory"
+
+    def test_get_axis_plans_cached_and_correct(self):
+        svc = PlannerService()
+        axes = [("data", 8), ("pod", 2)]
+        p1 = svc.get_axis_plans(axes, 1e6)
+        p2 = svc.get_axis_plans(axes, 1e6)
+        assert p1 == p2
+        assert svc.cache.stats.hits >= 1
+        # service result matches the uncached gentree-per-axis planner at
+        # the bucketed size
+        bucket = svc.cache.bucket(1e6 * 4)
+        direct = plan_axes_gentree(axes, bucket / 4.0, None)
+        assert p1 == direct
+
+    def test_stats_shape(self):
+        svc = PlannerService()
+        svc.get_plan(single_switch(4), 4096)
+        st = svc.stats()
+        assert {"hits", "misses", "hit_rate"} <= set(st["cache"])
+        assert st["entries"] == 1

@@ -3,7 +3,7 @@ paper's optimality results (Theorems 1 & 2)."""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import optimality as opt, plans
 

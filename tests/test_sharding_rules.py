@@ -4,7 +4,7 @@ named axis divides the corresponding dim; no mesh axis used twice)."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.launch import sharding as shr

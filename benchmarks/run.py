@@ -25,7 +25,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (fig3_incast, fig4_delta_microbench, fig8_model_accuracy,
-                   planner_bench, roofline, table3_cpu_testbed,
+                   planner_bench, roofline, simfast_bench, table3_cpu_testbed,
                    table4_gpu_testbed, table5_fitting, table6_plan_selection,
                    table7_large_scale)
     all_benches = [
@@ -39,6 +39,7 @@ def main() -> None:
         ("table7", table7_large_scale.run),
         ("roofline", roofline.run),
         ("planner", planner_bench.run),
+        ("simfast", simfast_bench.run),
     ]
     only = set(args.only.split(",")) if args.only else None
 
@@ -52,27 +53,35 @@ def main() -> None:
         try:
             out = fn()
             derived = ""
+            metrics = {}
             if isinstance(out, dict):
                 for key in ("saving", "max", "max_gen_err", "speedups",
                             "ok", "worst"):
                     if key in out:
                         derived = f"{key}={out[key]}"
                         break
-            summary.append((name, time.perf_counter() - t0, derived))
+                # scalar metrics (e.g. cold-generation wall-clock) ride
+                # into the --json summary so trajectories are tracked
+                metrics = {k: v for k, v in out.items()
+                           if isinstance(v, (int, float, str, bool))}
+            summary.append((name, time.perf_counter() - t0, derived,
+                            metrics))
         except Exception as e:   # pragma: no cover
             failed += 1
             summary.append((name, time.perf_counter() - t0,
-                            f"ERROR {e!r}"))
+                            f"ERROR {e!r}", {}))
             import traceback
             traceback.print_exc()
 
     print(f"\n{'=' * 72}\nname,seconds,derived")
-    for name, dt, derived in summary:
+    for name, dt, derived, _ in summary:
         print(f"{name},{dt:.2f},{derived}")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({name: {"seconds": round(dt, 4), "derived": derived}
-                       for name, dt, derived in summary}, f, indent=2)
+            json.dump({name: {"seconds": round(dt, 4), "derived": derived,
+                              **({"metrics": metrics} if metrics else {})}
+                       for name, dt, derived, metrics in summary},
+                      f, indent=2)
         print(f"wrote {args.json}")
     sys.exit(1 if failed else 0)
 

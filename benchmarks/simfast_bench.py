@@ -1,0 +1,71 @@
+"""Compiled plan-evaluation engine — cold GenTree speedup gate.
+
+Acceptance gate (ISSUE 2 / DESIGN.md §7): cold `gentree()` on SYM512
+(16 middle switches × 32 servers) with the compiled engine must be >= 10x
+faster than the pre-PR reference path (per-candidate IR construction +
+pure-Python incast-aware simulation), and both paths must agree on every
+per-switch decision and cost within 1e-9.
+
+The reference leg is timed once (it is the slow path being replaced — tens
+of seconds); the fast leg is the median of several runs. Cold-generation
+wall-clock for both legs is returned so `benchmarks.run --json` records
+the trajectory across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.gentree import gentree
+from repro.core.topology import symmetric_tree
+
+from .common import fmt_table
+
+REQUIRED_SPEEDUP = 10.0
+SIZE = 1e8
+
+
+def run() -> dict:
+    t0 = time.perf_counter()
+    ref = gentree(symmetric_tree(16, 32), SIZE, engine="reference")
+    ref_s = time.perf_counter() - t0
+
+    fast_times = []
+    fast = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        fast = gentree(symmetric_tree(16, 32), SIZE, engine="fast")
+        fast_times.append(time.perf_counter() - t0)
+    fast_s = sorted(fast_times)[len(fast_times) // 2]
+    speedup = ref_s / fast_s
+
+    # decision + cost equivalence: the fast path must not silently change
+    # plan selection (the bit-for-bit ranking invariant, DESIGN.md §7)
+    worst = abs(ref.predicted_time - fast.predicted_time)
+    for sw, dr in ref.decisions.items():
+        df = fast.decisions[sw]
+        assert (dr.algo, dr.factors, dr.rearrange) == \
+            (df.algo, df.factors, df.rearrange), (sw, dr, df)
+        worst = max(worst, abs(dr.cost - df.cost))
+    assert worst < 1e-9, f"fast/reference cost divergence {worst:.3e}"
+
+    rows = [
+        {"path": "reference (pre-PR pure-Python search)",
+         "seconds": f"{ref_s:.3f}"},
+        {"path": "fast (compiled batched search)",
+         "seconds": f"{fast_s:.3f}"},
+    ]
+    print(fmt_table(rows, ["path", "seconds"],
+                    "simfast: cold gentree() on SYM512 (512 servers)"))
+    print(f"speedup: {speedup:.1f}x (required >= {REQUIRED_SPEEDUP:.0f}x); "
+          f"max decision-cost divergence {worst:.2e}")
+
+    assert speedup >= REQUIRED_SPEEDUP, (
+        f"cold gentree only {speedup:.1f}x faster than the reference path "
+        f"(need >= {REQUIRED_SPEEDUP:.0f}x)")
+    return {"ok": True, "speedups": f"{speedup:.1f}x",
+            "cold_fast_s": fast_s, "cold_ref_s": ref_s,
+            "max_divergence": worst}
+
+
+if __name__ == "__main__":
+    run()

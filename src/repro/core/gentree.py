@@ -17,10 +17,27 @@ Faithful reimplementation of Algorithms 1 & 2:
 
 The output is a complete AllReduce Plan IR (ReduceScatter + mirrored
 AllGather), the per-switch decisions, and the predicted time.
+
+Candidate search runs in one of two modes (DESIGN.md §7):
+
+  * engine="fast" (default): candidates are *lowered* straight to integer
+    holder/destination arrays (`_lowered_*`), every candidate for a switch
+    is priced in one batched `FastEngine.totals` call, the shared
+    `pre_steps` prefix (rearrangement moves) is compiled once and its cost
+    reused across candidates, and only the winning candidate is
+    materialized back into Plan IR.
+  * engine="reference": the original per-candidate IR construction +
+    pure-Python simulation, kept verbatim as the equivalence oracle and as
+    the pre-PR baseline for `benchmarks/simfast_bench.py`'s speedup gate.
+
+Both modes must select identical per-switch decisions (pinned in
+tests/test_simfast.py).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+import numpy as np
 
 from .cost_model import GenModelParams, PAPER_TABLE5
 from .plans import Plan, ReduceOp, Step, Transfer, factorizations, ring as ring_plan, \
@@ -96,13 +113,6 @@ def generate_basic_plan(node: TopoNode, n_total: int,
 # ---------------------------------------------------------------------------
 # Switch-local exchange IR builders (cross-children copy combining)
 # ---------------------------------------------------------------------------
-def _holder_of(block: int, child_place: dict[int, list[int]]) -> int:
-    for srv, blocks in child_place.items():
-        if block in blocks:
-            return srv
-    raise KeyError(block)
-
-
 def _index_holders(children_places: list[dict[int, list[int]]],
                    n_total: int) -> list[dict[int, int]]:
     out = []
@@ -237,6 +247,111 @@ def _rearrange_step(child_place: dict[int, list[int]], subset: list[int],
 
 
 # ---------------------------------------------------------------------------
+# Lowered (array-form) candidate builders — the batched search path.
+#
+# A candidate step is (src, dst, red_srv, fan): integer arrays of transfer
+# endpoints plus the reduce servers, every transfer/reduce sized `unit`.
+# Each builder mirrors its `_exchange_steps_*` IR twin transfer-for-transfer
+# (same multiset per step), so compiled costs match the reference engine.
+# ---------------------------------------------------------------------------
+def _holder_row(child_place: dict[int, list[int]], n_total: int) -> np.ndarray:
+    """block → holding server, as a dense array (the array `_index_holders`)."""
+    row = np.empty(n_total, dtype=np.int64)
+    for srv, blocks in child_place.items():
+        row[blocks] = srv
+    return row
+
+
+def _lowered_direct(H: np.ndarray, D: np.ndarray) -> list[tuple]:
+    c = H.shape[0]
+    mask = H != D
+    src = H[mask]
+    dst = np.broadcast_to(D, H.shape)[mask]
+    rsrv = D if c > 1 else D[:0]
+    return [(src, dst, rsrv, c)]
+
+
+def _lowered_hcps(H: np.ndarray, D: np.ndarray,
+                  factors: list[int]) -> list[tuple]:
+    B = H.shape[1]
+    blocks = np.arange(B)
+    cur = H
+    steps = []
+    radix = 1
+    for si, f in enumerate(factors):
+        last = si == len(factors) - 1
+        G = cur.reshape(-1, f, B)
+        ng = G.shape[0]
+        if last:
+            recv = np.broadcast_to(D, (ng, B))
+        else:
+            has_dest = (G == D).any(axis=1)
+            dig = (blocks // radix) % f
+            pick = np.take_along_axis(
+                G, np.broadcast_to(dig, (ng, 1, B)), axis=1)[:, 0, :]
+            recv = np.where(has_dest, D, pick)
+        mask = G != recv[:, None, :]
+        src = G[mask]
+        dst = np.broadcast_to(recv[:, None, :], G.shape)[mask]
+        steps.append((src, dst, recv.ravel(), f))
+        cur = recv
+        radix *= f
+    return steps
+
+
+def _lowered_chain(H: np.ndarray, D: np.ndarray) -> list[tuple]:
+    c = H.shape[0]
+    acc = H[0]
+    steps = []
+    for i in range(1, c):
+        nxt = D if i == c - 1 else H[i]
+        mask = acc != nxt
+        steps.append((acc[mask], nxt[mask], nxt, 2))
+        acc = nxt
+    return steps
+
+
+def _lowered_rhd(H: np.ndarray, D: np.ndarray) -> list[tuple]:
+    cur = H
+    steps = []
+    while cur.shape[0] > 1:
+        last = cur.shape[0] == 2
+        a, b = cur[0::2], cur[1::2]
+        if last:
+            recv = np.broadcast_to(D, a.shape)
+        else:
+            recv = np.where((a == D) | (b == D), D, a)
+        ma, mb = a != recv, b != recv
+        src = np.concatenate([a[ma], b[mb]])
+        dst = np.concatenate([np.broadcast_to(recv, a.shape)[ma],
+                              np.broadcast_to(recv, b.shape)[mb]])
+        steps.append((src, dst, recv.ravel(), 2))
+        cur = recv
+    return steps
+
+
+def _compile_lowered(eng, steps: list[tuple], unit: float) -> list:
+    out = []
+    for src, dst, rsrv, fan in steps:
+        out.append(eng.compile_arrays(
+            src, dst, unit, rsrv,
+            (fan - 1) * unit, (fan + 1) * unit))
+    return out
+
+
+def _materialize(steps: list[tuple], unit: float) -> list[Step]:
+    """Winning lowered candidate → Plan IR (only the winner pays this)."""
+    out = []
+    for src, dst, rsrv, fan in steps:
+        st = Step()
+        st.transfers = [Transfer(s, d, unit)
+                        for s, d in zip(src.tolist(), dst.tolist())]
+        st.reduces = [ReduceOp(r, fan, unit) for r in rsrv.tolist()]
+        out.append(st)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Algorithm 2 + assembly
 # ---------------------------------------------------------------------------
 def _merge_concurrent(step_lists: list[list[Step]]) -> list[Step]:
@@ -263,22 +378,180 @@ def _mirror(steps: list[Step]) -> list[Step]:
     return out
 
 
+def _switch_search_fast(eng, sw: TopoNode, place, eff_place, unit: float,
+                        n_total: int, candidates, enable_rearrangement,
+                        max_hcps_steps) -> tuple[list[Step], SwitchDecision]:
+    """Batched, incremental Algorithm-2 search for one switch: lowered
+    candidates, one `totals` call, pre_steps compiled once, winner-only
+    IR materialization. Decision-equivalent to the reference branch."""
+    D = np.empty(n_total, dtype=np.int64)
+    for srv, blocks in place[sw.name].items():
+        D[blocks] = srv
+    c = len(sw.children)
+    dec = SwitchDecision(algo="?")
+    pre_ir: list[Step] = []
+    pre_cost = 0.0
+
+    # ---- rearrangement decision per child (Algorithm 2, lines 8-16).
+    # The child's holder row doubles as the probe input, so each probe
+    # compiles two one-step plans instead of re-simulating from IR.
+    rows = []
+    for ci, ch in enumerate(sw.children):
+        cp = eff_place[ch.name]
+        row = _holder_row(cp, n_total)
+        if enable_rearrangement and not ch.is_server and len(cp) > 1:
+            gc_bw = max(ch.children[0].uplink_bw, 1.0)
+            k = max(1, min(len(ch.children),
+                           -(-int(ch.uplink_bw) // int(gc_bw))))
+            subset = [s for cc in ch.children[:k]
+                      for s in cc.server_ids() if s in cp]
+            if not subset:
+                subset = sorted(cp)[:1]
+            if len(subset) < len(cp):
+                rstep, rplace = _rearrange_step(cp, subset, unit)
+                row_r = _holder_row(rplace, n_total)
+                rstep_cost = eng.step_cost(eng.compile_step(rstep))[0]
+                probe_o = eng.total(_compile_lowered(
+                    eng, _lowered_direct(row[None, :], D), unit))
+                probe_r = rstep_cost + eng.total(_compile_lowered(
+                    eng, _lowered_direct(row_r[None, :], D), unit))
+                if probe_r < probe_o:
+                    pre_ir.append(rstep)
+                    pre_cost += rstep_cost
+                    row = row_r
+                    dec.rearrange[ci] = len(subset)
+        rows.append(row)
+    H = np.stack(rows)
+    balanced = len({ch.num_servers() for ch in sw.children}) == 1
+
+    # ---- plan type selection (Algorithm 2, lines 17-29), batched
+    cands: list[tuple[str, list[int] | None, list[tuple]]] = []
+    if balanced and c > 1:
+        if "cps" in candidates:
+            cands.append(("cps", None, _lowered_direct(H, D)))
+        if "hcps" in candidates:
+            for fac in factorizations(c, max_steps=max_hcps_steps):
+                cands.append(("hcps", fac, _lowered_hcps(H, D, fac)))
+        if "ring" in candidates and c > 2:
+            cands.append(("ring", None, _lowered_chain(H, D)))
+        if "rhd" in candidates and c > 1 and (c & (c - 1)) == 0:
+            cands.append(("rhd", None, _lowered_rhd(H, D)))
+    if not cands:
+        cands.append(("acps", None, _lowered_direct(H, D)))
+
+    costs = eng.totals([_compile_lowered(eng, steps, unit)
+                        for _, _, steps in cands])
+    bi = min(range(len(cands)),
+             key=lambda i: (pre_cost + costs[i], cands[i][0],
+                            tuple(cands[i][1] or ())))
+    dec.algo, dec.factors = cands[bi][0], cands[bi][1]
+    dec.cost = pre_cost + costs[bi]
+    return pre_ir + _materialize(cands[bi][2], unit), dec
+
+
+def _switch_search_reference(sim: Simulator, sw: TopoNode, place, eff_place,
+                             unit: float, n_total: int, size: float,
+                             candidates, enable_rearrangement,
+                             max_hcps_steps) -> tuple[list[Step],
+                                                      SwitchDecision]:
+    """The pre-PR search: per-candidate IR construction + full simulation
+    (including re-simulating the shared pre_steps prefix per candidate).
+    Kept verbatim as the oracle the fast path is tested against."""
+    def _eval(steps: list[Step]) -> float:
+        return sim.simulate(Plan("tmp", n_total, size, steps=steps)).total
+
+    dest = {}
+    for srv, blocks in place[sw.name].items():
+        for b in blocks:
+            dest[b] = srv
+    c = len(sw.children)
+    dec = SwitchDecision(algo="?")
+    pre_steps: list[Step] = []
+
+    # ---- rearrangement decision per child (Algorithm 2, lines 8-16)
+    # Subset = the servers under the first k of the child's own
+    # children, k sized by the convergence ratio (paper §4.2): the
+    # child's uplink bandwidth over one grandchild sub-tree's
+    # uplink — enough senders to saturate the bottleneck, no more.
+    child_places = []
+    for ci, ch in enumerate(sw.children):
+        cp = eff_place[ch.name]
+        if (enable_rearrangement and not ch.is_server
+                and len(cp) > 1):
+            gc_bw = max(ch.children[0].uplink_bw, 1.0)
+            k = max(1, min(len(ch.children),
+                           -(-int(ch.uplink_bw) // int(gc_bw))))
+            subset = [s for cc in ch.children[:k]
+                      for s in cc.server_ids() if s in cp]
+            if not subset:
+                subset = sorted(cp)[:1]
+            if len(subset) < len(cp):
+                rstep, rplace = _rearrange_step(cp, subset, unit)
+                # cost with vs without rearrangement for this child's
+                # outbound traffic (priced on the direct exchange)
+                probe_o = _exchange_steps_direct(
+                    _index_holders([cp], n_total), dest, unit)
+                probe_r = [rstep] + _exchange_steps_direct(
+                    _index_holders([rplace], n_total), dest, unit)
+                if _eval(probe_r) < _eval(probe_o):
+                    pre_steps.append(rstep)
+                    cp = rplace
+                    dec.rearrange[ci] = len(subset)
+        child_places.append(cp)
+
+    holders = _index_holders(child_places, n_total)
+    balanced = len({ch.num_servers() for ch in sw.children}) == 1
+
+    # ---- plan type selection (Algorithm 2, lines 17-29)
+    cands: list[tuple[str, list[int] | None, list[Step]]] = []
+    if balanced and c > 1:
+        if "cps" in candidates:
+            cands.append(("cps", None,
+                          _exchange_steps_direct(holders, dest, unit)))
+        if "hcps" in candidates:
+            for fac in factorizations(c, max_steps=max_hcps_steps):
+                cands.append(("hcps", fac, _exchange_steps_hcps(
+                    holders, dest, unit, fac)))
+        if "ring" in candidates and c > 2:
+            cands.append(("ring", None,
+                          _exchange_steps_chain(holders, dest, unit)))
+        if "rhd" in candidates and c > 1 and (c & (c - 1)) == 0:
+            cands.append(("rhd", None,
+                          _exchange_steps_rhd(holders, dest, unit)))
+    if not cands:
+        cands.append(("acps", None,
+                      _exchange_steps_direct(holders, dest, unit)))
+
+    best = min(cands, key=lambda x: (_eval(pre_steps + x[2]),
+                                     x[0], tuple(x[1] or ())))
+    dec.algo, dec.factors = best[0], best[1]
+    dec.cost = _eval(pre_steps + best[2])
+    return pre_steps + best[2], dec
+
+
 def gentree(topo: TopoNode, size: float,
             params: dict[str, GenModelParams] | None = None,
             candidates: tuple[str, ...] = ("cps", "hcps", "ring", "rhd"),
             enable_rearrangement: bool = True,
             max_hcps_steps: int = 3,
-            concurrent: bool = True) -> GenTreeResult:
+            concurrent: bool = True,
+            engine: str | None = None) -> GenTreeResult:
     """concurrent=True zip-merges sibling switch-local sub-plans (they
     touch disjoint servers and links, so real hardware runs them in
     parallel) — a beyond-paper scheduling improvement. concurrent=False
     reproduces the paper's stream-emulator behaviour (sub-plans issued
-    sequentially), for apples-to-apples Table-7 comparisons."""
+    sequentially), for apples-to-apples Table-7 comparisons.
+
+    engine selects the candidate-pricing path: "fast" (default via
+    Simulator / $REPRO_SIM_ENGINE) runs the batched compiled search,
+    "reference" the pre-PR pure-Python one; both pick identical plans."""
     params = params or PAPER_TABLE5
     topo.finalize()
     n_total = topo.num_servers()
     unit = size / n_total
-    sim = Simulator(topo, params)
+    sim = Simulator(topo, params, engine=engine)
+    fast = sim.engine == "fast"
+    eng = sim.fast_engine() if fast else None
 
     place: dict[str, dict[int, list[int]]] = {}
     generate_basic_plan(topo, n_total, place)
@@ -296,85 +569,25 @@ def gentree(topo: TopoNode, size: float,
 
     _depth(topo)
     max_depth = depth_of.get(topo.name, 1)
+    switches = topo.switches()
 
     rs_levels: list[list[Step]] = []
     # effective placement per child after its own subtree finished (+rearr)
     eff_place: dict[str, dict[int, list[int]]] = dict(place)
 
-    def _eval(steps: list[Step]) -> float:
-        return sim.simulate(Plan("tmp", n_total, size, steps=steps)).total
-
     for depth in range(1, max_depth + 1):
         level_steps: list[list[Step]] = []
-        for sw in [s for s in topo.switches() if depth_of[s.name] == depth]:
-            dest = {}
-            for srv, blocks in place[sw.name].items():
-                for b in blocks:
-                    dest[b] = srv
-            c = len(sw.children)
-            dec = SwitchDecision(algo="?")
-            pre_steps: list[Step] = []
-
-            # ---- rearrangement decision per child (Algorithm 2, lines 8-16)
-            # Subset = the servers under the first k of the child's own
-            # children, k sized by the convergence ratio (paper §4.2): the
-            # child's uplink bandwidth over one grandchild sub-tree's
-            # uplink — enough senders to saturate the bottleneck, no more.
-            child_places = []
-            for ci, ch in enumerate(sw.children):
-                cp = eff_place[ch.name]
-                if (enable_rearrangement and not ch.is_server
-                        and len(cp) > 1):
-                    gc_bw = max(ch.children[0].uplink_bw, 1.0)
-                    k = max(1, min(len(ch.children),
-                                   -(-int(ch.uplink_bw) // int(gc_bw))))
-                    subset = [s for c in ch.children[:k]
-                              for s in c.server_ids() if s in cp]
-                    if not subset:
-                        subset = sorted(cp)[:1]
-                    if len(subset) < len(cp):
-                        rstep, rplace = _rearrange_step(cp, subset, unit)
-                        # cost with vs without rearrangement for this child's
-                        # outbound traffic (priced on the direct exchange)
-                        probe_o = _exchange_steps_direct(
-                            _index_holders([cp], n_total), dest, unit)
-                        probe_r = [rstep] + _exchange_steps_direct(
-                            _index_holders([rplace], n_total), dest, unit)
-                        if _eval(probe_r) < _eval(probe_o):
-                            pre_steps.append(rstep)
-                            cp = rplace
-                            dec.rearrange[ci] = len(subset)
-                child_places.append(cp)
-
-            holders = _index_holders(child_places, n_total)
-            balanced = len({ch.num_servers() for ch in sw.children}) == 1
-
-            # ---- plan type selection (Algorithm 2, lines 17-29)
-            cands: list[tuple[str, list[int] | None, list[Step]]] = []
-            if balanced and c > 1:
-                if "cps" in candidates:
-                    cands.append(("cps", None,
-                                  _exchange_steps_direct(holders, dest, unit)))
-                if "hcps" in candidates:
-                    for fac in factorizations(c, max_steps=max_hcps_steps):
-                        cands.append(("hcps", fac, _exchange_steps_hcps(
-                            holders, dest, unit, fac)))
-                if "ring" in candidates and c > 2:
-                    cands.append(("ring", None,
-                                  _exchange_steps_chain(holders, dest, unit)))
-                if "rhd" in candidates and c > 1 and (c & (c - 1)) == 0:
-                    cands.append(("rhd", None,
-                                  _exchange_steps_rhd(holders, dest, unit)))
-            if not cands:
-                cands.append(("acps", None,
-                              _exchange_steps_direct(holders, dest, unit)))
-
-            best = min(cands, key=lambda x: (_eval(pre_steps + x[2]),
-                                             x[0], tuple(x[1] or ())))
-            dec.algo, dec.factors = best[0], best[1]
-            dec.cost = _eval(pre_steps + best[2])
+        for sw in [s for s in switches if depth_of[s.name] == depth]:
+            if fast:
+                steps, dec = _switch_search_fast(
+                    eng, sw, place, eff_place, unit, n_total,
+                    candidates, enable_rearrangement, max_hcps_steps)
+            else:
+                steps, dec = _switch_search_reference(
+                    sim, sw, place, eff_place, unit, n_total, size,
+                    candidates, enable_rearrangement, max_hcps_steps)
             decisions[sw.name] = dec
-            level_steps.append(pre_steps + best[2])
+            level_steps.append(steps)
             eff_place[sw.name] = place[sw.name]
         if concurrent:
             rs_levels.append(_merge_concurrent(level_steps))

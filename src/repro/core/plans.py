@@ -42,23 +42,44 @@ class ReduceOp:
 
 @dataclass
 class Step:
+    """One synchronized round.
+
+    Mutation rules: plan builders append to `transfers`/`reduces` while
+    constructing a step and must finish before the step is priced — the
+    per-destination aggregates below are cached on first use. The cache is
+    keyed on `len(transfers)`, so the common builder pattern (append, then
+    simulate, then append more — e.g. `_merge_concurrent` extending a step)
+    invalidates naturally; *replacing* a transfer without changing the list
+    length is not supported (call `invalidate_caches()` by hand if you must).
+    Callers must treat the returned dicts as read-only.
+    """
     transfers: list[Transfer] = field(default_factory=list)
     reduces: list[ReduceOp] = field(default_factory=list)
+    _dst_cache: tuple | None = field(default=None, repr=False, compare=False)
 
-    def recv_bytes_by_dst(self) -> dict[int, float]:
-        out: dict[int, float] = {}
-        for t in self.transfers:
-            out[t.dst] = out.get(t.dst, 0.0) + t.size
-        return out
+    def invalidate_caches(self) -> None:
+        self._dst_cache = None
 
-    def fan_in_by_dst(self) -> dict[int, int]:
-        out: dict[int, int] = {}
+    def _by_dst(self) -> tuple[dict[int, float], dict[int, int]]:
+        cache = self._dst_cache
+        if cache is not None and cache[0] == len(self.transfers):
+            return cache[1], cache[2]
+        recv: dict[int, float] = {}
+        fan: dict[int, int] = {}
         seen = set()
         for t in self.transfers:
+            recv[t.dst] = recv.get(t.dst, 0.0) + t.size
             if (t.src, t.dst) not in seen:
                 seen.add((t.src, t.dst))
-                out[t.dst] = out.get(t.dst, 0) + 1
-        return out
+                fan[t.dst] = fan.get(t.dst, 0) + 1
+        self._dst_cache = (len(self.transfers), recv, fan)
+        return recv, fan
+
+    def recv_bytes_by_dst(self) -> dict[int, float]:
+        return self._by_dst()[0]
+
+    def fan_in_by_dst(self) -> dict[int, int]:
+        return self._by_dst()[1]
 
 
 @dataclass

@@ -13,9 +13,17 @@ Simulates a Plan IR over a tree topology. Per synchronized step:
   (cross-DC rounds pay the WAN α, paper Table 5).
 
 Deterministic, no wall-clock dependence.
+
+This module is the *reference oracle*: `simulate()` delegates to the
+compiled engine (`core.simfast.FastEngine`, DESIGN.md §7) unless the
+simulator is constructed with `engine="reference"` or
+`$REPRO_SIM_ENGINE=reference` is set; `simulate_reference()` always runs
+the pure-Python path. The two must agree within 1e-9 on every SimResult
+field (tests/test_simfast.py).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 
 from .cost_model import GenModelParams, PAPER_TABLE5
@@ -36,16 +44,33 @@ class SimResult:
 class Simulator:
     def __init__(self, topo: TopoNode,
                  params: dict[str, GenModelParams] | None = None,
-                 unit_bytes: int = 4):
+                 unit_bytes: int = 4, engine: str | None = None):
         self.topo = topo
         self.params = params or PAPER_TABLE5
         self.unit = unit_bytes
         self._srv = {s._sid: s for s in topo.servers()}
+        self.engine = (engine or os.environ.get("REPRO_SIM_ENGINE")
+                       or "fast")
+        if self.engine not in ("fast", "reference"):
+            raise ValueError(f"unknown sim engine {self.engine!r}")
+        self._fast = None
 
     def _p(self, level: str) -> GenModelParams:
         return self.params.get(level, self.params["server"])
 
+    def fast_engine(self):
+        """The shared compiled engine for this (topo, params, unit)."""
+        if self._fast is None:
+            from .simfast import FastEngine
+            self._fast = FastEngine(self.topo, self.params, self.unit)
+        return self._fast
+
     def simulate(self, plan: Plan) -> SimResult:
+        if self.engine == "fast":
+            return self.fast_engine().simulate(plan)
+        return self.simulate_reference(plan)
+
+    def simulate_reference(self, plan: Plan) -> SimResult:
         res = SimResult(total=0.0)
         for st in plan.steps:
             # ---- route flows onto links ----------------------------------

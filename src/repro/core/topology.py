@@ -11,6 +11,102 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass, field
 
+import numpy as np
+
+
+class RoutingIndex:
+    """Dense array view of a finalized topology (built by `finalize()`).
+
+    Assigns every node a DFS index and every *directed* uplink a dense link
+    id (`2*node` = 'up' through node's uplink, `2*node+1` = 'down'), and
+    tabulates each server's ancestor chain so the links on any src→dst path
+    become pure array lookups: a level-`l` ancestor of `src` lies strictly
+    below the LCA — and hence its uplink is on the path — exactly when it
+    differs from `dst`'s level-`l` ancestor. `core.simfast` vectorizes the
+    whole per-step routing of a Plan over these tables; `path_links()`
+    remains the reference implementation (property-tested against this).
+    """
+
+    def __init__(self, root: "TopoNode"):
+        self.root = root
+        self.nodes: list[TopoNode] = list(root.iter_nodes())
+        idx = {id(n): i for i, n in enumerate(self.nodes)}
+        self.n_nodes = len(self.nodes)
+        self.n_links = 2 * self.n_nodes
+        servers = root.servers()
+        self.n_servers = len(servers)
+        # Server arrays are indexed by _sid. For a tree finalized at this
+        # root, sids are contiguous 0..n-1; for a subtree of an enclosing
+        # finalized tree they are a sparse subset of the global ids, so
+        # size by the largest sid instead of the count.
+        self.sids = tuple(s._sid for s in servers)   # staleness check key
+        self.sid_cap = max(self.sids, default=-1) + 1
+
+        # Per-node (and so per-link-pair) physical attributes. A link's
+        # GenModel level class is its *parent switch*'s level (the fabric
+        # the uplink plugs into), matching the reference simulator.
+        self.link_bw = np.zeros(self.n_nodes)
+        self.link_latency = np.zeros(self.n_nodes)
+        levels: list[str] = []
+        level_idx: dict[str, int] = {}
+        self.link_level = np.zeros(self.n_nodes, dtype=np.int64)
+        depth_of: dict[int, int] = {id(root): 0}
+        for i, n in enumerate(self.nodes):
+            self.link_bw[i] = n.uplink_bw
+            self.link_latency[i] = n.uplink_latency
+            lvl = n.parent.level if n.parent is not None else n.level
+            if lvl not in level_idx:
+                level_idx[lvl] = len(levels)
+                levels.append(lvl)
+            self.link_level[i] = level_idx[lvl]
+            if n is not root:
+                depth_of[id(n)] = depth_of[id(n.parent)] + 1
+        self.levels = levels                    # level-class names, indexed
+        self.level_idx = level_idx
+
+        # Per-server tables (indexed by _sid).
+        self.max_depth = max((depth_of[id(s)] for s in servers), default=0)
+        self.srv_node = np.zeros(self.sid_cap, dtype=np.int64)
+        self.srv_bw = np.zeros(self.sid_cap)
+        self.srv_level = np.zeros(self.sid_cap, dtype=np.int64)
+        # anc[s, l] = node index of server s's ancestor at tree depth l
+        # (root = depth 0, the server itself at its own depth); -1 pads
+        # levels below the server in ragged-depth trees.
+        self.anc = np.full((self.sid_cap, self.max_depth + 1), -1,
+                           dtype=np.int64)
+        for s in servers:
+            sid = s._sid
+            self.srv_node[sid] = idx[id(s)]
+            self.srv_bw[sid] = s.uplink_bw
+            plvl = s.parent.level if s.parent is not None else "root_sw"
+            if plvl not in level_idx:
+                level_idx[plvl] = len(levels)
+                levels.append(plvl)
+            self.srv_level[sid] = level_idx[plvl]
+            chain = []
+            n = s
+            while True:     # climb to this index's root, never above it
+                chain.append(idx[id(n)])
+                if n is root:
+                    break
+                n = n.parent
+            for l, node_i in enumerate(reversed(chain)):
+                self.anc[sid, l] = node_i
+
+    def path_link_ids(self, src_sid: int, dst_sid: int) -> list[int]:
+        """Dense link ids on the src→dst path (src-side 'up' links first,
+        then dst-side 'down' links root-to-leaf). Mirrors `path_links`."""
+        out_up, out_down = [], []
+        for l in range(1, self.max_depth + 1):
+            a, b = self.anc[src_sid, l], self.anc[dst_sid, l]
+            if a == b:
+                continue
+            if a != -1:
+                out_up.append(2 * int(a))
+            if b != -1:
+                out_down.append(2 * int(b) + 1)
+        return out_up[::-1] + out_down
+
 
 @dataclass
 class TopoNode:
@@ -22,6 +118,8 @@ class TopoNode:
     level: str = "server"           # "server" | "middle_sw" | "root_sw" | "cross_dc"
     parent: "TopoNode | None" = None
     _sid: int = -1                  # server id (leaves only, assigned by finalize)
+    _routing: "RoutingIndex | None" = field(default=None, repr=False,
+                                            compare=False)
 
     # ---- structure helpers -------------------------------------------------
     @property
@@ -55,7 +153,9 @@ class TopoNode:
             yield from c.iter_nodes()
 
     def finalize(self) -> "TopoNode":
-        """Assign parent pointers and contiguous server ids (DFS order)."""
+        """Assign parent pointers, contiguous server ids (DFS order) and
+        build the dense RoutingIndex. Idempotent; call again after
+        structural edits to refresh the index."""
         sid = itertools.count()
 
         def walk(node: TopoNode, parent: TopoNode | None):
@@ -66,7 +166,29 @@ class TopoNode:
                 walk(c, node)
 
         walk(self, None)
+        self._routing = RoutingIndex(self)
         return self
+
+    def routing(self) -> "RoutingIndex":
+        """The dense routing index (building it on demand if needed).
+
+        For a node that is itself the finalized root, this returns the
+        index built by `finalize()`. For a *subtree* of an enclosing
+        finalized tree (valid server ids already assigned) it builds a
+        local index without re-finalizing — re-finalizing would sever the
+        subtree's parent pointer and renumber the enclosing tree's ids.
+        A cached index is discarded when the server ids it was built
+        against no longer match (e.g. the enclosing tree was edited and
+        re-finalized, renumbering sids DFS-wide).
+        """
+        sids = tuple(s._sid for s in self.servers())
+        if (self._routing is None or self._routing.root is not self
+                or self._routing.sids != sids):
+            if -1 in sids or len(set(sids)) != len(sids):
+                self.finalize()          # never finalized: safe to assign
+            else:
+                self._routing = RoutingIndex(self)
+        return self._routing
 
     def server_ids(self) -> list[int]:
         return [s._sid for s in self.servers()]

@@ -45,6 +45,10 @@ class CalibrationConfig:
     backend: str = "simulator"    # simulator | closed_form | lax
     unit_bytes: int = 4
     levels: tuple[str, ...] = ("cross_dc", "root_sw", "middle_sw", "server")
+    # plan-evaluation engine for the simulator backend's sweeps: "fast"
+    # (compiled, default) or "reference" (pure-Python oracle); None defers
+    # to $REPRO_SIM_ENGINE / the Simulator default.
+    engine: str | None = None
 
 
 @dataclass
@@ -103,7 +107,7 @@ def measure_cps_curve(level: str, source: GenModelParams,
         if cfg.backend == "simulator":
             topo = _level_topo(level, n, source, cfg.unit_bytes)
             sim = Simulator(topo, {level: source, "server": source},
-                            unit_bytes=cfg.unit_bytes)
+                            unit_bytes=cfg.unit_bytes, engine=cfg.engine)
         for s in cfg.sizes:
             ns.append(float(n))
             sizes.append(float(s))
@@ -134,7 +138,7 @@ def measure_fig4_curve(level: str, source: GenModelParams,
     for x in cfg.fig4_xs:
         topo = _level_topo(level, 2, source, cfg.unit_bytes)
         sim = Simulator(topo, {level: source, "server": source},
-                        unit_bytes=cfg.unit_bytes)
+                        unit_bytes=cfg.unit_bytes, engine=cfg.engine)
         p = plans_mod.Plan("fig4", 2, s)
         st = plans_mod.Step()
         st.reduces.append(plans_mod.ReduceOp(0, int(x), s))

@@ -68,13 +68,17 @@ class PlannerService:
                  autosave: bool = False,
                  skew: SkewModel | None = None,
                  baseline_kinds: tuple[str, ...] = ("cps", "ring", "rhd"),
-                 gentree_kwargs: dict | None = None):
+                 gentree_kwargs: dict | None = None,
+                 engine: str | None = None):
         self.params = dict(params) if params else None
         self.cache = cache or PlanCache(capacity=capacity, path=cache_path,
                                         autosave=autosave)
         self.skew = skew
         self.baseline_kinds = baseline_kinds
         self.gentree_kwargs = dict(gentree_kwargs or {})
+        # plan-evaluation engine for cold generation / re-ranking:
+        # "fast" (compiled, default) or "reference" (pure-Python oracle)
+        self.engine = engine
         self.calibration: CalibrationResult | None = None
         self._lock = threading.RLock()
 
@@ -124,6 +128,7 @@ class PlannerService:
 
         # ---- cold path: generate, (optionally) re-rank under skew --------
         result = gentree_mod.gentree(topo, size_floats, params=params,
+                                     engine=self.engine,
                                      **self.gentree_kwargs)
         algo, plan = "gentree", result.plan
         decisions = _decisions_to_json(result.decisions)
@@ -141,12 +146,13 @@ class PlannerService:
                                                      size_floats)))
             from .skew import pick_plan_under_skew
             algo, plan, skewed = pick_plan_under_skew(
-                candidates, topo, self.skew, params, unit_bytes=dsize)
+                candidates, topo, self.skew, params, unit_bytes=dsize,
+                engine=self.engine)
             if algo != "gentree":
                 # per-switch decisions describe the discarded GenTree
                 # plan, not the baseline that won — don't mis-report them
                 decisions = {}
-        sim = Simulator(topo, params, unit_bytes=dsize)
+        sim = Simulator(topo, params, unit_bytes=dsize, engine=self.engine)
         predicted = sim.simulate(plan).total
 
         entry = {"plan": plan_to_json(plan), "algo": algo,

@@ -149,36 +149,174 @@ def arrival_gated_time(plan: Plan, topo: TopoNode,
     return max(clock.values()) if clock else 0.0
 
 
+# ---------------------------------------------------------------------------
+# Batched arrival-gated pricing (DESIGN.md §7): the same dataflow as
+# `arrival_gated_time`, but the per-step quantities are precompiled into
+# arrays once per plan and every Monte-Carlo draw advances in lockstep as a
+# row of a (draws, servers) clock matrix. `arrival_gated_time` above stays
+# the reference oracle (equivalence asserted in tests/test_simfast.py).
+# ---------------------------------------------------------------------------
+class _GatedPlan:
+    """Per-step static arrays for the arrival-gated dataflow."""
+
+    def __init__(self, plan: Plan, topo: TopoNode,
+                 params: Mapping[str, GenModelParams] | None,
+                 unit_bytes: int):
+        params = params or PAPER_TABLE5
+        psrv = params.get("server", GenModelParams())
+
+        def _p(level: str) -> GenModelParams:
+            return params.get(level, psrv)
+
+        srv = {s._sid: s for s in topo.servers()}
+        # arrays are indexed by _sid; for a subtree of a larger finalized
+        # tree the ids are a sparse subset, so size by the largest id
+        self.sids = np.array(sorted(srv), dtype=np.int64)
+        self.n = int(self.sids[-1]) + 1 if len(srv) else 0
+        n = self.n
+        scale = unit_bytes / 4.0
+        # static per-server tables
+        alpha_start = np.zeros(n)
+        bw = np.zeros(n)
+        lat = np.zeros(n)
+        r_eps = np.zeros(n)
+        r_wt = np.zeros(n)
+        r_alpha = np.zeros(n)
+        for sid, node in srv.items():
+            lvl = node.parent.level if node.parent is not None else "server"
+            alpha_start[sid] = max(_p(lvl).alpha, psrv.alpha)
+            bw[sid] = node.uplink_bw
+            lat[sid] = node.uplink_latency
+            plvl = _p(node.parent.level if node.parent else "root_sw")
+            r_eps[sid], r_wt[sid] = plvl.epsilon, float(plvl.w_t)
+            r_alpha[sid] = plvl.alpha
+        self.alpha_start, self.lat = alpha_start, lat
+        self.r_eps, self.r_wt, self.r_alpha = r_eps, r_wt, r_alpha
+
+        self.steps = []
+        for st in plan.steps:
+            src = np.fromiter((t.src for t in st.transfers), np.int64,
+                              len(st.transfers))
+            dst = np.fromiter((t.dst for t in st.transfers), np.int64,
+                              len(st.transfers))
+            size = np.fromiter((t.size for t in st.transfers), float,
+                               len(st.transfers))
+            rsrv = np.fromiter((r.server for r in st.reduces), np.int64,
+                               len(st.reduces))
+            cval = np.fromiter(
+                ((r.adds * psrv.gamma + r.mem_ops * psrv.delta) * scale
+                 for r in st.reduces), float, len(st.reduces))
+            send_units = np.bincount(src, weights=size, minlength=n)
+            recv_units = np.bincount(dst, weights=size, minlength=n)
+            senders = np.nonzero(np.bincount(src, minlength=n))[0]
+            rdst = np.nonzero(np.bincount(dst, minlength=n))[0]
+            comp = np.bincount(rsrv, weights=cval, minlength=n)
+            csrv = np.nonzero(np.bincount(rsrv, minlength=n))[0]
+            part = np.union1d(np.union1d(senders, rdst), csrv)
+            if part.size == 0:
+                continue
+            sbw = np.where(bw[senders] != 0.0, bw[senders], 1.0)
+            t_send = np.where(bw[senders] != 0.0,
+                              send_units[senders] * unit_bytes / sbw, 0.0)
+            rbw = np.where(bw[rdst] != 0.0, bw[rdst], 1.0)
+            t_recv = np.where(bw[rdst] != 0.0,
+                              recv_units[rdst] * unit_bytes / rbw, 0.0)
+            self.steps.append({
+                "part": part, "senders": senders, "t_send": t_send,
+                "pairs_src": src, "pairs_dst": dst,
+                "rdst": rdst, "t_recv": t_recv,
+                "recv_units": recv_units[rdst] * scale,
+                "csrv": csrv, "comp": comp[csrv]})
+
+    def times(self, offsets: np.ndarray) -> np.ndarray:
+        """Completion time per draw; offsets rows map positionally onto
+        the sorted server ids (extra columns ignored, missing ones
+        zero-filled), as in the reference."""
+        offsets = np.asarray(offsets, dtype=float)
+        if offsets.ndim == 1:
+            offsets = offsets[None, :]
+        nd, n = offsets.shape[0], self.n
+        clock = np.zeros((nd, n))
+        k = min(len(self.sids), offsets.shape[1])
+        clock[:, self.sids[:k]] = offsets[:, :k]
+        rows = np.arange(nd)[:, None]
+        neg = np.finfo(float).min
+        for sp in self.steps:
+            part, senders, rdst = sp["part"], sp["senders"], sp["rdst"]
+            start = clock + self.alpha_start[None, :]
+            send_done = np.full((nd, n), neg)
+            send_done[:, senders] = (start[:, senders] + sp["t_send"]
+                                     + self.lat[senders])
+            t = start.copy()
+            t[:, senders] = np.maximum(t[:, senders], send_done[:, senders])
+            if rdst.size:
+                psrc, pdst = sp["pairs_src"], sp["pairs_dst"]
+                last = np.full((nd, n), neg)
+                np.maximum.at(last, (rows, pdst[None, :]),
+                              send_done[:, psrc])
+                cnt = np.zeros((nd, n))
+                np.add.at(cnt, (rows, pdst[None, :]),
+                          (send_done[:, psrc]
+                           >= last[:, pdst] - self.r_alpha[pdst]))
+                w = cnt[:, rdst] + 1.0
+                extra = (np.maximum(w - self.r_wt[rdst], 0.0)
+                         * sp["recv_units"] * self.r_eps[rdst])
+                t[:, rdst] = np.maximum(
+                    t[:, rdst], last[:, rdst] + sp["t_recv"] + extra)
+            if sp["csrv"].size:
+                t[:, sp["csrv"]] += sp["comp"]
+            clock[:, part] = t[:, part]
+        if not len(self.sids):
+            return np.zeros(nd)
+        return clock[:, self.sids].max(axis=1)
+
+
+def gated_times(plan: Plan, topo: TopoNode,
+                params: Mapping[str, GenModelParams] | None = None,
+                offsets: np.ndarray | None = None,
+                unit_bytes: int = 4) -> np.ndarray:
+    """Batched `arrival_gated_time`: one row of `offsets` per draw."""
+    gp = _GatedPlan(plan, topo, params, unit_bytes)
+    if offsets is None:
+        offsets = np.zeros((1, gp.n))
+    return gp.times(offsets)
+
+
 def expected_time(plan: Plan, topo: TopoNode, model: SkewModel,
                   params: Mapping[str, GenModelParams] | None = None,
                   unit_bytes: int = 4) -> float:
     """Mean arrival-gated completion time over the model's draws."""
     offs = draw_offsets(model, topo.num_servers())
-    return float(np.mean([
-        arrival_gated_time(plan, topo, params, o, unit_bytes)
-        for o in offs]))
+    return float(np.mean(gated_times(plan, topo, params, offs, unit_bytes)))
 
 
 def pick_plan_under_skew(candidates: Sequence[tuple[str, Plan]],
                          topo: TopoNode, model: SkewModel,
                          params: Mapping[str, GenModelParams] | None = None,
-                         unit_bytes: int = 4
+                         unit_bytes: int = 4, engine: str | None = None
                          ) -> tuple[str, Plan, float]:
     """argmin of simulator cost + arrival-gated skew delta (see module
     docstring); deterministic tie-break on name. The gated model only
     contributes the *difference* skew makes, so at zero skew this reduces
-    to the synchronized simulator ranking."""
+    to the synchronized simulator ranking. Each candidate is compiled once
+    (`_GatedPlan`) and priced over all draws plus the zero-offset baseline
+    in a single batched pass; `engine` selects the synchronized-cost
+    evaluator (fast compiled engine by default)."""
     from repro.core.simulator import Simulator
 
     if not candidates:
         raise ValueError("no candidate plans")
     sim = Simulator(topo, dict(params) if params else None,
-                    unit_bytes=unit_bytes)
+                    unit_bytes=unit_bytes, engine=engine)
+    n = topo.num_servers()
+    offs = draw_offsets(model, n)
     priced = []
     for name, p in candidates:
         sync = sim.simulate(p).total
-        delta = (expected_time(p, topo, model, params, unit_bytes)
-                 - arrival_gated_time(p, topo, params, None, unit_bytes))
+        gp = _GatedPlan(p, topo, params, unit_bytes)
+        # draws + one zero-offset row, one batched evaluation per plan
+        ts = gp.times(np.vstack([offs, np.zeros((1, n))]))
+        delta = float(np.mean(ts[:-1])) - float(ts[-1])
         priced.append((sync + max(delta, 0.0), name, p))
     priced.sort(key=lambda x: (x[0], x[1]))
     cost, name, plan = priced[0]

@@ -1,0 +1,286 @@
+"""Compiled plan-evaluation engine (core.simfast, DESIGN.md §7):
+
+  * routing-index correctness against the reference `path_links` walk;
+  * fast-vs-reference SimResult equivalence (total, per_step, comm,
+    compute, latency, incast_extra) within 1e-9 across every plan builder
+    and every Table-6 topology;
+  * GenTree decision equivalence between the batched fast search and the
+    pre-PR reference search, plus a regression pin of the per-switch
+    algorithm choices so the fast path cannot silently change selection;
+  * batched arrival-gated skew pricing against the per-draw reference;
+  * Step aggregate caching semantics.
+"""
+import numpy as np
+import pytest
+
+from repro.core import plans as plans_mod, topology as topo_mod
+from repro.core.cost_model import PAPER_TABLE5
+from repro.core.gentree import baseline_plan, gentree
+from repro.core.simfast import FastEngine
+from repro.core.simulator import Simulator
+
+TOL = 1e-9
+
+# The paper's six evaluation topologies (Table 6) — SS24/SS32 in-rack,
+# SYM/ASY three-level trees, CDC384 cross-DC — plus small extras.
+TABLE6 = {
+    "SS24": lambda: topo_mod.single_switch(24),
+    "SS32": lambda: topo_mod.single_switch(32),
+    "SYM384": lambda: topo_mod.symmetric_tree(16, 24),
+    "SYM512": lambda: topo_mod.symmetric_tree(16, 32),
+    "ASY384": lambda: topo_mod.asymmetric_tree(16, 32, 16),
+    "CDC384": lambda: topo_mod.cross_dc(),
+}
+SMALL = {
+    "SS15": lambda: topo_mod.single_switch(15),
+    "SYM4x6": lambda: topo_mod.symmetric_tree(4, 6),
+    "ASY-small": lambda: topo_mod.asymmetric_tree(4, 8, 4),
+    "CDC-small": lambda: topo_mod.cross_dc(dc0_middle=2, dc0_servers=4,
+                                           dc1_middle=2, dc1_servers=3),
+    "TPU2x8": lambda: topo_mod.tpu_pod_tree(2, 8),
+}
+
+
+def _builder_plans(topo, size=1e6):
+    """One plan per builder (ring/cps/rhd/hcps/reduce_broadcast), routed
+    over the topology's real server ids."""
+    ids = topo.server_ids()
+    n = len(ids)
+    out = [plans_mod.ring(n, size, servers=ids),
+           plans_mod.cps(n, size, servers=ids),
+           plans_mod.rhd(n, size, servers=ids),
+           plans_mod.reduce_broadcast(n, size, servers=ids)]
+    facs = plans_mod.factorizations(n, max_steps=3)
+    if facs:
+        out.append(plans_mod.hcps(facs[0], size, servers=ids))
+    return out
+
+
+def _assert_equivalent(ref, fast):
+    assert fast.total == pytest.approx(ref.total, abs=TOL)
+    assert fast.comm == pytest.approx(ref.comm, abs=TOL)
+    assert fast.compute == pytest.approx(ref.compute, abs=TOL)
+    assert fast.latency == pytest.approx(ref.latency, abs=TOL)
+    assert fast.incast_extra == pytest.approx(ref.incast_extra, abs=TOL)
+    assert len(fast.per_step) == len(ref.per_step)
+    for a, b in zip(ref.per_step, fast.per_step):
+        assert b == pytest.approx(a, abs=TOL)
+
+
+# ---------------------------------------------------------------------------
+# Routing index
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tname", list(SMALL) + ["SS24", "CDC384"])
+def test_routing_index_matches_path_links(tname):
+    topo = (SMALL.get(tname) or TABLE6[tname])()
+    rx = topo.routing()
+    srv = {s._sid: s for s in topo.servers()}
+    idx = {id(n): i for i, n in enumerate(rx.nodes)}
+    ids = sorted(srv)
+    rng = np.random.default_rng(0)
+    pairs = [(int(a), int(b)) for a, b in
+             rng.integers(0, len(ids), size=(64, 2))]
+    for a, b in pairs:
+        ref = [idx[id(node)] * 2 + (0 if d == "up" else 1)
+               for node, d in topo.path_links(srv[ids[a]], srv[ids[b]])]
+        assert rx.path_link_ids(ids[a], ids[b]) == ref
+
+
+def test_routing_index_rebuilt_on_finalize():
+    topo = topo_mod.single_switch(4)
+    rx1 = topo.routing()
+    topo.children.append(topo_mod._server("extra", 1e9, 1e-6))
+    topo.finalize()
+    rx2 = topo.routing()
+    assert rx2 is not rx1 and rx2.n_servers == 5
+
+
+def test_routing_on_subtree_does_not_corrupt_enclosing_tree():
+    """Simulating a subtree of a finalized tree (its server ids are a
+    sparse subset of the global ids) must not re-finalize it: the parent
+    pointer and the enclosing tree's ids stay intact, and fast ==
+    reference on plans over the subtree's global server ids."""
+    full = topo_mod.symmetric_tree(4, 6)
+    sub = full.children[2]
+    ids_before = full.server_ids()
+    sub_ids = sub.server_ids()
+    plan = plans_mod.cps(len(sub_ids), 1e6, servers=sub_ids)
+    ref = Simulator(sub, PAPER_TABLE5, engine="reference").simulate(plan)
+    fast = Simulator(sub, PAPER_TABLE5, engine="fast").simulate(plan)
+    _assert_equivalent(ref, fast)
+    assert sub.parent is full
+    assert full.server_ids() == ids_before
+
+
+def test_subtree_routing_index_refreshes_after_renumbering():
+    """Editing the enclosing tree and re-finalizing renumbers sids
+    DFS-wide; a subtree's cached index must be discarded, not reused."""
+    full = topo_mod.symmetric_tree(3, 4)
+    sub = full.children[1]
+    stale = sub.routing()
+    # grow an earlier sibling: every sid in `sub` shifts by one
+    full.children[0].children.append(
+        topo_mod._server("extra", 10 * topo_mod.GBPS, 5e-6))
+    full.finalize()
+    rx = sub.routing()
+    assert rx is not stale
+    assert rx.sids == tuple(s._sid for s in sub.servers())
+    ids = sub.server_ids()
+    plan = plans_mod.cps(len(ids), 1e6, servers=ids)
+    _assert_equivalent(
+        Simulator(sub, PAPER_TABLE5, engine="reference").simulate(plan),
+        Simulator(sub, PAPER_TABLE5, engine="fast").simulate(plan))
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence: every builder × every Table-6 topology (+ extras)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tname", list(SMALL))
+def test_fast_matches_reference_small(tname):
+    topo = SMALL[tname]()
+    ref_sim = Simulator(topo, PAPER_TABLE5, engine="reference")
+    fast_sim = Simulator(topo, PAPER_TABLE5, engine="fast")
+    for plan in _builder_plans(topo) + [gentree(topo, 1e6).plan]:
+        _assert_equivalent(ref_sim.simulate(plan), fast_sim.simulate(plan))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("tname", list(TABLE6))
+def test_fast_matches_reference_table6(tname):
+    topo = TABLE6[tname]()
+    ref_sim = Simulator(topo, PAPER_TABLE5, engine="reference")
+    fast_sim = Simulator(topo, PAPER_TABLE5, engine="fast")
+    for plan in _builder_plans(topo):
+        _assert_equivalent(ref_sim.simulate(plan), fast_sim.simulate(plan))
+
+
+def test_engine_flag_and_env(monkeypatch):
+    topo = topo_mod.single_switch(8)
+    with pytest.raises(ValueError):
+        Simulator(topo, engine="warp")
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "reference")
+    assert Simulator(topo).engine == "reference"
+    monkeypatch.delenv("REPRO_SIM_ENGINE")
+    assert Simulator(topo).engine == "fast"
+
+
+def test_unit_bytes_scaling_matches():
+    topo = topo_mod.tpu_pod_tree(2, 8)
+    plan = baseline_plan("cps", topo, 1e6)
+    for unit in (1, 2, 8):
+        ref = Simulator(topo, engine="reference",
+                        unit_bytes=unit).simulate(plan)
+        fast = Simulator(topo, engine="fast",
+                         unit_bytes=unit).simulate(plan)
+        _assert_equivalent(ref, fast)
+
+
+# ---------------------------------------------------------------------------
+# GenTree: batched fast search ≡ reference search, decisions pinned
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("tname", list(SMALL))
+def test_gentree_fast_search_matches_reference(tname):
+    topo_f, topo_r = SMALL[tname](), SMALL[tname]()
+    rf = gentree(topo_f, 1e7, engine="fast")
+    rr = gentree(topo_r, 1e7, engine="reference")
+    assert rf.predicted_time == pytest.approx(rr.predicted_time, abs=TOL)
+    assert set(rf.decisions) == set(rr.decisions)
+    for sw, dr in rr.decisions.items():
+        df = rf.decisions[sw]
+        assert (df.algo, df.factors, df.rearrange) == \
+            (dr.algo, dr.factors, dr.rearrange), sw
+        assert df.cost == pytest.approx(dr.cost, abs=TOL)
+
+
+def _decision_summary(decisions):
+    out = {}
+    for name, d in sorted(decisions.items()):
+        label = d.algo + ("x".join(map(str, d.factors)) if d.factors else "")
+        if d.rearrange:
+            label += "+rearr"
+        key = ("root" if name in ("root", "wan_root")
+               else "dc" if name in ("dc0", "dc1") else "middle")
+        out.setdefault(key, set()).add(label)
+    return {k: sorted(v) for k, v in out.items()}
+
+
+# Regression pin: the per-switch algorithm choices on the Table-6
+# topologies at S=1e8 (matches the pre-PR reference search output). A
+# change here means the fast path silently altered plan selection.
+PINNED_DECISIONS = {
+    "SS24": {"root": ["hcps8x3"]},
+    "SS32": {"root": ["hcps8x4"]},
+    "SYM384": {"middle": ["hcps8x3"], "root": ["hcps2x2x4"]},
+    "SYM512": {"middle": ["hcps8x2x2"], "root": ["hcps2x2x4"]},
+    "ASY384": {"middle": ["hcps8x2", "hcps8x2x2"], "root": ["acps"]},
+    "CDC384": {"dc": ["hcps2x2x2"], "middle": ["hcps8x2", "hcps8x2x2"],
+               "root": ["acps+rearr"]},
+}
+
+
+@pytest.mark.parametrize("tname", list(TABLE6))
+def test_gentree_decisions_pinned_table6(tname):
+    r = gentree(TABLE6[tname](), 1e8, engine="fast")
+    assert _decision_summary(r.decisions) == PINNED_DECISIONS[tname]
+
+
+# ---------------------------------------------------------------------------
+# Batched arrival-gated skew pricing ≡ per-draw reference
+# ---------------------------------------------------------------------------
+def test_gated_times_batch_matches_reference():
+    from repro.planner.skew import (SkewModel, arrival_gated_time,
+                                    draw_offsets, gated_times)
+    for builder in (lambda: topo_mod.single_switch(12),
+                    lambda: topo_mod.symmetric_tree(4, 6),
+                    lambda: topo_mod.cross_dc(dc0_middle=2, dc0_servers=4,
+                                              dc1_middle=2, dc1_servers=3)):
+        topo = builder()
+        n = topo.num_servers()
+        offs = draw_offsets(SkewModel(scale=0.05, draws=5, seed=7), n)
+        for plan in (baseline_plan("ring", topo, 1e6),
+                     baseline_plan("cps", topo, 1e6),
+                     gentree(topo, 1e6).plan):
+            ref = [arrival_gated_time(plan, topo, None, o) for o in offs]
+            bat = gated_times(plan, topo, None, offs)
+            assert np.allclose(ref, bat, atol=TOL, rtol=0.0)
+            z = gated_times(plan, topo)[0]
+            assert z == pytest.approx(
+                arrival_gated_time(plan, topo, None, None), abs=TOL)
+
+
+def test_pick_plan_under_skew_engines_agree():
+    from repro.planner.skew import SkewModel, pick_plan_under_skew
+    topo = topo_mod.single_switch(12)
+    cands = [(k, baseline_plan(k, topo, 1e7)) for k in ("ring", "cps")]
+    for scale in (0.0, 0.02, 0.2):
+        model = SkewModel(scale=scale, draws=6, seed=1)
+        nf, _, cf = pick_plan_under_skew(cands, topo, model, engine="fast")
+        nr, _, cr = pick_plan_under_skew(cands, topo, model,
+                                         engine="reference")
+        assert nf == nr
+        assert cf == pytest.approx(cr, abs=TOL)
+
+
+# ---------------------------------------------------------------------------
+# Step aggregate caching (plans.Step)
+# ---------------------------------------------------------------------------
+def test_step_caches_and_invalidates_on_append():
+    st = plans_mod.Step()
+    st.transfers.append(plans_mod.Transfer(0, 1, 4.0))
+    first = st.recv_bytes_by_dst()
+    assert first == {1: 4.0}
+    assert st.recv_bytes_by_dst() is first          # cached
+    st.transfers.append(plans_mod.Transfer(2, 1, 2.0))
+    assert st.recv_bytes_by_dst() == {1: 6.0}       # length change → rebuilt
+    assert st.fan_in_by_dst() == {1: 2}
+    st.invalidate_caches()
+    assert st.recv_bytes_by_dst() == {1: 6.0}
+
+
+def test_step_cache_survives_merge_pattern():
+    """_merge_concurrent extends steps after they were priced; the length
+    guard must invalidate."""
+    a = plans_mod.Step(transfers=[plans_mod.Transfer(0, 1, 1.0)])
+    _ = a.fan_in_by_dst()
+    a.transfers.extend([plans_mod.Transfer(1, 0, 1.0)])
+    assert a.fan_in_by_dst() == {1: 1, 0: 1}

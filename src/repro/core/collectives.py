@@ -5,12 +5,15 @@ a named mesh axis, built from `lax.ppermute` / `lax.all_to_all` /
 `lax.all_gather`:
 
   * ring  — 2(N−1) ppermute rounds, fan-in-2 chained adds (ε-optimal)
-  * rhd   — 2·log N ppermute rounds, pairwise halving/doubling
+  * rhd   — 2·log N ppermute rounds, pairwise halving/doubling (any N;
+            non-powers-of-two fold the χ(N) extras in and out)
   * cps   — one all_to_all + ONE fused N-ary reduce (δ-optimal; the fused
             reduce is the Pallas `fused_reduce` kernel on TPU)
   * hcps  — m staged sub-group exchanges with fan-ins f_0..f_{m−1}
             (the paper's trade-off point between δ and ε optimality)
   * psum  — XLA's native all-reduce (baseline / "auto")
+  * plan  — a lowered GenTree plan (`core.lower.CompiledSchedule`),
+            executed round-for-round (DESIGN.md §8)
 
 All functions assume they run inside shard_map with `axis_name` a mesh axis
 of size n, and operate on a flat per-device array `x` (identical shape on
@@ -70,40 +73,65 @@ def all_gather_ring(x: jax.Array, axis_name: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Recursive Halving & Doubling (n must be a power of two)
+# Recursive Halving & Doubling (any axis size; non-powers-of-two use the
+# fold-in/fold-out patch `plans.rhd` models — the Table-1 χ(N) extra steps)
 # ---------------------------------------------------------------------------
+def _rhd_pow2(n: int) -> tuple[int, int]:
+    pow2 = 1 << (n.bit_length() - 1)
+    return pow2, n - pow2
+
+
 def reduce_scatter_rhd(x: jax.Array, axis_name: str) -> jax.Array:
+    """RHD halving phase. For non-power-of-two n, devices pow2..n-1 first
+    fold their whole vector into partner idx-pow2 and sit out the halving;
+    the returned shard is size/pow2 (meaningful on the pow2 core — compose
+    with all_gather_rhd, whose fold-out re-broadcasts to the extras).
+    x.size must be a multiple of pow2 (allreduce pads accordingly)."""
     n = lax.psum(1, axis_name)
-    assert (n & (n - 1)) == 0, "RHD requires power-of-two axis size"
+    pow2, extra = _rhd_pow2(n)
     idx = lax.axis_index(axis_name)
-    cur = x.reshape((n, -1))
-    d = n // 2
+    flat = x.reshape(-1)
+    if extra:
+        recv = lax.ppermute(flat, axis_name,
+                            [(pow2 + e, e) for e in range(extra)])
+        flat = flat + recv          # non-receivers get zeros: unchanged
+    cur = flat.reshape((pow2, -1))
+    d = pow2 // 2
     while d >= 1:
         m = cur.shape[0]
         lower, upper = cur[: m // 2], cur[m // 2:]
         bit = (idx // d) % 2
         keep = lax.select(bit == 1, upper, lower)
         send = lax.select(bit == 1, lower, upper)
-        recv = lax.ppermute(send, axis_name, [(i, i ^ d) for i in range(n)])
+        recv = lax.ppermute(send, axis_name,
+                            [(i, i ^ d) for i in range(pow2)])
         cur = keep + recv
         d //= 2
     return cur.reshape(-1)
 
 
 def all_gather_rhd(x: jax.Array, axis_name: str) -> jax.Array:
+    """RHD doubling phase; for non-power-of-two n a final fold-out step
+    ships the full vector from device e to its folded partner pow2+e."""
     n = lax.psum(1, axis_name)
-    assert (n & (n - 1)) == 0
+    pow2, extra = _rhd_pow2(n)
     idx = lax.axis_index(axis_name)
     cur = x.reshape((1, -1))
     d = 1
-    while d < n:
-        recv = lax.ppermute(cur, axis_name, [(i, i ^ d) for i in range(n)])
+    while d < pow2:
+        recv = lax.ppermute(cur, axis_name,
+                            [(i, i ^ d) for i in range(pow2)])
         bit = (idx // d) % 2
         lower = lax.select(bit == 1, recv, cur)
         upper = lax.select(bit == 1, cur, recv)
         cur = jnp.concatenate([lower, upper], axis=0)
         d *= 2
-    return cur.reshape(-1)
+    full = cur.reshape(-1)
+    if extra:
+        recv = lax.ppermute(full, axis_name,
+                            [(e, pow2 + e) for e in range(extra)])
+        full = jnp.where(idx >= pow2, recv, full)
+    return full
 
 
 # ---------------------------------------------------------------------------
@@ -208,20 +236,36 @@ def all_gather_hcps(x: jax.Array, axis_name: str,
 # ---------------------------------------------------------------------------
 # Composed AllReduce
 # ---------------------------------------------------------------------------
+def _pad_multiple(n: int, strategy: str) -> int:
+    """Flat size must divide by this for the strategy's schedule: the axis
+    size, except non-power-of-two RHD also halves down to the pow2 core."""
+    if strategy == "rhd":
+        pow2, extra = _rhd_pow2(n)
+        if extra:
+            return n * pow2 // math.gcd(n, pow2)
+    return n
+
+
 def allreduce(x: jax.Array, axis_name: str, strategy: str = "psum",
               factors: Sequence[int] | None = None,
-              fused_reduce: Callable | None = None) -> jax.Array:
+              fused_reduce: Callable | None = None,
+              schedule=None) -> jax.Array:
     """AllReduce a per-device array with the selected plan type.
 
     Pads to a multiple of the axis size; returns the same shape as x.
-    strategy ∈ {psum, ring, rhd, cps, hcps}.
+    strategy ∈ {psum, ring, rhd, cps, hcps, plan}; "plan" executes a
+    `core.lower.CompiledSchedule` (a lowered GenTree plan) passed as
+    `schedule`.
     """
     if strategy == "psum":
         return lax.psum(x, axis_name)
+    if strategy == "plan":
+        assert schedule is not None, "strategy='plan' needs a schedule"
+        return schedule.allreduce(x, axis_name, fused_reduce=fused_reduce)
     n = lax.psum(1, axis_name)
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1)
-    pad = (-flat.size) % n
+    pad = (-flat.size) % _pad_multiple(n, strategy)
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
     if strategy == "ring":
@@ -247,15 +291,27 @@ def allreduce(x: jax.Array, axis_name: str, strategy: str = "psum",
 def allreduce_planned(x: jax.Array, axis_name: str, *,
                       service=None,
                       fused_reduce: Callable | None = None) -> jax.Array:
-    """AllReduce whose plan type is chosen by the PlannerService (cached,
-    GenModel-priced — DESIGN.md §5). The lookup happens at trace time (the
-    axis size and per-device shard size are static), so the selected
-    schedule is staged straight into the jitted computation; warm lookups
-    are a cache probe, not a GenTree run.
+    """AllReduce that executes the PlannerService's GenTree plan directly
+    (cached, GenModel-priced — DESIGN.md §5/§8). The lookup + lowering
+    happen at trace time (axis size and per-device shard size are static),
+    so the compiled schedule's ppermute rounds are staged straight into
+    the jitted computation; warm lookups are a cache probe, not a GenTree
+    run. Falls back to the flat plan-type labels only if the plan cannot
+    be lowered (e.g. a legacy unannotated cache entry).
     """
     from repro.planner.service import default_service
     svc = service or default_service()
     n = lax.psum(1, axis_name)        # static: psum of a python int
+    if int(n) < 2:
+        return x
+    from repro.core.lower import LoweringError
+    try:
+        resp = svc.get_axis_executable(axis_name, int(n), float(x.size))
+    except LoweringError:
+        resp = None
+    if resp is not None and resp.schedule is not None:
+        return resp.schedule.allreduce(x, axis_name,
+                                       fused_reduce=fused_reduce)
     plans = svc.get_axis_plans([(axis_name, int(n))], float(x.size))
     if not plans:
         return lax.psum(x, axis_name)
@@ -266,16 +322,32 @@ def allreduce_planned(x: jax.Array, axis_name: str, *,
 
 def reduce_scatter(x: jax.Array, axis_name: str, strategy: str = "psum",
                    factors: Sequence[int] | None = None,
-                   fused_reduce: Callable | None = None) -> jax.Array:
-    """ReduceScatter with the selected plan type; x padded to axis multiple."""
+                   fused_reduce: Callable | None = None,
+                   schedule=None) -> jax.Array:
+    """ReduceScatter with the selected plan type; x padded to axis multiple.
+
+    Shape contract: every strategy returns the FLAT (chunk,) shard —
+    device i holds slice i of the summed, padded vector. (The psum path
+    once used `tiled=False` on the (n, chunk) reshape, which hands back a
+    (1, chunk) slab instead of the flat shard the manual schedules
+    return.) Non-power-of-two rhd shards over its pow2 core instead —
+    devices beyond the core return an UNREDUCED slice of their own input
+    (they sit out the halving, receiving zeros in every round); only
+    composition with all_gather_rhd, whose fold-out overwrites them,
+    yields a meaningful result there.
+    """
     n = lax.psum(1, axis_name)
+    if strategy == "plan":
+        assert schedule is not None, "strategy='plan' needs a schedule"
+        return schedule.reduce_scatter(x, axis_name,
+                                       fused_reduce=fused_reduce)
     flat = x.reshape(-1)
-    pad = (-flat.size) % n
+    pad = (-flat.size) % _pad_multiple(n, strategy)
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), x.dtype)])
     if strategy == "psum":
-        return lax.psum_scatter(flat.reshape(n, -1), axis_name,
-                                scatter_dimension=0, tiled=False)
+        return lax.psum_scatter(flat, axis_name,
+                                scatter_dimension=0, tiled=True)
     if strategy == "ring":
         return reduce_scatter_ring(flat, axis_name)
     if strategy == "rhd":

@@ -135,11 +135,11 @@ def _exchange_steps_direct(holders: list[dict[int, int]],
         for b, h in hmap.items():
             d = dest[b]
             if h != d:
-                st.transfers.append(Transfer(h, d, unit))
+                st.transfers.append(Transfer(h, d, unit, blocks=(b,)))
             recv_count[(d, b)] = recv_count.get((d, b), 0) + 1
-    for (d, _b), c in recv_count.items():
+    for (d, b), c in recv_count.items():
         if c > 1:
-            st.reduces.append(ReduceOp(d, c, unit))
+            st.reduces.append(ReduceOp(d, c, unit, blocks=(b,)))
     return [st]
 
 
@@ -172,10 +172,11 @@ def _exchange_steps_hcps(holders: list[dict[int, int]],
                 for g in group:
                     h = g[b]
                     if h != recv:
-                        st.transfers.append(Transfer(h, recv, unit))
+                        st.transfers.append(Transfer(h, recv, unit,
+                                                     blocks=(b,)))
                     fan += 1
                 if fan > 1:
-                    st.reduces.append(ReduceOp(recv, fan, unit))
+                    st.reduces.append(ReduceOp(recv, fan, unit, blocks=(b,)))
                 merged[b] = recv
             nxt.append(merged)
         cur = nxt
@@ -186,20 +187,36 @@ def _exchange_steps_hcps(holders: list[dict[int, int]],
 
 def _exchange_steps_chain(holders: list[dict[int, int]],
                           dest: dict[int, int], unit: float) -> list[Step]:
-    """Ring-like pairwise chain across the c copies: c-1 steps, fan-in 2."""
+    """Ring-like pairwise chain across the c copies: c-1 steps, fan-in 2.
+
+    Per block the chain visits every child's copy, ordered so a copy
+    already sitting on the destination server is folded LAST — the chain
+    then ends at dest with no extra hop. Blocks whose destination holds no
+    copy need one trailing movement step. (The pre-block-IR version folded
+    the accumulator "at dest" on the last step even when the last child's
+    copy never moved there — unexecutable and underpriced.)"""
     c = len(holders)
-    steps: list[Step] = []
-    acc = {b: holders[0][b] for b in holders[0]}
-    for i in range(1, c):
-        st = Step()
-        for b, h in acc.items():
-            nxt = dest[b] if i == c - 1 else holders[i][b]
-            src = h
-            if src != nxt:
-                st.transfers.append(Transfer(src, nxt, unit))
-            st.reduces.append(ReduceOp(nxt, 2, unit))
-            acc[b] = nxt
-        steps.append(st)
+    steps = [Step() for _ in range(c - 1)]
+    move = Step()
+    for b in holders[0]:
+        hs = [h[b] for h in holders]
+        order = list(range(c))
+        for j, h in enumerate(hs):
+            if h == dest[b]:
+                order = order[:j] + order[j + 1:] + [j]
+                break
+        acc = hs[order[0]]
+        for k, j in enumerate(order[1:]):
+            nxt = hs[j]
+            if acc != nxt:
+                steps[k].transfers.append(Transfer(acc, nxt, unit,
+                                                   blocks=(b,)))
+            steps[k].reduces.append(ReduceOp(nxt, 2, unit, blocks=(b,)))
+            acc = nxt
+        if acc != dest[b]:
+            move.transfers.append(Transfer(acc, dest[b], unit, blocks=(b,)))
+    if move.transfers:
+        steps.append(move)
     return steps
 
 
@@ -220,8 +237,9 @@ def _exchange_steps_rhd(holders: list[dict[int, int]],
                     dest[blk] if dest[blk] in (a[blk], b_[blk]) else a[blk])
                 for side in (a[blk], b_[blk]):
                     if side != recv:
-                        st.transfers.append(Transfer(side, recv, unit))
-                st.reduces.append(ReduceOp(recv, 2, unit))
+                        st.transfers.append(Transfer(side, recv, unit,
+                                                     blocks=(blk,)))
+                st.reduces.append(ReduceOp(recv, 2, unit, blocks=(blk,)))
                 merged[blk] = recv
             nxt.append(merged)
         cur = nxt
@@ -241,7 +259,7 @@ def _rearrange_step(child_place: dict[int, list[int]], subset: list[int],
             tgt = subset[i % len(subset)]
             i += 1
             if tgt != srv:
-                st.transfers.append(Transfer(srv, tgt, unit))
+                st.transfers.append(Transfer(srv, tgt, unit, blocks=(b,)))
             new_place[tgt].append(b)
     return st, new_place
 
@@ -249,10 +267,13 @@ def _rearrange_step(child_place: dict[int, list[int]], subset: list[int],
 # ---------------------------------------------------------------------------
 # Lowered (array-form) candidate builders — the batched search path.
 #
-# A candidate step is (src, dst, red_srv, fan): integer arrays of transfer
-# endpoints plus the reduce servers, every transfer/reduce sized `unit`.
-# Each builder mirrors its `_exchange_steps_*` IR twin transfer-for-transfer
-# (same multiset per step), so compiled costs match the reference engine.
+# A candidate step is (src, dst, blk, red_srv, red_blk, fan): integer arrays
+# of transfer endpoints + the block id each transfer carries, plus the
+# reduce servers and the block each reduce folds; every transfer/reduce is
+# sized `unit`. Each builder mirrors its `_exchange_steps_*` IR twin
+# transfer-for-transfer (same multiset per step), so compiled costs match
+# the reference engine; the block arrays ride along for free and are only
+# touched when the winner is materialized back into (executable) Plan IR.
 # ---------------------------------------------------------------------------
 def _holder_row(child_place: dict[int, list[int]], n_total: int) -> np.ndarray:
     """block → holding server, as a dense array (the array `_index_holders`)."""
@@ -263,12 +284,14 @@ def _holder_row(child_place: dict[int, list[int]], n_total: int) -> np.ndarray:
 
 
 def _lowered_direct(H: np.ndarray, D: np.ndarray) -> list[tuple]:
-    c = H.shape[0]
+    c, B = H.shape
     mask = H != D
     src = H[mask]
     dst = np.broadcast_to(D, H.shape)[mask]
+    blk = np.broadcast_to(np.arange(B), H.shape)[mask]
     rsrv = D if c > 1 else D[:0]
-    return [(src, dst, rsrv, c)]
+    rblk = np.arange(B) if c > 1 else np.arange(0)
+    return [(src, dst, blk, rsrv, rblk, c)]
 
 
 def _lowered_hcps(H: np.ndarray, D: np.ndarray,
@@ -293,25 +316,44 @@ def _lowered_hcps(H: np.ndarray, D: np.ndarray,
         mask = G != recv[:, None, :]
         src = G[mask]
         dst = np.broadcast_to(recv[:, None, :], G.shape)[mask]
-        steps.append((src, dst, recv.ravel(), f))
+        blk = np.broadcast_to(blocks, G.shape)[mask]
+        steps.append((src, dst, blk, recv.ravel(),
+                      np.broadcast_to(blocks, (ng, B)).ravel(), f))
         cur = recv
         radix *= f
     return steps
 
 
 def _lowered_chain(H: np.ndarray, D: np.ndarray) -> list[tuple]:
-    c = H.shape[0]
-    acc = H[0]
+    c, B = H.shape
+    blocks = np.arange(B)
+    # Per block, fold the copy already sitting on the destination LAST
+    # (mirrors _exchange_steps_chain): stable argsort on a key that pushes
+    # the first dest-holding child to the end of the visit order.
+    eq = H == D
+    has_dest = eq.any(axis=0)
+    first_dest = np.argmax(eq, axis=0)
+    child = np.arange(c)[:, None]
+    key = np.where(has_dest & (child == first_dest), c, child)
+    order = np.argsort(np.broadcast_to(key, H.shape), axis=0, kind="stable")
+    Hord = np.take_along_axis(H, order, axis=0)
+    acc = Hord[0]
     steps = []
     for i in range(1, c):
-        nxt = D if i == c - 1 else H[i]
+        nxt = Hord[i]
         mask = acc != nxt
-        steps.append((acc[mask], nxt[mask], nxt, 2))
+        steps.append((acc[mask], nxt[mask], blocks[mask], nxt, blocks, 2))
         acc = nxt
+    mask = acc != D
+    if mask.any():
+        steps.append((acc[mask], D[mask], blocks[mask],
+                      D[:0], blocks[:0], 2))
     return steps
 
 
 def _lowered_rhd(H: np.ndarray, D: np.ndarray) -> list[tuple]:
+    B = H.shape[1]
+    blocks = np.arange(B)
     cur = H
     steps = []
     while cur.shape[0] > 1:
@@ -325,14 +367,17 @@ def _lowered_rhd(H: np.ndarray, D: np.ndarray) -> list[tuple]:
         src = np.concatenate([a[ma], b[mb]])
         dst = np.concatenate([np.broadcast_to(recv, a.shape)[ma],
                               np.broadcast_to(recv, b.shape)[mb]])
-        steps.append((src, dst, recv.ravel(), 2))
+        bb = np.broadcast_to(blocks, a.shape)
+        blk = np.concatenate([bb[ma], bb[mb]])
+        steps.append((src, dst, blk, recv.ravel(),
+                      np.broadcast_to(blocks, recv.shape).ravel(), 2))
         cur = recv
     return steps
 
 
 def _compile_lowered(eng, steps: list[tuple], unit: float) -> list:
     out = []
-    for src, dst, rsrv, fan in steps:
+    for src, dst, _blk, rsrv, _rblk, fan in steps:
         out.append(eng.compile_arrays(
             src, dst, unit, rsrv,
             (fan - 1) * unit, (fan + 1) * unit))
@@ -342,11 +387,13 @@ def _compile_lowered(eng, steps: list[tuple], unit: float) -> list:
 def _materialize(steps: list[tuple], unit: float) -> list[Step]:
     """Winning lowered candidate → Plan IR (only the winner pays this)."""
     out = []
-    for src, dst, rsrv, fan in steps:
+    for src, dst, blk, rsrv, rblk, fan in steps:
         st = Step()
-        st.transfers = [Transfer(s, d, unit)
-                        for s, d in zip(src.tolist(), dst.tolist())]
-        st.reduces = [ReduceOp(r, fan, unit) for r in rsrv.tolist()]
+        st.transfers = [Transfer(s, d, unit, blocks=(b,))
+                        for s, d, b in zip(src.tolist(), dst.tolist(),
+                                           blk.tolist())]
+        st.reduces = [ReduceOp(r, fan, unit, blocks=(b,))
+                      for r, b in zip(rsrv.tolist(), rblk.tolist())]
         out.append(st)
     return out
 
@@ -369,11 +416,14 @@ def _merge_concurrent(step_lists: list[list[Step]]) -> list[Step]:
 
 
 def _mirror(steps: list[Step]) -> list[Step]:
-    """AllGather = reversed ReduceScatter with src/dst swapped, no reduces."""
+    """AllGather = reversed ReduceScatter with src/dst swapped, no reduces.
+    Block annotations carry over: the mirrored transfer redistributes the
+    finished value of the same blocks back along the reduce path."""
     out = []
     for st in reversed(steps):
         m = Step()
-        m.transfers = [Transfer(t.dst, t.src, t.size) for t in st.transfers]
+        m.transfers = [Transfer(t.dst, t.src, t.size, blocks=t.blocks)
+                       for t in st.transfers]
         out.append(m)
     return out
 
@@ -596,7 +646,8 @@ def gentree(topo: TopoNode, size: float,
 
     rs_steps = [st for lvl in rs_levels for st in lvl]
     ag_steps = _mirror(rs_steps)
-    full = Plan("gentree", n_total, size, steps=rs_steps + ag_steps)
+    full = Plan("gentree", n_total, size, steps=rs_steps + ag_steps,
+                num_blocks=n_total)
     return GenTreeResult(plan=full, decisions=decisions,
                          predicted_time=sim.simulate(full).total)
 

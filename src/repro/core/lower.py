@@ -1,0 +1,563 @@
+"""Lowering: block-annotated Plan IR → executable shard_map schedules
+(DESIGN.md §8).
+
+`lower_plan` compiles any block-annotated `Plan` (the flat builders in
+`core.plans`, GenTree output, baseline plans) into a `CompiledSchedule`:
+a sequence of `lax.ppermute` rounds plus N-ary fold phases that runs
+inside `shard_map` over a named mesh axis of size plan.n. This closes the
+gap between the priced IR and the executed collective — the same Plan the
+simulator prices is what the devices run.
+
+Pipeline per synchronized Step:
+
+  1. *expand* — every Transfer/ReduceOp is split into unit-block moves
+     (src, dst, block) / folds (dst, block, fan) using the block identity
+     recorded by the builders; server ids map to mesh indices through the
+     placement map.
+  2. *validate* — a symbolic dataflow tracks, per (device, block), the
+     bitmask of server contributions held. Fold operands must be pairwise
+     disjoint (else: duplicate block reduce), the ReduceOp fan_in must
+     match the incoming copies (± the resident copy), and after the final
+     step every device must hold every block's full contribution set
+     (all-gather completeness). Violations raise `LoweringError` with the
+     offending step/server/block.
+  3. *schedule* — the step's moves are greedily edge-colored into partial
+     permutations (each device sends ≤1 and receives ≤1 block per round —
+     a valid `ppermute`), received values land in a staging buffer, and
+     fold phases combine staged copies (plus, where the IR says so, the
+     device's resident partial) with one N-ary reduction per fold — the
+     δ-optimal single-pass fold, routed through the Pallas `fused_reduce`
+     kernel when the caller provides it.
+
+The ReduceScatter/AllGather boundary (the step after the last fold) is
+detected so ZeRO-3 can run the two halves separately; when num_blocks is
+a multiple of n a canonical reorder round is appended so
+`reduce_scatter()` yields device i's contiguous shard i (and
+`all_gather()` un-reorders before mirroring), matching the flat
+collectives' shard contract.
+
+`run_numpy` executes the identical schedule on a (n, size) numpy matrix —
+the no-JAX reference used by the hypothesis equivalence suite.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from .plans import Plan
+
+
+class LoweringError(ValueError):
+    """A Plan that cannot be compiled into an executable schedule."""
+
+
+# ---------------------------------------------------------------------------
+# Compiled structures (numpy constants, indexed by mesh position)
+# ---------------------------------------------------------------------------
+@dataclass(eq=False)
+class PermRound:
+    """One partial permutation. Each device sends at most one *payload*
+    per round — a stack of up to W block rows to a single peer (all the
+    step's moves between one (src, dst) pair coalesce into one payload,
+    so e.g. RHD's half-vector exchange is ONE ppermute, not size/2 of
+    them); -1 entries pad payloads narrower than the round width."""
+    perm: tuple[tuple[int, int], ...]   # (src_mesh, dst_mesh) pairs
+    send_blks: np.ndarray               # (n, W) block rows sent, -1 = pad
+    recv_off: np.ndarray                # (n,) first staging row, -1 = none
+
+
+@dataclass(eq=False)
+class FoldPhase:
+    """One fold slot: per device, which staged copies (plus optionally the
+    resident partial) collapse into which block row."""
+    blk: np.ndarray                     # (n,) target block row, -1 = idle
+    ops: np.ndarray                     # (n, K) staging rows, -1 = masked
+    include_self: np.ndarray            # (n,) bool: resident partial is an operand
+
+
+@dataclass(eq=False)
+class ExecStep:
+    rounds: list[PermRound] = field(default_factory=list)
+    n_slots: int = 0
+    folds: list[FoldPhase] = field(default_factory=list)
+
+
+@dataclass(eq=False)
+class CompiledSchedule:
+    """An executable AllReduce: run inside shard_map over `axis_name`."""
+    plan_name: str
+    n: int
+    num_blocks: int
+    rs: list[ExecStep]                  # ReduceScatter half
+    ag: list[ExecStep]                  # AllGather half
+    owner_of_block: np.ndarray          # (num_blocks,) mesh index post-RS
+    # canonical-shard support (num_blocks % n == 0): device i's shard is
+    # blocks [i*k, (i+1)*k) after the reorder round
+    blocks_per_shard: int | None
+    reorder: ExecStep | None            # post-RS: owner(b) → b // k
+    unorder: ExecStep | None            # pre-AG inverse of `reorder`
+    placement: tuple[int, ...]          # server id at each mesh index
+
+    # ---- stats -------------------------------------------------------------
+    def total_rounds(self) -> int:
+        return sum(len(st.rounds) for st in self.rs + self.ag)
+
+    def describe(self) -> str:
+        return (f"{self.plan_name}: n={self.n} blocks={self.num_blocks} "
+                f"steps={len(self.rs)}+{len(self.ag)} "
+                f"ppermute_rounds={self.total_rounds()}")
+
+    # ---- jax execution (call inside shard_map) -----------------------------
+    def _run_steps(self, steps: Sequence[ExecStep], buf, axis_name: str,
+                   fused_reduce: Callable | None):
+        import jax.numpy as jnp
+        from jax import lax
+
+        idx = lax.axis_index(axis_name)
+        chunk = buf.shape[1]
+        zero = jnp.zeros((chunk,), buf.dtype)
+        for st in steps:
+            if not st.rounds and not st.folds:
+                continue
+            stage = jnp.zeros((max(st.n_slots, 1), chunk), buf.dtype)
+            for rd in st.rounds:
+                w = rd.send_blks.shape[1]
+                sb = jnp.asarray(rd.send_blks)[idx]          # (W,)
+                rows = [jnp.where(
+                    sb[j] >= 0,
+                    lax.dynamic_index_in_dim(buf, jnp.maximum(sb[j], 0),
+                                             0, keepdims=False),
+                    zero) for j in range(w)]
+                recv = lax.ppermute(jnp.stack(rows), axis_name,
+                                    list(rd.perm))           # (W, chunk)
+                off = jnp.asarray(rd.recv_off)[idx]
+                safe = jnp.maximum(off, 0)
+                cur = lax.dynamic_slice(stage, (safe, 0), (w, chunk))
+                stage = lax.dynamic_update_slice(
+                    stage, jnp.where(off >= 0, recv, cur), (safe, 0))
+            for fd in st.folds:
+                blk = jnp.asarray(fd.blk)[idx]
+                safeb = jnp.maximum(blk, 0)
+                own = lax.dynamic_index_in_dim(buf, safeb, 0,
+                                               keepdims=False)
+                rows = []
+                for j in range(fd.ops.shape[1]):
+                    s = jnp.asarray(fd.ops[:, j])[idx]
+                    r = lax.dynamic_index_in_dim(stage, jnp.maximum(s, 0),
+                                                 0, keepdims=False)
+                    rows.append(jnp.where(s >= 0, r, zero))
+                rows.append(jnp.where(jnp.asarray(fd.include_self)[idx],
+                                      own, zero))
+                stacked = jnp.stack(rows, axis=0)
+                if fused_reduce is not None and stacked.shape[0] > 1:
+                    folded = fused_reduce(stacked).astype(buf.dtype)
+                else:
+                    folded = stacked.sum(axis=0)
+                buf = lax.dynamic_update_index_in_dim(
+                    buf, jnp.where(blk >= 0, folded, own), safeb, 0)
+        return buf
+
+    def _check_axis(self, axis_name: str) -> None:
+        from jax import lax
+        n = lax.psum(1, axis_name)      # static under shard_map
+        if int(n) != self.n:
+            raise LoweringError(
+                f"schedule {self.plan_name!r} compiled for {self.n} "
+                f"devices; mesh axis {axis_name!r} has {int(n)}")
+
+    def allreduce(self, x, axis_name: str, *,
+                  fused_reduce: Callable | None = None):
+        """Full AllReduce of a per-device array; same shape out."""
+        import jax.numpy as jnp
+        self._check_axis(axis_name)
+        shape = x.shape
+        flat = x.reshape(-1)
+        pad = (-flat.size) % self.num_blocks
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        buf = flat.reshape(self.num_blocks, -1)
+        buf = self._run_steps(self.rs, buf, axis_name, fused_reduce)
+        buf = self._run_steps(self.ag, buf, axis_name, fused_reduce)
+        full = buf.reshape(-1)
+        if pad:
+            full = full[:-pad]
+        return full.reshape(shape)
+
+    def reduce_scatter(self, x, axis_name: str, *,
+                       fused_reduce: Callable | None = None):
+        """RS half: flat per-device x → canonical shard i on device i."""
+        import jax.numpy as jnp
+        from jax import lax
+        if self.blocks_per_shard is None:
+            raise LoweringError(
+                f"plan {self.plan_name!r} shards {self.num_blocks} blocks "
+                f"over {self.n} devices — no canonical per-device shard; "
+                "use allreduce()")
+        self._check_axis(axis_name)
+        flat = x.reshape(-1)
+        pad = (-flat.size) % self.num_blocks
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        buf = flat.reshape(self.num_blocks, -1)
+        buf = self._run_steps(self.rs, buf, axis_name, fused_reduce)
+        if self.reorder is not None:
+            buf = self._run_steps([self.reorder], buf, axis_name, None)
+        k = self.blocks_per_shard
+        idx = lax.axis_index(axis_name)
+        return lax.dynamic_slice_in_dim(buf, idx * k, k, axis=0).reshape(-1)
+
+    def all_gather(self, shard, axis_name: str):
+        """AG half: canonical shard i on device i → full flat vector."""
+        import jax.numpy as jnp
+        from jax import lax
+        if self.blocks_per_shard is None:
+            raise LoweringError(
+                f"plan {self.plan_name!r} has no canonical shard layout; "
+                "use allreduce()")
+        self._check_axis(axis_name)
+        k = self.blocks_per_shard
+        flat = shard.reshape(-1)
+        buf = jnp.zeros((self.num_blocks, flat.size // k), flat.dtype)
+        idx = lax.axis_index(axis_name)
+        buf = lax.dynamic_update_slice_in_dim(
+            buf, flat.reshape(k, -1), idx * k, axis=0)
+        if self.unorder is not None:
+            buf = self._run_steps([self.unorder], buf, axis_name, None)
+        buf = self._run_steps(self.ag, buf, axis_name, None)
+        return buf.reshape(-1)
+
+    # ---- numpy execution (reference; tests) --------------------------------
+    def _run_steps_numpy(self, steps: Sequence[ExecStep],
+                         buf: np.ndarray) -> np.ndarray:
+        n = self.n
+        for st in steps:
+            stage = np.zeros((n, max(st.n_slots, 1), buf.shape[2]),
+                             buf.dtype)
+            for rd in st.rounds:
+                w = rd.send_blks.shape[1]
+                payload = {}
+                for s, _ in rd.perm:
+                    rows = np.zeros((w, buf.shape[2]), buf.dtype)
+                    for j, b in enumerate(rd.send_blks[s]):
+                        if b >= 0:
+                            rows[j] = buf[s, b]
+                    payload[s] = rows
+                for s, d in rd.perm:
+                    off = rd.recv_off[d]
+                    stage[d, off:off + w] = payload[s]
+            for fd in st.folds:
+                new = {}
+                for m in range(n):
+                    if fd.blk[m] < 0:
+                        continue
+                    acc = np.zeros(buf.shape[2], np.float64)
+                    for s in fd.ops[m]:
+                        if s >= 0:
+                            acc = acc + stage[m, s]
+                    if fd.include_self[m]:
+                        acc = acc + buf[m, fd.blk[m]]
+                    new[m] = acc.astype(buf.dtype)
+                for m, v in new.items():
+                    buf[m, fd.blk[m]] = v
+        return buf
+
+    def run_numpy(self, X: np.ndarray) -> np.ndarray:
+        """Execute on a (n, size) matrix of per-device contributions;
+        returns the (n, size) per-device results (all rows == column sums
+        for a valid plan). Pure numpy mirror of the jax path."""
+        X = np.asarray(X)
+        if X.shape[0] != self.n:
+            raise LoweringError(f"expected {self.n} device rows")
+        size = X.shape[1]
+        pad = (-size) % self.num_blocks
+        if pad:
+            X = np.concatenate(
+                [X, np.zeros((self.n, pad), X.dtype)], axis=1)
+        buf = X.reshape(self.n, self.num_blocks, -1).copy()
+        buf = self._run_steps_numpy(self.rs, buf)
+        buf = self._run_steps_numpy(self.ag, buf)
+        out = buf.reshape(self.n, -1)
+        return out[:, :size] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# Compilation helpers
+# ---------------------------------------------------------------------------
+def _color_rounds(moves: list[tuple[int, int, int]], n: int
+                  ) -> tuple[list[PermRound], int, dict[int, int]]:
+    """Coalesce the step's moves per (src, dst) pair into one payload
+    each, then greedily edge-color the payloads into partial permutations
+    (≤1 send and ≤1 receive per device per round). Returns rounds, the
+    staging depth, and each move's staging slot keyed by position in
+    `moves`. A receiving device reserves the full round width W of
+    staging rows (payloads narrower than W pad with zero rows that no
+    fold references)."""
+    edges: dict[tuple[int, int], list[tuple[int, int]]] = {}
+    for mi, (s, d, b) in enumerate(moves):
+        edges.setdefault((s, d), []).append((mi, b))
+    rounds: list[dict] = []
+    for (s, d), items in edges.items():
+        for r in rounds:
+            if s not in r["senders"] and d not in r["receivers"]:
+                break
+        else:
+            r = {"senders": set(), "receivers": set(), "edges": []}
+            rounds.append(r)
+        r["senders"].add(s)
+        r["receivers"].add(d)
+        r["edges"].append((s, d, items))
+
+    slot_of: dict[int, int] = {}
+    next_slot = [0] * n
+    out = []
+    max_w = 0
+    for r in rounds:
+        w = max(len(items) for _, _, items in r["edges"])
+        max_w = max(max_w, w)
+        send_blks = np.full((n, w), -1, dtype=np.int64)
+        recv_off = np.full(n, -1, dtype=np.int64)
+        perm = []
+        for s, d, items in sorted(r["edges"]):
+            perm.append((s, d))
+            for j, (_mi, b) in enumerate(items):
+                send_blks[s, j] = b
+            recv_off[d] = next_slot[d]
+            for j, (mi, _b) in enumerate(items):
+                slot_of[mi] = next_slot[d] + j
+            next_slot[d] += w
+        out.append(PermRound(perm=tuple(perm), send_blks=send_blks,
+                             recv_off=recv_off))
+    # stage depth must also cover the widest round for devices that
+    # receive nothing (their masked dynamic_slice still reads W rows)
+    return out, max(max(next_slot, default=0), max_w), slot_of
+
+
+def _build_folds(groups: dict[tuple[int, int], list[int]],
+                 include_self: dict[tuple[int, int], bool],
+                 n: int) -> list[FoldPhase]:
+    """groups: (dst, blk) → staging slots. Packs each device's fold groups
+    into uniform per-device fold phases."""
+    per_dev: dict[int, list[tuple[int, list[int], bool]]] = {}
+    for (d, b), slots in groups.items():
+        per_dev.setdefault(d, []).append((b, slots, include_self[(d, b)]))
+    depth = max((len(v) for v in per_dev.values()), default=0)
+    width = max((len(slots) for _, slots, _ in
+                 (g for v in per_dev.values() for g in v)), default=0)
+    folds = []
+    for f in range(depth):
+        blk = np.full(n, -1, dtype=np.int64)
+        ops = np.full((n, max(width, 1)), -1, dtype=np.int64)
+        self_mask = np.zeros(n, dtype=bool)
+        any_active = False
+        for d, gl in per_dev.items():
+            if f >= len(gl):
+                continue
+            b, slots, inc = gl[f]
+            blk[d] = b
+            ops[d, :len(slots)] = slots
+            self_mask[d] = inc
+            any_active = True
+        if any_active:
+            folds.append(FoldPhase(blk=blk, ops=ops,
+                                   include_self=self_mask))
+    return folds
+
+
+def _movement_step(moves: list[tuple[int, int, int]], n: int) -> ExecStep:
+    """Pure data-movement step (reorder rounds): every receive is a plain
+    write of the received block."""
+    rounds, n_slots, slot_of = _color_rounds(moves, n)
+    groups: dict[tuple[int, int], list[int]] = {}
+    inc: dict[tuple[int, int], bool] = {}
+    for mi, (s, d, b) in enumerate(moves):
+        groups[(d, b)] = [slot_of[mi]]
+        inc[(d, b)] = False
+    return ExecStep(rounds=rounds, n_slots=n_slots,
+                    folds=_build_folds(groups, inc, n))
+
+
+def _srv_names(mask: int, inv: Mapping[int, int]) -> list[int]:
+    return [inv[m] for m in range(mask.bit_length()) if mask >> m & 1]
+
+
+# ---------------------------------------------------------------------------
+# lower_plan
+# ---------------------------------------------------------------------------
+def lower_plan(plan: Plan,
+               placement: Sequence[int] | Mapping[int, int] | None = None
+               ) -> CompiledSchedule:
+    """Compile a block-annotated Plan into an executable CompiledSchedule.
+
+    placement maps server id → mesh index; default: the i-th id of
+    sorted(plan.ids()) sits at mesh index i. Raises LoweringError on
+    unannotated IR, on structural defects (a server contribution folded
+    twice, a fan_in that disagrees with the incoming copies, a block never
+    fully reduced, an incomplete final gather) and on placement mismatch.
+    """
+    if plan.num_blocks is None:
+        raise LoweringError(
+            f"plan {plan.name!r} carries no block annotations "
+            "(Plan.num_blocks is None) — rebuild it with a block-aware "
+            "builder before lowering")
+    n = plan.n
+    ids = plan.ids()
+    if placement is None:
+        mesh_of = {sid: i for i, sid in enumerate(sorted(ids))}
+    elif isinstance(placement, Mapping):
+        mesh_of = {int(k): int(v) for k, v in placement.items()}
+    else:
+        mesh_of = {int(sid): i for i, sid in enumerate(placement)}
+    if sorted(mesh_of.get(sid, -1) for sid in ids) != list(range(n)):
+        raise LoweringError(
+            f"placement must biject the {n} server ids {sorted(ids)} onto "
+            f"mesh indices 0..{n - 1}; got {mesh_of}")
+    inv = {m: sid for sid, m in mesh_of.items()}
+
+    nb = plan.num_blocks
+    unit = plan.size / nb
+    full = (1 << n) - 1
+    # contrib[mesh][block] = bitmask (over mesh indices) of the server
+    # contributions currently summed into that device's copy
+    contrib = [[1 << m for _ in range(nb)] for m in range(n)]
+
+    def _blocks_of(op, si: int, what: str) -> tuple[int, ...]:
+        if op.blocks is None:
+            raise LoweringError(
+                f"step {si}: {what} {op} is not block-annotated")
+        want = len(op.blocks) * unit
+        if abs(op.size - want) > 1e-6 * max(1.0, abs(want)):
+            raise LoweringError(
+                f"step {si}: {what} size {op.size} inconsistent with "
+                f"{len(op.blocks)} block(s) of {unit} units")
+        for b in op.blocks:
+            if not 0 <= b < nb:
+                raise LoweringError(
+                    f"step {si}: {what} names block {b} outside "
+                    f"0..{nb - 1}")
+        return op.blocks
+
+    exec_steps: list[ExecStep] = []
+    last_fold_step = -1
+    for si, st in enumerate(plan.steps):
+        moves: list[tuple[int, int, int]] = []
+        for t in st.transfers:
+            if t.src not in mesh_of or t.dst not in mesh_of:
+                raise LoweringError(
+                    f"step {si}: transfer {t.src}->{t.dst} uses a server "
+                    "id missing from the placement map")
+            for b in _blocks_of(t, si, "transfer"):
+                moves.append((mesh_of[t.src], mesh_of[t.dst], b))
+        fans: dict[tuple[int, int], int] = {}
+        for r in st.reduces:
+            for b in _blocks_of(r, si, "reduce"):
+                key = (mesh_of[r.server], b)
+                if key in fans:
+                    raise LoweringError(
+                        f"step {si}: duplicate reduce of block {b} at "
+                        f"server {r.server} — a block may fold at most "
+                        "once per server per step")
+                fans[key] = r.fan_in
+
+        rounds, n_slots, slot_of = _color_rounds(moves, n)
+        groups: dict[tuple[int, int], list[int]] = {}
+        opmasks: dict[tuple[int, int], list[int]] = {}
+        for mi, (s, d, b) in enumerate(moves):
+            groups.setdefault((d, b), []).append(slot_of[mi])
+            opmasks.setdefault((d, b), []).append(contrib[s][b])
+
+        include_self: dict[tuple[int, int], bool] = {}
+        updates: dict[tuple[int, int], int] = {}
+        for key, slots in groups.items():
+            d, b = key
+            fan = fans.pop(key, None)
+            got = len(slots)
+            if fan is None:
+                if got != 1:
+                    raise LoweringError(
+                        f"step {si}: server {inv[d]} receives {got} "
+                        f"copies of block {b} with no reduce — ambiguous "
+                        "write")
+                include_self[key] = False
+                updates[key] = opmasks[key][0]
+                continue
+            if fan == got:
+                inc = False
+            elif fan == got + 1:
+                inc = True
+            else:
+                raise LoweringError(
+                    f"step {si}: reduce of block {b} at server {inv[d]} "
+                    f"declares fan_in={fan} but {got} copies arrive "
+                    f"(expected fan_in of {got} or {got + 1})")
+            include_self[key] = inc
+            acc = contrib[d][b] if inc else 0
+            for om, s_slot in zip(opmasks[key], slots):
+                if acc & om:
+                    dup = _srv_names(acc & om, inv)
+                    raise LoweringError(
+                        f"step {si}: duplicate block reduce — "
+                        f"contribution(s) of server(s) {dup} to block {b} "
+                        f"fold twice at server {inv[d]}")
+                acc |= om
+            updates[key] = acc
+        if fans:
+            (d, b), fan = next(iter(fans.items()))
+            raise LoweringError(
+                f"step {si}: reduce of block {b} at server {inv[d]} "
+                f"(fan_in={fan}) has no incoming copies")
+        for (d, b), mask in updates.items():
+            contrib[d][b] = mask
+        if st.reduces:
+            last_fold_step = si
+        exec_steps.append(ExecStep(
+            rounds=rounds, n_slots=n_slots,
+            folds=_build_folds(groups, include_self, n)))
+
+        if si == last_fold_step:
+            rs_contrib = [row[:] for row in contrib]
+
+    # ---- completeness ------------------------------------------------------
+    if last_fold_step < 0:
+        raise LoweringError(
+            f"plan {plan.name!r} contains no reduces — not an AllReduce")
+    for m in range(n):
+        for b in range(nb):
+            if contrib[m][b] != full:
+                missing = _srv_names(full & ~contrib[m][b], inv)
+                raise LoweringError(
+                    f"incomplete gather: server {inv[m]} ends without the "
+                    f"contribution(s) of server(s) {missing} for block "
+                    f"{b}")
+
+    # ---- ReduceScatter boundary + canonical shard layout -------------------
+    owner = np.full(nb, -1, dtype=np.int64)
+    for b in range(nb):
+        holders = [m for m in range(n) if rs_contrib[m][b] == full]
+        if not holders:
+            parts = {m: _srv_names(rs_contrib[m][b], inv)
+                     for m in range(n) if rs_contrib[m][b]}
+            raise LoweringError(
+                f"block {b} is never fully reduced by the end of the "
+                f"ReduceScatter phase (step {last_fold_step}); partial "
+                f"holders: {parts}")
+        owner[b] = holders[0]
+
+    blocks_per_shard = nb // n if nb % n == 0 else None
+    reorder = unorder = None
+    if blocks_per_shard:
+        k = blocks_per_shard
+        fwd = [(int(owner[b]), b // k, b) for b in range(nb)
+               if int(owner[b]) != b // k]
+        if fwd:
+            reorder = _movement_step(fwd, n)
+            unorder = _movement_step([(d, s, b) for s, d, b in fwd], n)
+
+    return CompiledSchedule(
+        plan_name=plan.name, n=n, num_blocks=nb,
+        rs=exec_steps[:last_fold_step + 1],
+        ag=exec_steps[last_fold_step + 1:],
+        owner_of_block=owner, blocks_per_shard=blocks_per_shard,
+        reorder=reorder, unorder=unorder,
+        placement=tuple(inv[m] for m in range(n)))

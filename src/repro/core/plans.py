@@ -5,9 +5,20 @@ Transfers (server→server, some number of data *blocks*) and ReduceOps (a
 server folds `fan_in` blocks into one). Sizes are in data units ("floats" in
 the paper); the cost model/simulator multiplies by unit size.
 
+Block identity (DESIGN.md §8): an *executable* plan additionally records,
+per Transfer and per ReduceOp, WHICH blocks move or fold. The AllReduce
+input vector of `size` units is split into `Plan.num_blocks` equal blocks;
+`Transfer.blocks` names the block shards whose current partial sum moves,
+`ReduceOp.blocks` the shards being folded. The cost engines ignore these
+fields entirely (pricing is byte-identical with or without them); they
+exist so `core.lower` can compile the plan into an executable shard_map
+schedule and structurally validate it (every server contribution of every
+block reduced exactly once, all-gather completeness).
+
 The IR is consumed by:
   * core.cost_model.evaluate_plan  — GenModel closed-form style accounting
   * core.simulator.simulate        — link-aware flow-level simulation
+  * core.lower.lower_plan          — compilation to executable schedules
   * core.collectives               — mapping onto JAX lax collectives
 """
 from __future__ import annotations
@@ -21,6 +32,10 @@ class Transfer:
     src: int
     dst: int
     size: float  # data units moved (e.g. floats)
+    # Block identity: which shards' partials move (None = unannotated IR;
+    # priced identically, but not lowerable to an executable schedule).
+    # size == len(blocks) * (plan.size / plan.num_blocks) when annotated.
+    blocks: tuple[int, ...] | None = None
 
 
 @dataclass(frozen=True)
@@ -28,6 +43,9 @@ class ReduceOp:
     server: int
     fan_in: int   # number of operand blocks folded into one output block
     size: float   # size of ONE block (= output size)
+    # Block identity: which shards this fold produces (None = unannotated).
+    # size == len(blocks) * (plan.size / plan.num_blocks) when annotated.
+    blocks: tuple[int, ...] | None = None
 
     @property
     def adds(self) -> float:
@@ -89,6 +107,10 @@ class Plan:
     size: float            # S: total data units per server
     steps: list[Step] = field(default_factory=list)
     servers: list[int] | None = None  # actual server ids (default 0..n-1)
+    # Block granularity of the annotated IR: the size-unit vector is split
+    # into num_blocks equal shards, indexed 0..num_blocks-1. None marks a
+    # legacy/unannotated plan (prices fine, cannot be lowered).
+    num_blocks: int | None = None
 
     def ids(self) -> list[int]:
         return self.servers if self.servers is not None else list(range(self.n))
@@ -133,22 +155,32 @@ class Plan:
 # Builders — single-switch, N servers, S data units each.
 # ---------------------------------------------------------------------------
 def ring(n: int, size: float, servers: list[int] | None = None) -> Plan:
-    """Ring AllReduce: 2(N-1) steps of S/N-sized neighbor exchanges."""
+    """Ring AllReduce: 2(N-1) steps of S/N-sized neighbor exchanges.
+
+    Block schedule (the canonical ring walk): at ReduceScatter step s,
+    server i forwards its partial of block (i - s) mod n to i+1, so after
+    N-1 folds server j owns block (j + 1) mod n; the AllGather phase walks
+    the finished blocks the same direction."""
     ids = servers if servers is not None else list(range(n))
     blk = size / n
-    p = Plan("ring", n, size, servers=servers)
+    p = Plan("ring", n, size, servers=servers, num_blocks=n)
     # ReduceScatter phase.
-    for _ in range(n - 1):
+    for s in range(n - 1):
         st = Step()
         for i in range(n):
-            st.transfers.append(Transfer(ids[i], ids[(i + 1) % n], blk))
-            st.reduces.append(ReduceOp(ids[(i + 1) % n], 2, blk))
+            b = (i - s) % n
+            st.transfers.append(Transfer(ids[i], ids[(i + 1) % n], blk,
+                                         blocks=(b,)))
+            st.reduces.append(ReduceOp(ids[(i + 1) % n], 2, blk,
+                                       blocks=(b,)))
         p.steps.append(st)
     # AllGather phase.
-    for _ in range(n - 1):
+    for a in range(n - 1):
         st = Step()
         for i in range(n):
-            st.transfers.append(Transfer(ids[i], ids[(i + 1) % n], blk))
+            b = (i + 1 - a) % n
+            st.transfers.append(Transfer(ids[i], ids[(i + 1) % n], blk,
+                                         blocks=(b,)))
         p.steps.append(st)
     return p
 
@@ -157,19 +189,22 @@ def cps(n: int, size: float, servers: list[int] | None = None) -> Plan:
     """Co-located PS: 1 full-mesh ReduceScatter step (fan-in N) + 1 AllGather."""
     ids = servers if servers is not None else list(range(n))
     blk = size / n
-    p = Plan("cps", n, size, servers=servers)
+    p = Plan("cps", n, size, servers=servers, num_blocks=n)
     rs = Step()
     for i in range(n):
         for j in range(n):
             if i != j:
-                rs.transfers.append(Transfer(ids[i], ids[j], blk))
-        rs.reduces.append(ReduceOp(ids[i], n, blk))
+                # server i ships its contribution to block j's owner
+                rs.transfers.append(Transfer(ids[i], ids[j], blk,
+                                             blocks=(j,)))
+        rs.reduces.append(ReduceOp(ids[i], n, blk, blocks=(i,)))
     p.steps.append(rs)
     ag = Step()
     for i in range(n):
         for j in range(n):
             if i != j:
-                ag.transfers.append(Transfer(ids[i], ids[j], blk))
+                ag.transfers.append(Transfer(ids[i], ids[j], blk,
+                                             blocks=(i,)))
     p.steps.append(ag)
     return p
 
@@ -178,33 +213,42 @@ def reduce_broadcast(n: int, size: float, servers: list[int] | None = None) -> P
     """Naive PS: everyone → root (reduce), root → everyone (broadcast)."""
     ids = servers if servers is not None else list(range(n))
     root = ids[0]
-    p = Plan("reduce_broadcast", n, size, servers=servers)
+    # The root folds whole vectors — a single block of all `size` units.
+    p = Plan("reduce_broadcast", n, size, servers=servers, num_blocks=1)
     rs = Step()
     for i in ids[1:]:
-        rs.transfers.append(Transfer(i, root, size))
-    rs.reduces.append(ReduceOp(root, n, size))
+        rs.transfers.append(Transfer(i, root, size, blocks=(0,)))
+    rs.reduces.append(ReduceOp(root, n, size, blocks=(0,)))
     p.steps.append(rs)
     bc = Step()
     for i in ids[1:]:
-        bc.transfers.append(Transfer(root, i, size))
+        bc.transfers.append(Transfer(root, i, size, blocks=(0,)))
     p.steps.append(bc)
     return p
 
 
 def rhd(n: int, size: float, servers: list[int] | None = None) -> Plan:
     """Recursive Halving & Doubling. Non-power-of-two handled with the
-    standard fold-in/fold-out patch (the χ(N) extra steps of Table 1)."""
+    standard fold-in/fold-out patch (the χ(N) extra steps of Table 1).
+
+    Blocks are sized at the pow2 core's final-shard granularity
+    (num_blocks = pow2): at halving step j, core server i holds the range
+    of 2·dist blocks selected by its high bits and sends the half NOT
+    matching bit (i//dist)%2 to peer i^dist, ending with server i owning
+    block i; doubling mirrors the ranges back."""
     ids = servers if servers is not None else list(range(n))
-    p = Plan("rhd", n, size, servers=servers)
     pow2 = 1 << (n.bit_length() - 1)
     extra = n - pow2  # servers folded into partners
+    p = Plan("rhd", n, size, servers=servers, num_blocks=pow2)
+    all_blocks = tuple(range(pow2))
 
     if extra:
         st = Step()
         for e in range(extra):
             # server pow2+e sends everything to server e.
-            st.transfers.append(Transfer(ids[pow2 + e], ids[e], size))
-            st.reduces.append(ReduceOp(ids[e], 2, size))
+            st.transfers.append(Transfer(ids[pow2 + e], ids[e], size,
+                                         blocks=all_blocks))
+            st.reduces.append(ReduceOp(ids[e], 2, size, blocks=all_blocks))
         p.steps.append(st)
 
     core = ids[:pow2]
@@ -215,8 +259,13 @@ def rhd(n: int, size: float, servers: list[int] | None = None) -> Plan:
         st = Step()
         for i in range(pow2):
             peer = i ^ dist
-            st.transfers.append(Transfer(core[i], core[peer], sz))
-            st.reduces.append(ReduceOp(core[peer], 2, sz))
+            bit = (i // dist) % 2
+            base = i & ~(2 * dist - 1)
+            sent = tuple(range(base + (1 - bit) * dist,
+                               base + (1 - bit) * dist + dist))
+            st.transfers.append(Transfer(core[i], core[peer], sz,
+                                         blocks=sent))
+            st.reduces.append(ReduceOp(core[peer], 2, sz, blocks=sent))
         p.steps.append(st)
     # Doubling (AllGather).
     for j in reversed(range(int(math.log2(pow2)))):
@@ -225,13 +274,17 @@ def rhd(n: int, size: float, servers: list[int] | None = None) -> Plan:
         st = Step()
         for i in range(pow2):
             peer = i ^ dist
-            st.transfers.append(Transfer(core[i], core[peer], sz))
+            base = i & ~(dist - 1)
+            held = tuple(range(base, base + dist))
+            st.transfers.append(Transfer(core[i], core[peer], sz,
+                                         blocks=held))
         p.steps.append(st)
 
     if extra:
         st = Step()
         for e in range(extra):
-            st.transfers.append(Transfer(ids[e], ids[pow2 + e], size))
+            st.transfers.append(Transfer(ids[e], ids[pow2 + e], size,
+                                         blocks=all_blocks))
         p.steps.append(st)
     return p
 
@@ -249,7 +302,8 @@ def hcps(factors: list[int], size: float,
     for f in factors:
         n *= f
     ids = servers if servers is not None else list(range(n))
-    p = Plan("hcps_" + "x".join(map(str, factors)), n, size, servers=servers)
+    p = Plan("hcps_" + "x".join(map(str, factors)), n, size, servers=servers,
+             num_blocks=n)
 
     def digits(x: int) -> list[int]:
         d = []
@@ -259,13 +313,19 @@ def hcps(factors: list[int], size: float,
         return d
 
     def groups(step: int) -> list[list[int]]:
-        """Indices grouped by all digits except digit `step`."""
+        """Indices grouped by all digits except digit `step`. Members are
+        listed in index order == increasing digit-`step` order."""
         by_key: dict[tuple, list[int]] = {}
         for i in range(n):
             d = digits(i)
             key = tuple(d[:step] + d[step + 1:])
             by_key.setdefault(key, []).append(i)
         return list(by_key.values())
+
+    # Block bookkeeping: every server starts holding the full block range;
+    # at RS stage si each group member keeps the sub-range indexed by its
+    # own digit and ships sub-range j to the member with digit j.
+    rng: dict[int, tuple[int, int]] = {i: (0, n) for i in range(n)}
 
     # ReduceScatter stages: after stage i each member of a group owns 1/f_i
     # of the shard it held before the stage.
@@ -275,12 +335,20 @@ def hcps(factors: list[int], size: float,
         blk = shard / f
         for g in groups(si):
             assert len(g) == f
-            for a in g:
-                for b in g:
+            start, length = rng[g[0]]       # shared across the group
+            piece = length // f
+            for ja, a in enumerate(g):
+                for jb, b in enumerate(g):
                     if a != b:
-                        st.transfers.append(Transfer(ids[a], ids[b], blk))
-            for a in g:
-                st.reduces.append(ReduceOp(ids[a], f, blk))
+                        sub = tuple(range(start + jb * piece,
+                                          start + (jb + 1) * piece))
+                        st.transfers.append(Transfer(ids[a], ids[b], blk,
+                                                     blocks=sub))
+            for ja, a in enumerate(g):
+                own = tuple(range(start + ja * piece,
+                                  start + (ja + 1) * piece))
+                st.reduces.append(ReduceOp(ids[a], f, blk, blocks=own))
+                rng[a] = (start + ja * piece, piece)
         p.steps.append(st)
         shard = blk
 
@@ -291,9 +359,16 @@ def hcps(factors: list[int], size: float,
         st = Step()
         for g in groups(si):
             for a in g:
+                sa, la = rng[a]
+                sub = tuple(range(sa, sa + la))
                 for b in g:
                     if a != b:
-                        st.transfers.append(Transfer(ids[a], ids[b], blk))
+                        st.transfers.append(Transfer(ids[a], ids[b], blk,
+                                                     blocks=sub))
+            lo = min(rng[a][0] for a in g)
+            length = sum(rng[a][1] for a in g)
+            for a in g:
+                rng[a] = (lo, length)
         p.steps.append(st)
         shard = shard * f
     return p

@@ -25,40 +25,91 @@ from .cost_model import GenModelParams, TPU_V5E, best_flat_plan
 @dataclasses.dataclass(frozen=True)
 class AxisPlan:
     axis: str
-    strategy: str                   # psum | ring | rhd | cps | hcps
+    strategy: str                   # psum | ring | rhd | cps | hcps | plan
     factors: tuple[int, ...] | None = None
+    # strategy == "plan": the lowered GenTree schedule to execute
+    # (core.lower.CompiledSchedule; compared/hashed by identity)
+    schedule: object | None = None
 
 
 @dataclasses.dataclass(frozen=True)
 class SyncConfig:
-    """strategy: auto|psum|ring|rhd|cps|hcps|gentree; applied per DP axis."""
+    """strategy: auto|psum|ring|rhd|cps|hcps|gentree|plan per DP axis.
+    "gentree" picks a flat plan-type label per axis; "plan" lowers the
+    GenTree Plan IR itself and executes its compiled schedule."""
     strategy: str = "auto"
     factors: tuple[int, ...] | None = None   # for explicit hcps
     compress: str | None = None              # None | "int8"
     params: dict[str, GenModelParams] | None = None
 
 
+# Table-5 class per mesh-axis position: the leaf axis rides the pod fabric
+# (ICI → "root_sw" pricing), every outer axis the cross-pod DCI.
+AXIS_LEVELS = ("root_sw",) + ("cross_dc",) * 8
+
+
+def axis_level(i: int) -> str:
+    return AXIS_LEVELS[min(i, len(AXIS_LEVELS) - 1)]
+
+
+def level_switch_topo(n: int, params: dict[str, GenModelParams],
+                      level: str):
+    """Single-switch stand-in for a mesh axis at a Table-5 level class:
+    one switch, n servers whose uplink bandwidth realizes the level's β
+    (seconds per 4-byte unit → bytes/s), pricing α/γ/δ/ε/w_t coming from
+    the params table. The ONE synthesis shared by axis pricing
+    (`plan_axes_gentree`) and axis execution
+    (`PlannerService.get_axis_executable`) — the executed plan must be
+    the plan the model priced."""
+    from .topology import single_switch
+    p = params.get(level, params["server"])
+    bw = 4.0 / p.beta if p.beta > 0 else 1e18
+    return single_switch(int(n), bw=bw, lat=0.0, level=level)
+
+
 def plan_axes_gentree(axes: Sequence[tuple[str, int]], size_floats: float,
-                      params: dict[str, GenModelParams] | None = None
-                      ) -> list[AxisPlan]:
+                      params: dict[str, GenModelParams] | None = None, *,
+                      engine: str | None = None,
+                      gentree_kwargs: dict | None = None) -> list[AxisPlan]:
     """Per-level plan selection for a hierarchical mesh.
 
     axes: [(axis_name, size), ...] ordered leaf-level first (e.g.
     [("data", 16), ("pod", 2)]). Level 0 prices with pod-internal (ICI)
     parameters, outer levels with the cross-pod (DCI) parameters — the
     TPU analogue of the paper's Table-5 level classes.
+
+    With default `engine`/`gentree_kwargs` each axis is priced by the
+    GenModel closed forms (`best_flat_plan`). When either is configured
+    (a PlannerService built with engine="reference"/"fast" or custom
+    gentree_kwargs), the axis is priced by running GenTree itself on the
+    equivalent single-switch topology — one switch, n servers whose link
+    bandwidth realizes the level's β — with exactly that engine and those
+    kwargs, so service configuration reaches cold axis pricing instead of
+    being silently dropped.
     """
     params = params or TPU_V5E
-    levels = ["root_sw"] + ["cross_dc"] * 8  # leaf level ICI, outer DCI
+    gkw = dict(gentree_kwargs or {})
+    use_gentree = engine is not None or bool(gkw)
     out: list[AxisPlan] = []
     for i, (name, n) in enumerate(axes):
-        p = params[levels[min(i, len(levels) - 1)]]
+        lvl = axis_level(i)
+        p = params[lvl]
         # the γ/δ terms always price at the chip ("server") level
         srv = params["server"]
         p = dataclasses.replace(p, gamma=srv.gamma, delta=srv.delta)
         if n == 1:
             continue
-        kind, fac, _cost = best_flat_plan(n, size_floats, p)
+        if use_gentree:
+            from .gentree import gentree as run_gentree
+            topo = level_switch_topo(n, {lvl: p, "server": srv}, lvl)
+            res = run_gentree(topo, size_floats,
+                              params={lvl: p, "server": srv},
+                              engine=engine, **gkw)
+            dec = res.decisions[topo.name]
+            kind = "cps" if dec.algo == "acps" else dec.algo
+            fac = dec.factors
+        else:
+            kind, fac, _cost = best_flat_plan(n, size_floats, p)
         out.append(AxisPlan(name, kind, tuple(fac) if fac else None))
     return out
 
@@ -80,6 +131,27 @@ def resolve_axis_plans(axes: Sequence[tuple[str, int]], cfg: "SyncConfig",
         from repro.planner.service import default_service
         return default_service().get_axis_plans(axes, size_floats,
                                                 params=cfg.params)
+    if cfg.strategy == "plan":
+        # Execute the GenTree Plan IR itself: per axis, the service
+        # generates (or cache-hits) the plan AND its lowered schedule
+        # (DESIGN.md §8); the returned AxisPlan carries the compiled
+        # schedule for collectives.allreduce/reduce_scatter to run.
+        # Pricing matches plan_axes_gentree: leaf axis at "root_sw",
+        # outer axes at "cross_dc", cfg.params honoured.
+        from repro.planner.service import default_service
+        svc = default_service()
+        out = []
+        # level index counts the ORIGINAL axis position (n==1 axes are
+        # skipped but still occupy their mesh level), exactly as
+        # plan_axes_gentree enumerates — same axis, same Table-5 class.
+        for i, (a, n) in enumerate(axes):
+            if n <= 1:
+                continue
+            resp = svc.get_axis_executable(a, n, size_floats,
+                                           level=axis_level(i),
+                                           params=cfg.params)
+            out.append(AxisPlan(a, "plan", schedule=resp.schedule))
+        return out
 
     def axis_plan(a: str, n: int) -> AxisPlan:
         if cfg.strategy != "hcps":
@@ -170,7 +242,8 @@ def sync_gradients(grads, axes: Sequence[tuple[str, int]], cfg: SyncConfig,
             else:
                 g = collectives.allreduce(g, pl.axis, pl.strategy,
                                           factors=pl.factors,
-                                          fused_reduce=fused_reduce)
+                                          fused_reduce=fused_reduce,
+                                          schedule=pl.schedule)
         return g
 
     return jax.tree.map(leaf, grads)

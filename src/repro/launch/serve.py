@@ -36,18 +36,48 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
 
     # Pre-warm the shared plan cache with the tensor-parallel decode
     # AllReduce shape (one per layer, batch × d_model activations over the
-    # local devices) and report the plan a TP deployment of this config
-    # would execute via collectives.allreduce_planned. This driver's decode
-    # loop itself is single-host (api.decode_step), so the plan is
-    # advisory here; it is returned so callers can act on it.
+    # local devices) and lower the GenTree plan to its executable schedule
+    # (DESIGN.md §8). With ≥2 local devices the schedule is executed once
+    # under shard_map against lax.psum as a deployment self-check; the
+    # decode loop itself is single-host (api.decode_step), so on one
+    # device the schedule stays advisory. Returned so callers can act on
+    # it (a TP deployment hands it to collectives.allreduce).
+    from repro.core.lower import LoweringError
     from repro.planner.service import default_service
-    tp_plans = default_service().get_axis_plans(
-        [("model", len(jax.devices()))], float(sc.batch * cfg.d_model))
-    if tp_plans:
-        desc = ", ".join(f"{p.axis}:{p.strategy}{list(p.factors) if p.factors else ''}"
-                         for p in tp_plans)
-        on_log(f"planner: decode AllReduce plan {desc}")
-    else:
+    n_dev = len(jax.devices())
+    tp_exec = None
+    if n_dev > 1:
+        try:
+            tp_exec = default_service().get_axis_executable(
+                "model", n_dev, float(sc.batch * cfg.d_model))
+        except LoweringError as e:
+            # e.g. a warm disk cache written before block annotations:
+            # keep serving on the advisory flat labels, as pre-§8 builds
+            tp_plans = default_service().get_axis_plans(
+                [("model", n_dev)], float(sc.batch * cfg.d_model))
+            desc = ", ".join(
+                f"{p.axis}:{p.strategy}{list(p.factors) if p.factors else ''}"
+                for p in tp_plans)
+            on_log(f"planner: plan not lowerable ({e}); advisory decode "
+                   f"plan {desc}")
+    if tp_exec is not None:
+        sched = tp_exec.schedule
+        on_log(f"planner: decode AllReduce executes {tp_exec.algo} plan "
+               f"({sched.describe()})")
+        from jax.sharding import PartitionSpec as P
+        from repro.core.compat import shard_map
+        mesh = jax.make_mesh((n_dev,), ("model",))
+        probe = jax.random.normal(
+            jax.random.PRNGKey(2), (n_dev, sc.batch * cfg.d_model))
+        f = shard_map(lambda v: sched.allreduce(v[0], "model")[None],
+                      mesh=mesh, in_specs=P("model"), out_specs=P("model"))
+        got = np.asarray(f(probe))[0]
+        want = np.asarray(probe.sum(0))
+        err = float(np.abs(got - want).max() /
+                    (np.abs(want).max() + 1e-30))
+        on_log(f"planner: executed-schedule self-check rel err {err:.2e}")
+        assert err < 1e-5, "executed TP schedule disagrees with psum"
+    elif n_dev == 1:
         on_log("planner: single device, no decode collective needed")
     key = jax.random.PRNGKey(sc.seed)
     params = api.init_params(key)
@@ -82,7 +112,8 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
     gen = np.stack(out, axis=1)
     on_log(f"served batch={sc.batch} prompt={sc.prompt_len} "
            f"new={sc.max_new}: first row {gen[0][:8].tolist()}...")
-    return {"tokens": gen, "tp_plans": tp_plans}
+    return {"tokens": gen, "tp_exec": tp_exec,
+            "tp_schedule": None if tp_exec is None else tp_exec.schedule}
 
 
 def main():

@@ -8,7 +8,9 @@ Two engines:
 * **manual** — shard_map over the DP axes ('pod', 'data'); parameters are
   ZeRO-3 sharded (flat shards per leaf), gathered with a *plan-selected*
   AllGather and gradients reduced with a *plan-selected* ReduceScatter —
-  ring / rhd / cps / hcps per core.sync's GenModel pricing. This is the
+  ring / rhd / cps / hcps per core.sync's GenModel pricing, or, with
+  sync="plan", the GenTree Plan IR itself lowered to a compiled schedule
+  (core.lower, DESIGN.md §8) and executed round-for-round. This is the
   paper's technique as a first-class training feature: GenTree decides the
   collective schedule, the engine executes it.
 
@@ -121,6 +123,9 @@ def _gather_leaf(shard: jax.Array, shape, dtype, plans: Sequence[AxisPlan]):
             flat = collectives.all_gather_cps(flat, pl.axis)
         elif pl.strategy == "hcps":
             flat = collectives.all_gather_hcps(flat, pl.axis, pl.factors)
+        elif pl.strategy == "plan":
+            # executed GenTree plan: the lowered schedule's AllGather half
+            flat = pl.schedule.all_gather(flat, pl.axis)
         else:
             raise ValueError(pl.strategy)
     n = 1
@@ -133,7 +138,8 @@ def _scatter_leaf(full: jax.Array, plans: Sequence[AxisPlan]):
     flat = full.reshape(-1)
     for pl in reversed(plans):
         flat = collectives.reduce_scatter(flat, pl.axis, pl.strategy,
-                                          factors=pl.factors)
+                                          factors=pl.factors,
+                                          schedule=pl.schedule)
     return flat
 
 
@@ -165,7 +171,13 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
         if planner is not None and sync.strategy == "gentree":
             return planner.get_axis_plans(axes, size_floats,
                                           params=sync.params)
-        # gentree routes through the process-wide PlannerService inside
+        if planner is not None and sync.strategy == "plan":
+            from repro.core.sync import axis_level
+            return [AxisPlan(a, "plan", schedule=planner.get_axis_executable(
+                        a, n, size_floats, level=axis_level(i),
+                        params=sync.params).schedule)
+                    for i, (a, n) in enumerate(axes)]
+        # gentree/plan route through the process-wide PlannerService inside
         # resolve_axis_plans; only an explicit override needs handling here.
         return resolve_axis_plans(axes, sync, size_floats)
 
@@ -228,7 +240,7 @@ class TrainConfig:
     seq_len: int = 128
     global_batch: int = 8
     engine: str = "auto"            # auto | manual
-    sync: str = "auto"              # auto|psum|ring|rhd|cps|hcps|gentree
+    sync: str = "auto"         # auto|psum|ring|rhd|cps|hcps|gentree|plan
     lr: float = 1e-3
     ckpt_dir: str | None = None
     ckpt_every: int = 25
@@ -293,7 +305,7 @@ def run_training(tc: TrainConfig, mesh: Mesh | None = None,
         for s in range(tc.steps):
             state = one_step(state, s)
 
-    if tc.engine == "manual" and tc.sync == "gentree":
+    if tc.engine == "manual" and tc.sync in ("gentree", "plan"):
         # Plans resolve once at trace time, so a fresh process shows one
         # miss per axis-plan request; hits appear on engine rebuilds and
         # on warm restarts via $REPRO_PLAN_CACHE.

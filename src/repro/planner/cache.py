@@ -26,13 +26,25 @@ from repro.core.plans import Plan, ReduceOp, Step, Transfer
 # ---------------------------------------------------------------------------
 # Plan IR <-> JSON
 # ---------------------------------------------------------------------------
+def _blk(b) -> tuple[int, ...] | None:
+    return None if b is None else tuple(int(x) for x in b)
+
+
 def plan_to_json(plan: Plan) -> dict:
+    """Serialize the plan, block annotations included — a disk-warm plan
+    must stay lowerable (`core.lower`) after the round-trip. The 4-tuple
+    rows stay readable by pre-block-IR entries (3-tuples load as
+    unannotated)."""
     return {
         "name": plan.name, "n": plan.n, "size": plan.size,
-        "servers": plan.servers,
+        "servers": plan.servers, "num_blocks": plan.num_blocks,
         "steps": [{
-            "transfers": [[t.src, t.dst, t.size] for t in st.transfers],
-            "reduces": [[r.server, r.fan_in, r.size] for r in st.reduces],
+            "transfers": [[t.src, t.dst, t.size,
+                           None if t.blocks is None else list(t.blocks)]
+                          for t in st.transfers],
+            "reduces": [[r.server, r.fan_in, r.size,
+                         None if r.blocks is None else list(r.blocks)]
+                        for r in st.reduces],
         } for st in plan.steps],
     }
 
@@ -41,13 +53,19 @@ def plan_from_json(d: dict) -> Plan:
     steps = []
     for sd in d["steps"]:
         st = Step()
-        st.transfers = [Transfer(int(s), int(t), float(z))
-                        for s, t, z in sd["transfers"]]
-        st.reduces = [ReduceOp(int(s), int(f), float(z))
-                      for s, f, z in sd["reduces"]]
+        st.transfers = [Transfer(int(row[0]), int(row[1]), float(row[2]),
+                                 blocks=_blk(row[3]) if len(row) > 3
+                                 else None)
+                        for row in sd["transfers"]]
+        st.reduces = [ReduceOp(int(row[0]), int(row[1]), float(row[2]),
+                               blocks=_blk(row[3]) if len(row) > 3
+                               else None)
+                      for row in sd["reduces"]]
         steps.append(st)
+    nb = d.get("num_blocks")
     return Plan(d["name"], int(d["n"]), float(d["size"]), steps=steps,
-                servers=d.get("servers"))
+                servers=d.get("servers"),
+                num_blocks=None if nb is None else int(nb))
 
 
 # ---------------------------------------------------------------------------

@@ -65,11 +65,14 @@ def plan_key(topo: TopoNode, params: Mapping[str, GenModelParams] | None,
 
 def axis_key(axes: Sequence[tuple[str, int]],
              params: Mapping[str, GenModelParams] | None,
-             size_bucket: int) -> str:
+             size_bucket: int, extra: tuple = ()) -> str:
     """Cache key for a per-mesh-axis plan request (launch.train hot path).
 
     The axis *names* matter (they name mesh levels with different param
-    classes), the sizes matter, and so do the params.
+    classes), the sizes matter, and so do the params. `extra` carries
+    service configuration that changes the answer (pricing engine,
+    gentree kwargs) so differently-configured services never share an
+    axis-plan entry.
     """
     return _digest([[list(a) for a in axes], params_canonical(params),
-                    int(size_bucket)])
+                    int(size_bucket), list(extra)])

@@ -5,6 +5,9 @@ Every AllReduce in the repo resolves its schedule here (DESIGN.md §5):
   * `get_plan(topo, nbytes, dtype)` — full GenTree plan for a physical
     topology, cache-bucketed by size, optionally re-ranked against the
     global baselines under an arrival-skew model;
+  * `get_executable(topo, nbytes, dtype)` / `get_axis_executable(axis, n,
+    size_floats)` — the same plan plus its lowered shard_map schedule
+    (core.lower, DESIGN.md §8), cached alongside the plan entry;
   * `get_axis_plans(axes, size_floats)` — per-mesh-axis plan selection for
     the training/serving hot paths (launch.train's ZeRO-3 engine,
     core.sync.sync_gradients, core.collectives.allreduce_planned).
@@ -50,6 +53,10 @@ class PlanResponse:
     key: str = ""
     nbytes_bucket: int = 0
     size_floats: float = 0.0
+    # get_executable only: the lowered schedule (core.lower), cached
+    # alongside the plan entry under "_exec" (derived artifact — never
+    # persisted; recompiled once per placement after a disk-warm restart)
+    schedule: object | None = None
 
 
 def _decisions_to_json(decisions) -> dict:
@@ -101,12 +108,17 @@ class PlannerService:
         return self.params or PAPER_TABLE5
 
     def get_plan(self, topo: TopoNode, nbytes: int | float,
-                 dtype: str = "float32") -> PlanResponse:
+                 dtype: str = "float32", *,
+                 params: Mapping[str, GenModelParams] | None = None
+                 ) -> PlanResponse:
+        """`params` overrides the service's pricing basis for this request
+        only (e.g. SyncConfig.params); the override is part of the cache
+        key, so differently-priced requests never share an entry."""
         topo.finalize()
         dsize = DTYPE_BYTES.get(dtype, 4)
         bucket = self.cache.bucket(nbytes)
         size_floats = float(bucket) / dsize
-        params = self._effective_params()
+        params = dict(params) if params else self._effective_params()
         extra = (tuple(sorted(self.gentree_kwargs.items())),
                  self.skew.key() if self.skew else None)
         key = plan_key(topo, params, bucket, dtype, extra=extra)
@@ -165,6 +177,72 @@ class PlannerService:
                             source="cold", key=key, nbytes_bucket=bucket,
                             size_floats=size_floats)
 
+    # ---- executable plans (lowered schedules) ------------------------------
+    def _config_extra(self) -> tuple:
+        return (tuple(sorted(self.gentree_kwargs.items())), self.engine)
+
+    def get_executable(self, topo: TopoNode, nbytes: int | float,
+                       dtype: str = "float32", *, placement=None,
+                       params: Mapping[str, GenModelParams] | None = None
+                       ) -> PlanResponse:
+        """`get_plan` + the plan lowered to an executable shard_map
+        schedule (core.lower.CompiledSchedule, DESIGN.md §8).
+
+        Cache contract: the schedule is a derived artifact stored on the
+        plan's cache entry under `_exec`, keyed by the placement map — it
+        shares the entry's lifetime (LRU eviction or recalibration drops
+        plan and schedule together) and is never written to disk; a
+        disk-warm plan is re-lowered once per placement. Raises
+        `core.lower.LoweringError` if the cached plan is structurally
+        invalid or predates block annotations.
+        """
+        from repro.core.lower import lower_plan
+        resp = self.get_plan(topo, nbytes, dtype, params=params)
+        pkey = ("default" if placement is None
+                else tuple(sorted(dict(placement).items()))
+                if isinstance(placement, Mapping)
+                else tuple(placement))
+        with self._lock:
+            entry = self.cache.get(resp.key)
+            execs = None if entry is None else entry.setdefault("_exec", {})
+            sched = None if execs is None else execs.get(pkey)
+            if sched is None:
+                sched = lower_plan(resp.plan, placement=placement)
+                if execs is not None:
+                    execs[pkey] = sched
+        resp.schedule = sched
+        return resp
+
+    def get_axis_executable(self, axis_name: str, n: int,
+                            size_floats: float,
+                            dtype: str = "float32", *,
+                            topo: TopoNode | None = None,
+                            level: str = "root_sw",
+                            params: Mapping[str, GenModelParams] | None
+                            = None) -> PlanResponse:
+        """Executable plan for one mesh axis: the axis is modelled as a
+        single-switch topology of `n` servers (pass `topo` for the real
+        physical tree) and the GenTree plan is lowered with the identity
+        placement — mesh position i executes server i's schedule.
+
+        `level` is the axis's Table-5 class (leaf/ICI axis → "root_sw",
+        outer/DCI axes → "cross_dc" — `core.sync.axis_level` maps mesh
+        positions), and `params` optionally overrides the service's
+        pricing basis (SyncConfig.params): the synthesized switch's uplink
+        bandwidth realizes that level's β, exactly as
+        `plan_axes_gentree` prices the same axis, so the executed plan is
+        the one the model actually argues for."""
+        eff = dict(params) if params else self.params
+        if eff is None:
+            from repro.core.cost_model import TPU_V5E
+            eff = TPU_V5E
+        if topo is None:
+            from repro.core.sync import level_switch_topo
+            topo = level_switch_topo(int(n), eff, level)
+        dsize = DTYPE_BYTES.get(dtype, 4)
+        return self.get_executable(topo, max(size_floats, 1.0) * dsize,
+                                   dtype, params=eff)
+
     # ---- per-mesh-axis plans (training/serving hot path) -------------------
     def get_axis_plans(self, axes: Sequence[tuple[str, int]],
                        size_floats: float,
@@ -174,7 +252,8 @@ class PlannerService:
         eff = params if params is not None else self.params
         bucket = self.cache.bucket(max(size_floats, 1.0) * 4)
         from repro.core.cost_model import TPU_V5E
-        key = axis_key(axes, eff if eff is not None else TPU_V5E, bucket)
+        key = axis_key(axes, eff if eff is not None else TPU_V5E, bucket,
+                       extra=self._config_extra())
         entry = self.cache.get(key)
         if entry is not None:
             obj = entry.get("_obj")
@@ -183,7 +262,13 @@ class PlannerService:
                        for a, s, f in entry["axis_plans"]]
                 entry["_obj"] = obj
             return list(obj)
-        plans = plan_axes_gentree(axes, float(bucket) / 4.0, eff)
+        # Cold pricing honours the service's configured engine and
+        # gentree kwargs (once silently dropped here, so an
+        # engine="reference" or candidate-restricted service got default
+        # axis plans).
+        plans = plan_axes_gentree(axes, float(bucket) / 4.0, eff,
+                                  engine=self.engine,
+                                  gentree_kwargs=self.gentree_kwargs)
         entry = {"axis_plans": [[p.axis, p.strategy,
                                  list(p.factors) if p.factors else None]
                                 for p in plans],

@@ -45,6 +45,36 @@ for strat, fac in [("ring", None), ("rhd", None), ("cps", None),
     out = np.asarray(f(x)).reshape(-1)
     results[f"rs_{strat}_{fac}"] = bool(np.allclose(out, want, rtol=1e-5))
 
+# reduce_scatter SHAPE CONTRACT: every strategy — psum included — returns
+# the FLAT (chunk,) shard; the old psum path (tiled=False on the (n, chunk)
+# reshape) handed back a (1, chunk) slab instead.
+shape_ok, value_ok = {}, {}
+for strat, fac in [("psum", None), ("ring", None), ("rhd", None),
+                   ("cps", None), ("hcps", (4, 2))]:
+    f = shard_map(lambda v: C.reduce_scatter(v[0], "x", strat,
+                                             factors=fac)[None],
+                  mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    out = np.asarray(f(x))
+    shape_ok[strat] = out.shape == (8, x.shape[1] // 8)
+    value_ok[strat] = bool(np.allclose(out.reshape(-1), want, rtol=1e-5))
+results["rs_shape_contract"] = all(shape_ok.values())
+results["rs_shape_detail"] = {k: bool(v) for k, v in shape_ok.items()}
+results["rs_value_contract"] = all(value_ok.values())
+
+# non-power-of-two axes: executable RHD via fold-in/fold-out (the plans.rhd
+# patch) — allreduce must match the sum on 3/5/6/7-device sub-meshes
+npo2 = {}
+for n in (3, 5, 6, 7):
+    sub = jax.sharding.Mesh(np.array(jax.devices()[:n]), ("x",))
+    y2 = jnp.arange(n * 19, dtype=jnp.float32).reshape(n, 19) / 3.0
+    f = shard_map(lambda v: C.allreduce(v[0], "x", "rhd")[None],
+                  mesh=sub, in_specs=P("x"), out_specs=P("x"))
+    npo2[n] = bool(np.allclose(np.asarray(f(y2)),
+                               np.tile(np.asarray(y2.sum(0)), (n, 1)),
+                               rtol=1e-5))
+results["rhd_non_pow2"] = all(npo2.values())
+results["rhd_non_pow2_detail"] = npo2
+
 # odd sizes exercise padding
 y = jnp.arange(8 * 13, dtype=jnp.float32).reshape(8, 13)
 wanty = np.asarray(y.sum(0))
@@ -110,7 +140,8 @@ def results():
     "allreduce_cps_None", "allreduce_hcps_(4, 2)", "allreduce_hcps_(2, 4)",
     "allreduce_hcps_(2, 2, 2)", "rs_ring_None", "rs_rhd_None",
     "rs_cps_None", "rs_hcps_(4, 2)", "allreduce_pad", "int8_cps_ok",
-    "sync_gentree", "sync_two_axis"])
+    "sync_gentree", "sync_two_axis",
+    "rs_shape_contract", "rs_value_contract", "rhd_non_pow2"])
 def test_collective(results, key):
     assert results[key] is True, (key, results)
 

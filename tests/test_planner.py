@@ -347,3 +347,131 @@ class TestService:
         st = svc.stats()
         assert {"hits", "misses", "hit_rate"} <= set(st["cache"])
         assert st["entries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Executable plans (get_executable) + axis-plan config threading
+# ---------------------------------------------------------------------------
+class TestExecutable:
+    def test_get_executable_caches_schedule_on_entry(self):
+        svc = PlannerService()
+        topo = symmetric_tree(2, 4)
+        r1 = svc.get_executable(topo, 1 << 20)
+        r2 = svc.get_executable(topo, 1 << 20)
+        assert r1.schedule is not None
+        assert r2.schedule is r1.schedule      # lowered once per entry
+        assert r2.source == "memory"
+
+    def test_get_executable_disk_warm_relowers(self, tmp_path):
+        import numpy as np
+        path = str(tmp_path / "plans.json")
+        topo = symmetric_tree(2, 4)
+        svc = PlannerService(cache_path=path)
+        svc.get_executable(topo, 1 << 20)
+        svc.save()
+        svc2 = PlannerService(cache_path=path)
+        r = svc2.get_executable(topo, 1 << 20)
+        assert r.source == "disk"              # plan came from disk...
+        assert r.schedule is not None          # ...schedule re-lowered
+        X = np.random.default_rng(0).normal(size=(8, 24))
+        assert np.allclose(r.schedule.run_numpy(X),
+                           np.tile(X.sum(0), (8, 1)))
+
+    def test_get_axis_executable_identity_placement(self):
+        import numpy as np
+        svc = PlannerService()
+        r = svc.get_axis_executable("data", 6, 1e5)
+        assert r.schedule.n == 6
+        X = np.random.default_rng(1).normal(size=(6, 17))
+        assert np.allclose(r.schedule.run_numpy(X),
+                           np.tile(X.sum(0), (6, 1)))
+
+    def test_axis_plans_honour_gentree_kwargs(self):
+        """Satellite fix: a candidate-restricted service must not fall
+        back to default candidates for cold axis pricing."""
+        svc = PlannerService(gentree_kwargs={"candidates": ("ring",)})
+        out = svc.get_axis_plans([("data", 8)], 1e6)
+        assert [p.strategy for p in out] == ["ring"]
+        # warm hit returns the same restricted answer
+        assert [p.strategy for p in svc.get_axis_plans(
+            [("data", 8)], 1e6)] == ["ring"]
+
+    def test_axis_plans_engine_threads_and_keys_separate(self):
+        """engine="reference"/"fast" reach plan_axes_gentree (gentree-based
+        axis pricing) and differently-configured services never share an
+        axis cache entry."""
+        shared = PlanCache(capacity=16)
+        s_default = PlannerService(cache=shared)
+        s_ring = PlannerService(cache=shared,
+                                gentree_kwargs={"candidates": ("ring",)})
+        s_ref = PlannerService(cache=shared, engine="reference")
+        s_fast = PlannerService(cache=shared, engine="fast")
+        d = s_default.get_axis_plans([("data", 8)], 1e6)
+        r = s_ring.get_axis_plans([("data", 8)], 1e6)
+        assert [p.strategy for p in r] == ["ring"]
+        assert [p.strategy for p in d] != ["ring"]   # no key collision
+        # both engines run the real gentree search and agree on the winner
+        assert (s_ref.get_axis_plans([("data", 8)], 1e6)
+                == s_fast.get_axis_plans([("data", 8)], 1e6))
+
+    def test_plan_axes_gentree_explicit_kwargs(self):
+        out = plan_axes_gentree([("data", 12)], 1e6,
+                                gentree_kwargs={"candidates": ("cps",)})
+        assert [p.strategy for p in out] == ["cps"]
+
+    def test_annotated_plan_survives_json_round_trip(self):
+        from repro.core import plans as plans_mod2
+        from repro.core.lower import lower_plan
+        p = plans_mod2.ring(4, 16.0)
+        q = plan_from_json(plan_to_json(p))
+        assert q.num_blocks == p.num_blocks
+        assert q.steps[0].transfers[0].blocks == \
+            p.steps[0].transfers[0].blocks
+        lower_plan(q)          # still executable after the round-trip
+
+    def test_legacy_json_rows_load_unannotated(self):
+        d = {"name": "old", "n": 2, "size": 2.0, "servers": None,
+             "steps": [{"transfers": [[0, 1, 1.0]],
+                        "reduces": [[1, 2, 1.0]]}]}
+        q = plan_from_json(d)
+        assert q.num_blocks is None
+        assert q.steps[0].transfers[0].blocks is None
+
+    def test_axis_executable_level_and_params_reach_pricing(self):
+        """strategy="plan" pricing must see the axis's Table-5 level class
+        and any SyncConfig.params override — not a fixed default switch."""
+        from repro.core.cost_model import PAPER_TABLE5
+        svc = PlannerService()
+        r_ici = svc.get_axis_executable("pod", 2, 1e6, level="root_sw")
+        r_dci = svc.get_axis_executable("pod", 2, 1e6, level="cross_dc")
+        assert r_dci.key != r_ici.key
+        assert r_dci.predicted_time != r_ici.predicted_time
+        r_ovr = svc.get_axis_executable("pod", 2, 1e6, level="root_sw",
+                                        params=PAPER_TABLE5)
+        assert r_ovr.key != r_ici.key
+        assert r_ovr.schedule is not None
+
+    def test_plan_strategy_levels_match_gentree_indexing(self):
+        """resolve_axis_plans(strategy="plan") must price each axis at the
+        same Table-5 level as plan_axes_gentree: size-1 axes are skipped
+        but still occupy their mesh level position."""
+        from repro.core.sync import SyncConfig, resolve_axis_plans
+        from repro.planner.service import (PlannerService,
+                                           set_default_service)
+        svc = PlannerService()
+        set_default_service(svc)
+        try:
+            pl = resolve_axis_plans([("data", 1), ("pod", 4)],
+                                    SyncConfig(strategy="plan"), 1e6)
+            assert [p.axis for p in pl] == ["pod"]
+            assert pl[0].schedule is not None and pl[0].schedule.n == 4
+            # the entry resolve created is the CROSS_DC-priced one
+            # (original axis index 1), so the same request warm-hits...
+            r = svc.get_axis_executable("pod", 4, 1e6, level="cross_dc")
+            assert r.source == "memory"
+            assert r.schedule is pl[0].schedule
+            # ...while root_sw pricing would be a different (cold) entry
+            r2 = svc.get_axis_executable("pod", 4, 1e6, level="root_sw")
+            assert r2.key != r.key
+        finally:
+            set_default_service(None)

@@ -1,0 +1,122 @@
+"""Gradient bucket-size sweep on SYM512-style meshes (DESIGN.md §9).
+
+For each mesh-axis factorization the bench sweeps powers-of-two bucket
+sizes through `PlannerService.get_bucket_plan` and prints the modeled
+double-buffered pipeline time next to the serial (unpipelined) and
+per-leaf (one schedule launch per gradient leaf — the pre-bucketing
+execution model) baselines. Gates:
+
+  * the chosen bucket size IS the GenModel argmin of the sweep;
+  * modeled pipelined time <= serial time at the chosen size;
+  * modeled pipelined time < modeled per-leaf time on every mesh
+    (the Table-6-style topologies of the acceptance criteria).
+
+`benchmarks.run --json` records `bucket_sweep_best_ms` (flagship mesh,
+SYM512) and `pipeline_overlap_ratio` (pipelined/serial at the argmin —
+< 1.0 means overlap wins) in BENCH_core.json so the trajectory is
+tracked across PRs. Model-only: no devices needed.
+
+    PYTHONPATH=src python -m benchmarks.bucket_bench [--json PATH]
+"""
+from __future__ import annotations
+
+from repro.core.bucketing import pipelined_time, serial_time
+from repro.planner.service import PlannerService
+
+from .common import fmt_table
+
+# DP-axis views of the Table-6-scale networks: leaf axis rides the
+# pod/ICI fabric ("root_sw"), outer axes the DCI ("cross_dc") — the
+# factorizations launch/mesh.py would produce for these chip counts.
+MESHES = {
+    "SYM512": [("data", 32), ("pod", 16)],     # 16 pods x 32 chips
+    "SYM384": [("data", 24), ("pod", 16)],
+    "SS32": [("data", 32)],                    # single-switch pod
+}
+FLAGSHIP = "SYM512"
+# transformer-ish leaf census: a few big matrices, many small vectors;
+# the sweep total IS the leaf-census total, so the per-leaf baseline and
+# the bucketed candidates price the same workload
+LEAF_SIZES = [1_000_000] * 12 + [250_000] * 24 + [25_000] * 60 + [4096] * 96
+TOTAL_FLOATS = float(sum(LEAF_SIZES))          # ~80 MB of f32 gradients
+
+
+def run() -> dict:
+    svc = PlannerService()
+    rows = []
+    out: dict = {"ok": True}
+    for mesh_name, axes in MESHES.items():
+        bp = svc.get_bucket_plan(axes, TOTAL_FLOATS,
+                                 leaf_sizes=LEAF_SIZES)
+        # Live gate: recompute the pipeline model from the recorded
+        # per-axis halves (t_rs/t_ag) instead of re-minimizing the stored
+        # totals — a service that ranked by the wrong field, or whose
+        # stored times drifted from the model, fails here.
+        for bf, row in bp.sweep.items():
+            re_p = pipelined_time(row["t_rs"], row["t_ag"],
+                                  row["num_buckets"])
+            re_s = serial_time(row["t_rs"], row["t_ag"],
+                               row["num_buckets"])
+            assert abs(re_p - row["pipelined"]) < 1e-12, (mesh_name, bf)
+            assert abs(re_s - row["serial"]) < 1e-12, (mesh_name, bf)
+        argmin = min(bp.sweep, key=lambda b: (pipelined_time(
+            bp.sweep[b]["t_rs"], bp.sweep[b]["t_ag"],
+            bp.sweep[b]["num_buckets"]), b))
+        assert bp.bucket_floats == argmin, (
+            f"{mesh_name}: chosen bucket {bp.bucket_floats} != GenModel "
+            f"argmin {argmin}")
+        assert bp.predicted_pipelined <= bp.predicted_serial + 1e-12, (
+            f"{mesh_name}: pipelined model worse than serial")
+        assert bp.predicted_pipelined < bp.predicted_per_leaf, (
+            f"{mesh_name}: pipelined {bp.predicted_pipelined:.6f}s does "
+            f"not beat per-leaf {bp.predicted_per_leaf:.6f}s")
+        for bf in sorted(bp.sweep):
+            row = bp.sweep[bf]
+            rows.append({
+                "mesh": mesh_name,
+                "bucket (MiB)": f"{bf * 4 / 2**20:.2f}",
+                "K": row["num_buckets"],
+                "pipelined ms": f"{row['pipelined'] * 1e3:.3f}",
+                "serial ms": f"{row['serial'] * 1e3:.3f}",
+                "chosen": "<=" if bf == bp.bucket_floats else "",
+            })
+        overlap = (bp.predicted_pipelined / bp.predicted_serial
+                   if bp.predicted_serial else 1.0)
+        speedup_vs_leaf = bp.predicted_per_leaf / bp.predicted_pipelined
+        print(f"{mesh_name}: chosen {bp.bucket_floats * 4 / 2**20:.2f} MiB "
+              f"buckets (K={bp.num_buckets}), pipelined "
+              f"{bp.predicted_pipelined * 1e3:.3f} ms, serial "
+              f"{bp.predicted_serial * 1e3:.3f} ms, per-leaf "
+              f"{bp.predicted_per_leaf * 1e3:.3f} ms "
+              f"({speedup_vs_leaf:.1f}x vs per-leaf)")
+        out[f"{mesh_name}_best_ms"] = round(
+            bp.predicted_pipelined * 1e3, 4)
+        out[f"{mesh_name}_vs_per_leaf"] = round(speedup_vs_leaf, 2)
+        if mesh_name == FLAGSHIP:
+            out["bucket_sweep_best_ms"] = round(
+                bp.predicted_pipelined * 1e3, 4)
+            out["pipeline_overlap_ratio"] = round(overlap, 4)
+            out["bucket_floats"] = bp.bucket_floats
+
+    print(fmt_table(rows, ["mesh", "bucket (MiB)", "K", "pipelined ms",
+                           "serial ms", "chosen"],
+                    "bucket-size sweep (GenModel-priced, double-buffered "
+                    "pipeline model)"))
+    return out
+
+
+def main() -> None:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    out = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

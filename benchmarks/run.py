@@ -24,10 +24,11 @@ def main() -> None:
                          "BENCH_planner.json")
     args = ap.parse_args()
 
-    from . import (exec_bench, fig3_incast, fig4_delta_microbench,
-                   fig8_model_accuracy, planner_bench, roofline,
-                   simfast_bench, table3_cpu_testbed, table4_gpu_testbed,
-                   table5_fitting, table6_plan_selection, table7_large_scale)
+    from . import (bucket_bench, exec_bench, fig3_incast,
+                   fig4_delta_microbench, fig8_model_accuracy,
+                   planner_bench, roofline, simfast_bench,
+                   table3_cpu_testbed, table4_gpu_testbed, table5_fitting,
+                   table6_plan_selection, table7_large_scale)
     all_benches = [
         ("fig3", fig3_incast.run),
         ("fig4", fig4_delta_microbench.run),
@@ -41,6 +42,7 @@ def main() -> None:
         ("planner", planner_bench.run),
         ("simfast", simfast_bench.run),
         ("exec", exec_bench.run),
+        ("bucket", bucket_bench.run),
     ]
     only = set(args.only.split(",")) if args.only else None
 

@@ -1,0 +1,403 @@
+"""Gradient bucketing + double-buffered pipelined plan execution (DESIGN.md §9).
+
+GenModel's two new terms pull the gradient bucket size in opposite
+directions: the memory-access term (γ/δ) and the per-round launch term (α)
+penalize many small fragmented reduces, while the incast (ε) and
+serialization terms penalize one monolithic transfer whose rounds cannot
+overlap. The paper's own cost model therefore *picks* the bucket size:
+`PlannerService.get_bucket_plan` sweeps powers-of-two candidates, prices
+each with GenModel (FastEngine by default), and returns the argmin together
+with one lowered `CompiledSchedule` per axis (cached on the plan entry —
+never re-lowered per step).
+
+This module holds the mechanics around that decision:
+
+  * `partition(sizes, dtypes, cap[, itemsizes])` — split the flattened
+    gradient pytree into size-bounded (byte-bounded with itemsizes),
+    dtype-homogeneous `Bucket`s (empty leaves pass through, an
+    oversized leaf rides alone);
+  * `pipelined_time` / `serial_time` — the two-stage pipeline model the
+    sweep prices: with K buckets, bucket k's AllGather half overlaps
+    bucket k+1's ReduceScatter half, so
+    T = T_RS + (K−1)·max(T_RS, T_AG) + T_AG instead of K·(T_RS + T_AG);
+  * `execute_buckets` — the double-buffered executor: per bucket an RS
+    chain over the DP axes (leaf axis first) then the mirrored AG chain,
+    issued so that bucket k+1's RS is in flight before bucket k's AG
+    drains (XLA may overlap the independent collectives; the issuance
+    order documents the modeled schedule). Falls back to sequential
+    per-bucket `allreduce` when a schedule has no canonical RS/AG halves;
+  * `sync_bucketed` — the `SyncConfig(strategy="plan")` entry point used
+    by `core.sync.sync_gradients`;
+  * `zero3_gather_bucketed` / `zero3_scatter_bucketed` — the ZeRO-3
+    trainer's bucketed param-AllGather / grad-ReduceScatter (one schedule
+    launch per bucket instead of per leaf; single-DP-axis layout);
+  * `invalidate_schedules` — drops every lowered schedule and bucket plan
+    derived from a service's cache. Called after `elastic_remesh` and on
+    `FaultTolerantLoop` resume: a schedule compiled for the old axis size
+    must not survive an axis-size change.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+
+# ---------------------------------------------------------------------------
+# Config + bucket structure
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BucketConfig:
+    """How gradients are bucketed for plan execution.
+
+    bucket_bytes: None → "auto" (GenModel argmin over the sweep);
+    an explicit int fixes the bucket size; 0 disables bucketing entirely
+    (legacy per-leaf execution).
+    """
+    bucket_bytes: int | None = None
+    pipeline: bool = True               # overlap AG(k) with RS(k+1)
+    min_bucket_bytes: int = 1 << 18     # sweep floor (256 KiB)
+    max_bucket_bytes: int = 1 << 28     # sweep ceiling (256 MiB)
+
+    def __post_init__(self):
+        if self.bucket_bytes is not None and self.bucket_bytes < 0:
+            raise ValueError(
+                f"bucket_bytes must be None (auto), 0 (off) or positive; "
+                f"got {self.bucket_bytes}")
+        if not 0 < self.min_bucket_bytes <= self.max_bucket_bytes:
+            raise ValueError(
+                f"need 0 < min_bucket_bytes <= max_bucket_bytes; got "
+                f"{self.min_bucket_bytes}..{self.max_bucket_bytes}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.bucket_bytes != 0
+
+    def key(self) -> tuple:
+        return (self.bucket_bytes if self.bucket_bytes is not None else -1,
+                int(self.pipeline), self.min_bucket_bytes,
+                self.max_bucket_bytes)
+
+
+@dataclass(frozen=True)
+class Bucket:
+    """One dtype-homogeneous group of leaf positions, bounded in size."""
+    indices: tuple[int, ...]            # leaf positions (flattened order)
+    sizes: tuple[int, ...]              # element count per member leaf
+    dtype: object                       # shared numpy/jax dtype
+
+    @property
+    def size(self) -> int:
+        return sum(self.sizes)
+
+
+def partition(sizes: Sequence[int], dtypes: Sequence[object],
+              cap: int | float,
+              itemsizes: Sequence[int] | None = None) -> list[Bucket]:
+    """Greedy, order-preserving partition of the flattened leaf list into
+    dtype-homogeneous buckets. `cap` bounds each bucket's total *elements*
+    — or total *bytes* when `itemsizes` (per-leaf element widths) is
+    given, so a mixed f32/bf16 pytree honours one byte budget across both
+    dtype classes instead of letting the wider dtype carry itemsize× the
+    bound.
+
+    Leaves keep their relative order within each dtype class; a leaf larger
+    than the bound gets a bucket of its own; empty (size-0) leaves are
+    assigned to no bucket (the executor passes them through unchanged).
+    Buckets are returned ordered by their first member's leaf index, so the
+    output is deterministic for a given leaf list.
+    """
+    cap = max(1, int(cap))
+    weights = [int(s) for s in sizes] if itemsizes is None else \
+        [int(s) * int(w) for s, w in zip(sizes, itemsizes)]
+    open_by_dtype: dict[object, list[tuple[int, int]]] = {}
+    open_weight: dict[object, int] = {}
+    closed: list[list[tuple[int, int]]] = []
+
+    def close(key):
+        members = open_by_dtype.pop(key, None)
+        open_weight.pop(key, None)
+        if members:
+            closed.append(members)
+
+    for i, (sz, dt) in enumerate(zip(sizes, dtypes)):
+        sz = int(sz)
+        if sz == 0:
+            continue
+        key = str(dt)
+        cur = open_by_dtype.setdefault(key, [])
+        if cur and open_weight.get(key, 0) + weights[i] > cap:
+            close(key)
+            cur = open_by_dtype.setdefault(key, [])
+        cur.append((i, sz))
+        open_weight[key] = open_weight.get(key, 0) + weights[i]
+        if weights[i] >= cap:
+            close(key)
+    for key in list(open_by_dtype):
+        close(key)
+
+    closed.sort(key=lambda members: members[0][0])
+    return [Bucket(indices=tuple(i for i, _ in members),
+                   sizes=tuple(s for _, s in members),
+                   dtype=dtypes[members[0][0]])
+            for members in closed]
+
+
+# ---------------------------------------------------------------------------
+# Pipeline time model (what the sweep prices)
+# ---------------------------------------------------------------------------
+def serial_time(t_rs: float, t_ag: float, k: int) -> float:
+    """K buckets executed back-to-back: no overlap."""
+    return max(0, k) * (t_rs + t_ag)
+
+
+def pipelined_time(t_rs: float, t_ag: float, k: int) -> float:
+    """Two-stage software pipeline: bucket k's AG overlaps bucket k+1's RS,
+    so the steady state advances one bucket per max(T_RS, T_AG)."""
+    if k <= 0:
+        return 0.0
+    if k == 1:
+        return t_rs + t_ag
+    return t_rs + (k - 1) * max(t_rs, t_ag) + t_ag
+
+
+# ---------------------------------------------------------------------------
+# Executors (call inside shard_map; all shapes static at trace time)
+# ---------------------------------------------------------------------------
+def supports_halves(axis_plans) -> bool:
+    """True when every axis schedule exposes the canonical RS/AG halves
+    the double-buffered pipeline needs; otherwise execute_buckets
+    degrades to sequential whole-plan allreduce per bucket."""
+    return all(pl.schedule is not None
+               and getattr(pl.schedule, "blocks_per_shard", None)
+               for pl in axis_plans)
+
+
+def _rs_chain(vec, axis_plans, fused_reduce):
+    """Hierarchical ReduceScatter: leaf axis first. Returns the final shard
+    plus the pre-RS vector size per axis (needed to undo schedule padding
+    on the mirrored AG chain)."""
+    sizes = []
+    for pl in axis_plans:
+        sizes.append(vec.size)
+        vec = pl.schedule.reduce_scatter(vec, pl.axis,
+                                         fused_reduce=fused_reduce)
+    return vec, sizes
+
+
+def _ag_chain(shard, axis_plans, sizes):
+    for pl, sz in zip(reversed(axis_plans), reversed(sizes)):
+        shard = pl.schedule.all_gather(shard, pl.axis)[:sz]
+    return shard
+
+
+def _allreduce_chain(vec, axis_plans, fused_reduce):
+    for pl in axis_plans:
+        vec = pl.schedule.allreduce(vec, pl.axis, fused_reduce=fused_reduce)
+    return vec
+
+
+def execute_buckets(leaves, buckets: Sequence[Bucket], axis_plans, *,
+                    pipeline: bool = True,
+                    fused_reduce: Callable | None = None) -> list:
+    """AllReduce every bucket across the DP axes; returns the reduced
+    leaf list (leaves outside any bucket — empty leaves — unchanged).
+
+    Scheduler state machine (DESIGN.md §9): each bucket moves
+    QUEUED → RS → SHARD → AG → DONE with at most two buckets in flight;
+    at step k the executor issues RS(bucket k) *then* AG(bucket k−1), so
+    the next bucket's reduce is on the wire before the previous bucket's
+    gather drains.
+    """
+    import jax.numpy as jnp
+
+    out = list(leaves)
+    if not buckets:
+        return out
+    flats = []
+    for bk in buckets:
+        parts = [leaves[i].reshape(-1) for i in bk.indices]
+        flats.append(parts[0] if len(parts) == 1
+                     else jnp.concatenate(parts))
+
+    k = len(flats)
+    results: list = [None] * k
+    if pipeline and k > 1 and supports_halves(axis_plans):
+        shards, sizes = [None] * k, [None] * k
+        for i in range(k):
+            shards[i], sizes[i] = _rs_chain(flats[i], axis_plans,
+                                            fused_reduce)
+            if i:
+                results[i - 1] = _ag_chain(shards[i - 1], axis_plans,
+                                           sizes[i - 1])
+        results[k - 1] = _ag_chain(shards[k - 1], axis_plans, sizes[k - 1])
+    elif supports_halves(axis_plans):
+        for i in range(k):
+            shard, sizes = _rs_chain(flats[i], axis_plans, fused_reduce)
+            results[i] = _ag_chain(shard, axis_plans, sizes)
+    else:
+        # no canonical shard layout on some axis: sequential whole-plan
+        # AllReduce per bucket (still amortizes per-leaf launches)
+        for i in range(k):
+            results[i] = _allreduce_chain(flats[i], axis_plans,
+                                          fused_reduce)
+
+    for bk, res in zip(buckets, results):
+        off = 0
+        for i, sz in zip(bk.indices, bk.sizes):
+            out[i] = res[off:off + sz].reshape(leaves[i].shape)
+            off += sz
+    return out
+
+
+def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
+                  service=None, fused_reduce: Callable | None = None):
+    """Bucketed, double-buffered gradient AllReduce — the
+    `SyncConfig(strategy="plan")` execution path of
+    `core.sync.sync_gradients`. Must run inside shard_map with every
+    axis present. The bucket size, per-axis plans and their lowered
+    schedules come from `PlannerService.get_bucket_plan` (resolved at
+    trace time; warm lookups are a cache probe)."""
+    import jax
+
+    leaves, treedef = jax.tree.flatten(grads)
+    sizes = [int(x.size) for x in leaves]
+    total = float(sum(sizes))
+    live = [(a, int(n)) for a, n in axes if int(n) > 1]
+    if not live or total == 0 or not leaves:
+        return grads
+
+    if service is None:
+        from repro.planner.service import default_service
+        service = default_service()
+    bcfg = BucketConfig(bucket_bytes=cfg.bucket_bytes,
+                        pipeline=cfg.pipeline)
+    # price in f32-equivalent units of the tree's total BYTES, so the
+    # chosen byte budget does not depend on which dtype happens to
+    # flatten first in a mixed-dtype pytree
+    total_bytes = sum(int(x.size) * x.dtype.itemsize for x in leaves)
+    bplan = service.get_bucket_plan(axes, total_bytes / 4.0,
+                                    dtype="float32",
+                                    params=cfg.params, config=bcfg)
+    # byte-capped partition: every dtype class honours the same budget
+    buckets = partition(sizes, [x.dtype for x in leaves],
+                        bplan.bucket_bytes,
+                        itemsizes=[x.dtype.itemsize for x in leaves])
+    out = execute_buckets(leaves, buckets, bplan.axis_plans,
+                          pipeline=bcfg.pipeline,
+                          fused_reduce=fused_reduce)
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-3 bucketed halves (single DP axis; launch/train.py manual engine)
+# ---------------------------------------------------------------------------
+def _pad_to(vec, multiple: int):
+    import jax.numpy as jnp
+    pad = (-vec.size) % multiple
+    if pad:
+        vec = jnp.concatenate([vec, jnp.zeros((pad,), vec.dtype)])
+    return vec
+
+
+def zero3_gather_bucketed(shards, specs, plan, bucket_bytes: int, n: int
+                          ) -> list:
+    """Bucketed parameter AllGather for the ZeRO-3 row layout.
+
+    `shards[ℓ]` is leaf ℓ's flat per-device shard (row i of the leaf
+    padded to a multiple of `n` and reshaped (n, chunk_ℓ) — the
+    `shard_params_zero3` layout); `specs[ℓ] = (shape, dtype)` describes
+    the full leaf. Same-dtype shards concatenate into one row per bucket,
+    padded to the schedule's blocks-per-shard multiple, and ONE
+    `all_gather` launch per bucket reassembles the (n, ΣC) matrix whose
+    columns split back into the full leaves — per-leaf α collapses to
+    per-bucket α. The shard cap is `bucket_bytes / n`: the gather
+    launch reassembles n× its input, so this keeps the moved data per
+    launch at the bucket size the GenModel sweep actually priced."""
+    import jax.numpy as jnp
+
+    cs = plan.schedule
+    k = cs.blocks_per_shard
+    buckets = partition([s.size for s in shards],
+                        [s.dtype for s in shards],
+                        max(1, int(bucket_bytes) // max(1, int(n))),
+                        itemsizes=[s.dtype.itemsize for s in shards])
+    out = [None] * len(shards)
+    for bk in buckets:
+        row = jnp.concatenate([shards[i].reshape(-1) for i in bk.indices]) \
+            if len(bk.indices) > 1 else shards[bk.indices[0]].reshape(-1)
+        ncols = row.size
+        row = _pad_to(row, k)
+        mat = cs.all_gather(row, plan.axis).reshape(n, -1)[:, :ncols]
+        off = 0
+        for i, c in zip(bk.indices, bk.sizes):
+            shape, dtype = specs[i]
+            count = 1
+            for s in shape:
+                count *= s
+            out[i] = (mat[:, off:off + c].reshape(-1)[:count]
+                      .reshape(shape).astype(dtype))
+            off += c
+    for i, (shape, dtype) in enumerate(specs):
+        if out[i] is None:          # empty leaf: nothing was gathered
+            out[i] = jnp.zeros(shape, dtype)
+    return out
+
+
+def zero3_scatter_bucketed(fulls, plan, bucket_bytes: int, n: int) -> list:
+    """Bucketed gradient ReduceScatter (inverse layout of
+    `zero3_gather_bucketed`): each full leaf pads to a multiple of `n`
+    and contributes its (n, chunk_ℓ) rows as columns of the bucket
+    matrix; ONE `reduce_scatter` launch per bucket returns row i — the
+    concatenation of every member leaf's canonical shard i."""
+    import jax.numpy as jnp
+
+    cs = plan.schedule
+    k = cs.blocks_per_shard
+    sizes = [int(x.size) for x in fulls]
+    chunks = [(sz + (-sz) % n) // n for sz in sizes]
+    buckets = partition(sizes, [x.dtype for x in fulls], bucket_bytes,
+                        itemsizes=[x.dtype.itemsize for x in fulls])
+    out = [None] * len(fulls)
+    for bk in buckets:
+        mats = [_pad_to(fulls[i].reshape(-1), n).reshape(n, -1)
+                for i in bk.indices]
+        mat = mats[0] if len(mats) == 1 else jnp.concatenate(mats, axis=1)
+        ncols = mat.shape[1]
+        pad = (-ncols) % k
+        if pad:
+            mat = jnp.concatenate(
+                [mat, jnp.zeros((n, pad), mat.dtype)], axis=1)
+        shard = cs.reduce_scatter(mat.reshape(-1), plan.axis)
+        off = 0
+        for i in bk.indices:
+            out[i] = shard[off:off + chunks[i]]
+            off += chunks[i]
+    for i, x in enumerate(fulls):
+        if out[i] is None:          # empty leaf: empty shard
+            out[i] = jnp.zeros((0,), x.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Invalidation (elastic remesh / fault-tolerant resume)
+# ---------------------------------------------------------------------------
+def invalidate_schedules(service=None) -> int:
+    """Drop every lowered `CompiledSchedule` and cached bucket plan derived
+    from the service's plan cache (the priced plans themselves survive —
+    they are placement-independent). Returns the number of artifacts
+    dropped. With `service=None` the process-wide default service is
+    invalidated *if it exists* (never created just to be emptied).
+
+    Call after any event that changes the executing mesh: an axis-size
+    change (`runtime.ft.elastic_remesh`), a fault-tolerant restore onto
+    possibly-different hardware (`FaultTolerantLoop`). A stale schedule
+    compiled for the old axis size would raise at best (`_check_axis`)
+    and silently mis-reduce at worst; after invalidation the next lookup
+    re-lowers against the new axis sizes."""
+    if service is None:
+        from repro.planner.service import peek_default_service
+        service = peek_default_service()
+        if service is None:
+            return 0
+    return service.invalidate_executables()

@@ -288,34 +288,104 @@ def allreduce(x: jax.Array, axis_name: str, strategy: str = "psum",
     return full.reshape(shape)
 
 
+# one process-wide warning when allreduce_planned degrades to the flat
+# plan-type labels (tests reset this to re-assert the warning fires)
+_planned_fallback_warned = False
+
+
 def allreduce_planned(x: jax.Array, axis_name: str, *,
                       service=None,
-                      fused_reduce: Callable | None = None) -> jax.Array:
+                      fused_reduce: Callable | None = None,
+                      bucketing=None,
+                      stats: dict | None = None) -> jax.Array:
     """AllReduce that executes the PlannerService's GenTree plan directly
     (cached, GenModel-priced — DESIGN.md §5/§8). The lookup + lowering
     happen at trace time (axis size and per-device shard size are static),
     so the compiled schedule's ppermute rounds are staged straight into
     the jitted computation; warm lookups are a cache probe, not a GenTree
-    run. Falls back to the flat plan-type labels only if the plan cannot
-    be lowered (e.g. a legacy unannotated cache entry).
+    run.
+
+    `bucketing` (a `core.bucketing.BucketConfig`) splits x into
+    GenModel-sized buckets executed through the double-buffered RS/AG
+    pipeline (DESIGN.md §9). Falls back to the flat plan-type labels only
+    if the plan cannot be lowered (e.g. a legacy unannotated cache
+    entry); the fallback ignores any bucketing config, warns once per
+    process, and records its reason in `stats` (pass a dict to receive
+    `{"mode", "fallback_reason", "bucketing_ignored", ...}`). Like the
+    plan lookup itself, `stats` is written at TRACE time — a dict passed
+    into an already-jitted computation is never touched.
     """
     from repro.planner.service import default_service
     svc = service or default_service()
+    if stats is None:
+        stats = {}
+    else:
+        stats.clear()   # a reused dict must not mix keys across calls
     n = lax.psum(1, axis_name)        # static: psum of a python int
     if int(n) < 2:
+        stats["mode"] = "noop"
         return x
     from repro.core.lower import LoweringError
+    reason = None
     try:
+        if bucketing is not None and bucketing.enabled:
+            from repro.core.bucketing import (Bucket, execute_buckets,
+                                              supports_halves)
+            bplan = svc.get_bucket_plan([(axis_name, int(n))],
+                                        float(x.size), dtype=str(x.dtype),
+                                        config=bucketing)
+            # a single array has no leaf boundaries to bucket at — chunk
+            # it into bucket-sized pieces (each its own bucket) so the
+            # RS/AG pipeline overlaps
+            bf = max(1, int(bplan.bucket_floats))
+            flat = x.reshape(-1)
+            pieces = [flat[off:off + bf]
+                      for off in range(0, max(flat.size, 1), bf)]
+            buckets = [Bucket(indices=(i,), sizes=(p.size,), dtype=p.dtype)
+                       for i, p in enumerate(pieces) if p.size]
+            out = execute_buckets(pieces, buckets, bplan.axis_plans,
+                                  pipeline=bucketing.pipeline,
+                                  fused_reduce=fused_reduce)
+            # pipeline reports what actually ran: a schedule without
+            # canonical RS/AG halves (or a single bucket) degrades to
+            # sequential whole-plan allreduce per bucket
+            halved = supports_halves(bplan.axis_plans)
+            stats.update(mode="bucketed",
+                         bucket_floats=bf, num_buckets=len(buckets),
+                         halves=halved,
+                         pipeline=bool(bucketing.pipeline and halved
+                                       and len(buckets) > 1))
+            return (out[0] if len(out) == 1
+                    else jnp.concatenate(out)).reshape(x.shape)
         resp = svc.get_axis_executable(axis_name, int(n), float(x.size))
-    except LoweringError:
+    except LoweringError as e:
+        reason = f"plan could not be lowered: {e}"
         resp = None
     if resp is not None and resp.schedule is not None:
+        stats.update(mode="plan", algo=resp.algo, source=resp.source)
         return resp.schedule.allreduce(x, axis_name,
                                        fused_reduce=fused_reduce)
+    # ---- flat-label fallback ----------------------------------------------
+    reason = reason or "service returned no executable schedule"
+    stats.update(mode="flat-label", fallback_reason=reason,
+                 bucketing_ignored=bucketing is not None
+                 and bucketing.enabled)
+    global _planned_fallback_warned
+    if not _planned_fallback_warned:
+        _planned_fallback_warned = True
+        import warnings
+        warnings.warn(
+            "allreduce_planned fell back to flat plan-type labels "
+            f"({reason})"
+            + ("; the requested bucketing config is IGNORED on this path"
+               if stats["bucketing_ignored"] else ""),
+            RuntimeWarning, stacklevel=2)
     plans = svc.get_axis_plans([(axis_name, int(n))], float(x.size))
     if not plans:
+        stats["mode"] = "psum"
         return lax.psum(x, axis_name)
     pl = plans[0]
+    stats["strategy"] = pl.strategy
     return allreduce(x, axis_name, pl.strategy, factors=pl.factors,
                      fused_reduce=fused_reduce)
 

@@ -36,11 +36,18 @@ class AxisPlan:
 class SyncConfig:
     """strategy: auto|psum|ring|rhd|cps|hcps|gentree|plan per DP axis.
     "gentree" picks a flat plan-type label per axis; "plan" lowers the
-    GenTree Plan IR itself and executes its compiled schedule."""
+    GenTree Plan IR itself and executes its compiled schedule — bucketed
+    and pipelined by default (core.bucketing, DESIGN.md §9):
+    bucket_bytes=None lets GenModel pick the bucket size (the sweep
+    argmin), an explicit value pins it, and 0 disables bucketing
+    (legacy per-leaf execution). pipeline=False runs buckets
+    back-to-back instead of overlapping AG(k) with RS(k+1)."""
     strategy: str = "auto"
     factors: tuple[int, ...] | None = None   # for explicit hcps
     compress: str | None = None              # None | "int8"
     params: dict[str, GenModelParams] | None = None
+    bucket_bytes: int | None = None          # None=auto | 0=off | fixed
+    pipeline: bool = True                    # double-buffer RS/AG halves
 
 
 # Table-5 class per mesh-axis position: the leaf axis rides the pod fabric
@@ -231,6 +238,15 @@ def sync_gradients(grads, axes: Sequence[tuple[str, int]], cfg: SyncConfig,
     if cfg.strategy == "auto":
         names = tuple(a for a, n in axes if n > 1)
         return jax.tree.map(lambda g: lax.psum(g, names), grads)
+
+    if cfg.strategy == "plan" and cfg.bucket_bytes != 0:
+        # Bucketed, double-buffered execution (DESIGN.md §9): the whole
+        # pytree partitions into GenModel-sized buckets and bucket k's
+        # AllGather half overlaps bucket k+1's ReduceScatter half,
+        # instead of one schedule launch per leaf. bucket_bytes=0 opts
+        # back into the per-leaf path below.
+        from .bucketing import sync_bucketed
+        return sync_bucketed(grads, axes, cfg, fused_reduce=fused_reduce)
 
     plans = resolve_axis_plans(axes, cfg, size_floats=float(
         sum(x.size for x in jax.tree.leaves(grads))))

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Sequence
 
 import jax
@@ -160,6 +161,9 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
     dp = dp_axes(mesh)
     sizes = axis_sizes(mesh)
     axes = [(a, sizes[a]) for a in dp if sizes[a] > 1]
+    ndp = 1
+    for _, s in axes:
+        ndp *= s
     shapes = api.params_spec()
     leaf_shapes = jax.tree.map(lambda l: (l.shape, l.dtype), shapes,
                                is_leaf=lambda x: hasattr(x, "shape"))
@@ -186,30 +190,74 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
                      is_leaf=lambda x: hasattr(x, "shape")),
         is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
         and isinstance(x[0], tuple))
+    # f32-equivalent size of the full parameter set (total bytes / 4), so
+    # bf16/f16 models are priced at their real data volume rather than at
+    # raw element counts in float32 units
+    total_f32_equiv = sum(
+        int(math.prod(sd[0])) * jnp.dtype(sd[1]).itemsize
+        for sd in flat_sd) / 4.0
+
+    def bucket_plan_for():
+        """Bucketed ZeRO-3 halves (DESIGN.md §9): one schedule launch per
+        dtype-homogeneous bucket instead of per leaf, bucket size the
+        GenModel sweep argmin. Single-DP-axis layout only (the bucket's
+        row layout must match the host-side shard split); multi-axis
+        meshes and schedules without canonical RS/AG halves fall back to
+        the per-leaf path."""
+        if (sync.strategy != "plan" or sync.bucket_bytes == 0
+                or len(axes) != 1):
+            return None
+        svc = planner
+        if svc is None:
+            from repro.planner.service import default_service
+            svc = default_service()
+        from repro.core.bucketing import BucketConfig
+        from repro.core.lower import LoweringError
+        try:
+            bp = svc.get_bucket_plan(
+                axes, total_f32_equiv or 1.0, params=sync.params,
+                config=BucketConfig(bucket_bytes=sync.bucket_bytes,
+                                    pipeline=sync.pipeline))
+        except LoweringError:
+            return None
+        cs = bp.axis_plans[0].schedule if bp.axis_plans else None
+        return bp if cs is not None and cs.blocks_per_shard else None
 
     def step(state, batch):
         from repro.models import actsharding
         actsharding.set_hook(None)    # shard_map bodies are fully manual
 
         def inner(p_shards, opt, batch_local):
+            from repro.core import bucketing
             total_size = sum(
                 float(jnp.size(s)) for s in jax.tree.leaves(p_shards)) or 1.0
-            plans = plans_for(total_size)
+            bplan = bucket_plan_for()
+            plans = None if bplan is not None else plans_for(total_size)
 
             flat_shards = jax.tree.leaves(p_shards)
-            gathered = [
-                _gather_leaf(s[0], sd[0], sd[1], plans)
-                for s, sd in zip(flat_shards, flat_sd)]
+            if bplan is not None:
+                gathered = bucketing.zero3_gather_bucketed(
+                    [s[0] for s in flat_shards], flat_sd,
+                    bplan.axis_plans[0], bplan.bucket_bytes, ndp)
+            else:
+                gathered = [
+                    _gather_leaf(s[0], sd[0], sd[1], plans)
+                    for s, sd in zip(flat_shards, flat_sd)]
             params = jax.tree.unflatten(jax.tree.structure(p_shards),
                                         gathered)
             loss, grads = jax.value_and_grad(
                 lambda p: api.loss_fn(p, batch_local, remat=True))(params)
             # mean over DP shards happens inside the reduce; rescale
-            ndp = 1
-            for _, s in axes:
-                ndp *= s
-            g_shards = jax.tree.map(
-                lambda g: (_scatter_leaf(g, plans) / ndp)[None], grads)
+            if bplan is not None:
+                rows = bucketing.zero3_scatter_bucketed(
+                    jax.tree.leaves(grads), bplan.axis_plans[0],
+                    bplan.bucket_bytes, ndp)
+                g_shards = jax.tree.unflatten(
+                    jax.tree.structure(grads),
+                    [(r / ndp)[None] for r in rows])
+            else:
+                g_shards = jax.tree.map(
+                    lambda g: (_scatter_leaf(g, plans) / ndp)[None], grads)
             loss = jax.lax.pmean(loss, tuple(a for a, _ in axes))
             new_p, new_o, gn = adamw_update(p_shards, g_shards, opt, opt_cfg)
             gn = jax.lax.pmean(gn, tuple(a for a, _ in axes))

@@ -166,6 +166,40 @@ class PlanCache:
         with self._lock:
             self._entries.clear()
 
+    def drop_derived(self, kinds: tuple[str, ...] = ("bucket_plan",)) -> int:
+        """Invalidate derived *executable* artifacts while keeping the
+        priced plans: pops every entry's `_exec` map (lowered
+        `CompiledSchedule`s, keyed by placement) and evicts whole entries
+        whose `kind` is in `kinds` (bucket plans — their chosen size is a
+        function of the axis sizes they were priced for). Returns the
+        number of artifacts dropped. Used by
+        `core.bucketing.invalidate_schedules` after a remesh/resume."""
+        dropped = 0
+        with self._lock:
+            for key in list(self._entries):
+                entry = self._entries[key]
+                if entry.get("kind") in kinds:
+                    del self._entries[key]
+                    dropped += 1
+                    continue
+                execs = entry.pop("_exec", None)
+                if execs:
+                    dropped += len(execs)
+        return dropped
+
+    def derived_count(self, kinds: tuple[str, ...] = ("bucket_plan",)) -> int:
+        """Number of derived executable artifacts currently cached
+        (lowered schedules + bucket-plan entries) — the set
+        `drop_derived` would remove."""
+        with self._lock:
+            count = 0
+            for entry in self._entries.values():
+                if entry.get("kind") in kinds:
+                    count += 1
+                else:
+                    count += len(entry.get("_exec") or ())
+            return count
+
     # ---- persistence -------------------------------------------------------
     def _snapshot_locked(self) -> dict:
         return {k: {kk: vv for kk, vv in v.items()

@@ -59,6 +59,26 @@ class PlanResponse:
     schedule: object | None = None
 
 
+@dataclass(eq=False)
+class BucketPlan:
+    """get_bucket_plan's answer: the GenModel-argmin gradient bucket size
+    for a mesh-axis list, plus one lowered schedule per axis (DESIGN.md
+    §9). `sweep` records every candidate's modeled pipelined/serial time
+    so benchmarks (and the perf gate) can verify the argmin."""
+    axes: tuple[tuple[str, int], ...]     # live axes (n > 1), leaf first
+    bucket_floats: int                    # chosen bucket size, in elements
+    bucket_bytes: int                     # same, in bytes of the priced dtype
+    num_buckets: int                      # for the quoted total size
+    axis_plans: list = field(default_factory=list)   # AxisPlan("plan", …)
+    predicted_pipelined: float = 0.0      # modeled double-buffered total
+    predicted_serial: float = 0.0         # same buckets, no overlap
+    predicted_per_leaf: float | None = None   # per-leaf baseline (if sized)
+    pipeline: bool = True
+    sweep: dict = field(default_factory=dict)  # bucket_floats -> model row
+    source: str = "cold"
+    key: str = ""
+
+
 def _decisions_to_json(decisions) -> dict:
     return {sw: {"algo": d.algo, "factors": d.factors,
                  "rearrange": {str(k): v for k, v in d.rearrange.items()},
@@ -243,6 +263,223 @@ class PlannerService:
         return self.get_executable(topo, max(size_floats, 1.0) * dsize,
                                    dtype, params=eff)
 
+    # ---- bucket plans (gradient bucketing + pipelined execution) -----------
+    @staticmethod
+    def _scaled_plan(plan: Plan, f: float) -> Plan:
+        """The same plan structure at f× the data size (every transfer
+        and reduce scales linearly; block annotations are size-free)."""
+        from repro.core.plans import Step
+        steps = []
+        for st in plan.steps:
+            s = Step()
+            s.transfers = [dataclasses.replace(t, size=t.size * f)
+                           for t in st.transfers]
+            s.reduces = [dataclasses.replace(r, size=r.size * f)
+                         for r in st.reduces]
+            steps.append(s)
+        return Plan(plan.name, plan.n, plan.size * f, steps=steps,
+                    servers=plan.servers, num_blocks=plan.num_blocks)
+
+    def _axis_halves_time(self, n: int, level: str, size_floats: float,
+                          dtype: str, eff) -> tuple[float, float]:
+        """(T_RS, T_AG) of the axis's GenTree plan at `size_floats`: the
+        per-step simulator costs split at the ReduceScatter boundary (the
+        last folding step — the same boundary `core.lower` executes).
+
+        The plan *structure* comes from the size-bucketed cache entry,
+        rescaled to the exact requested size before simulation — so the
+        per-leaf baseline is priced at true leaf sizes instead of being
+        inflated by geometric-bucket snapping (the power-of-two sweep
+        candidates snap to themselves, factor 1)."""
+        from repro.core.sync import level_switch_topo
+        topo = level_switch_topo(int(n), eff, level)
+        dsize = DTYPE_BYTES.get(dtype, 4)
+        size_floats = max(size_floats, 1.0)
+        resp = self.get_plan(topo, size_floats * dsize, dtype, params=eff)
+        plan = resp.plan
+        factor = size_floats / resp.size_floats if resp.size_floats \
+            else 1.0
+        if abs(factor - 1.0) > 1e-12:
+            plan = self._scaled_plan(plan, factor)
+        res = Simulator(topo, eff, unit_bytes=dsize,
+                        engine=self.engine).simulate(plan)
+        folds = [i for i, st in enumerate(plan.steps) if st.reduces]
+        split = folds[-1] if folds else len(plan.steps) - 1
+        return (float(sum(res.per_step[:split + 1])),
+                float(sum(res.per_step[split + 1:])))
+
+    def get_bucket_plan(self, axes: Sequence[tuple[str, int]],
+                        total_floats: float, dtype: str = "float32", *,
+                        params: Mapping[str, GenModelParams] | None = None,
+                        config=None,
+                        leaf_sizes: Sequence[int] | None = None
+                        ) -> BucketPlan:
+        """GenModel-argmin gradient bucket size for a DP-axis list, with
+        one lowered `CompiledSchedule` per axis (DESIGN.md §9).
+
+        Sweeps powers-of-two bucket sizes (plus the monolithic
+        single-bucket candidate), prices each candidate per axis with the
+        configured engine — per-bucket α, the γ/δ memory-access terms and
+        incast all come from GenModel itself — and models the
+        double-buffered pipeline (`core.bucketing.pipelined_time`:
+        bucket k's AllGather overlaps bucket k+1's ReduceScatter). The
+        schedules are resolved via `get_axis_executable` for the chosen
+        size only, so they live on that size class's plan entry — lowered
+        once, never re-lowered per step. Pass `leaf_sizes` to also model
+        the per-leaf (unbucketed) baseline for comparison.
+
+        `config.bucket_bytes` pins the bucket size (the sweep collapses
+        to that single candidate, still priced); axes with n == 1 are
+        skipped but keep their mesh level, exactly as
+        `core.sync.resolve_axis_plans` enumerates.
+        """
+        import math
+
+        from repro.core.bucketing import (BucketConfig, pipelined_time,
+                                          serial_time)
+        from repro.core.sync import AxisPlan, axis_level
+
+        cfg = config or BucketConfig()
+        axes = tuple((str(a), int(n)) for a, n in axes)
+        live = [(i, a, n) for i, (a, n) in enumerate(axes) if n > 1]
+        eff = dict(params) if params else self.params
+        if eff is None:
+            from repro.core.cost_model import TPU_V5E
+            eff = TPU_V5E
+        dsize = DTYPE_BYTES.get(dtype, 4)
+        total = max(float(total_floats), 1.0)
+        leaf_key = (tuple(int(s) for s in leaf_sizes)
+                    if leaf_sizes is not None else None)
+        key = axis_key(axes, eff, self.cache.bucket(total * dsize),
+                       extra=self._config_extra()
+                       + ("bucket_plan", cfg.key(), dtype, leaf_key,
+                          self.skew.key() if self.skew else None))
+
+        def resolve_axis_plans(bucket_floats: int):
+            # hierarchical sizes: the RS chain runs the leaf axis first,
+            # so axis k's schedule only ever sees bucket / prod(earlier
+            # n) elements — resolve (and price) each axis at the size it
+            # actually executes
+            out, shard = [], float(bucket_floats)
+            for i, a, n in live:
+                out.append(AxisPlan(a, "plan",
+                                    schedule=self.get_axis_executable(
+                                        a, n, shard, dtype,
+                                        level=axis_level(i),
+                                        params=eff).schedule))
+                shard /= n
+            return out
+
+        # one sweep per key: concurrent cold traces against a shared service
+        # must not each run the full pricing sweep and race on the schedules
+        with self._lock:
+            entry = self.cache.get(key)
+            if entry is not None:
+                obj = entry.get("_obj")
+                if obj is not None:
+                    return dataclasses.replace(obj, source="memory")
+                # disk-warm (or schedule-invalidated) entry: the choice is
+                # recorded; only the schedules need re-resolving
+                obj = BucketPlan(
+                    axes=tuple((a, n) for _, a, n in live),
+                    bucket_floats=int(entry["bucket_floats"]),
+                    bucket_bytes=int(entry["bucket_floats"]) * dsize,
+                    num_buckets=int(entry["num_buckets"]),
+                    axis_plans=resolve_axis_plans(int(entry["bucket_floats"])),
+                    predicted_pipelined=entry["pipelined"],
+                    predicted_serial=entry["serial"],
+                    predicted_per_leaf=entry.get("per_leaf"),
+                    pipeline=bool(entry.get("pipeline", True)),
+                    sweep={int(b): row for b, row in entry["sweep"].items()},
+                    source="disk", key=key)
+                entry["_obj"] = obj
+                return obj
+
+            if not live:
+                obj = BucketPlan(axes=(), bucket_floats=int(total),
+                                 bucket_bytes=int(total) * dsize,
+                                 num_buckets=0, pipeline=cfg.pipeline,
+                                 source="cold", key=key)
+                self.cache.put(key, {"kind": "bucket_plan",
+                                     "bucket_floats": int(total),
+                                     "num_buckets": 0, "pipelined": 0.0,
+                                     "serial": 0.0, "per_leaf": None,
+                                     "pipeline": cfg.pipeline, "sweep": {},
+                                     "_obj": obj})
+                return obj
+
+            # ---- candidate sweep (all pricing through the plan cache) --------
+            halves_memo: dict[tuple, tuple[float, float]] = {}
+
+            def halves(i: int, n: int, size_floats: float):
+                lvl = axis_level(i)
+                mk = (lvl, n, round(max(float(size_floats), 1.0), 6))
+                if mk not in halves_memo:
+                    halves_memo[mk] = self._axis_halves_time(
+                        n, lvl, float(size_floats), dtype, eff)
+                return halves_memo[mk]
+
+            if cfg.bucket_bytes:
+                cands = [max(1, int(cfg.bucket_bytes) // dsize)]
+            else:
+                cands, nbytes = [], max(cfg.min_bucket_bytes, 4096)
+                while nbytes < total * dsize and nbytes <= cfg.max_bucket_bytes:
+                    cands.append(max(1, nbytes // dsize))
+                    nbytes *= 2
+                cands.append(int(math.ceil(total)))    # monolithic: K = 1
+
+            sweep: dict[int, dict] = {}
+            for bf in cands:
+                k = max(1, math.ceil(total / bf))
+                t_rs = t_ag = 0.0
+                shard = float(bf)
+                for i, _a, n in live:
+                    rs, ag = halves(i, n, shard)
+                    t_rs += rs
+                    t_ag += ag
+                    shard /= n      # outer axes see the inner axes' shard
+                # t_rs/t_ag ride along so consumers (bucket_bench's CI gate)
+                # can recompute the pipeline model independently instead of
+                # tautologically re-minimizing the stored totals
+                sweep[bf] = {
+                    "num_buckets": k, "t_rs": t_rs, "t_ag": t_ag,
+                    "pipelined": pipelined_time(t_rs, t_ag, k),
+                    "serial": serial_time(t_rs, t_ag, k),
+                }
+            rank = "pipelined" if cfg.pipeline else "serial"
+            chosen = min(sweep, key=lambda b: (sweep[b][rank], b))
+
+            per_leaf = None
+            if leaf_sizes is not None:
+                per_leaf = 0.0
+                for s in leaf_sizes:
+                    if s <= 0:
+                        continue
+                    shard = float(s)
+                    for i, _a, n in live:
+                        rs, ag = halves(i, n, shard)
+                        per_leaf += rs + ag
+                        shard /= n
+
+            obj = BucketPlan(
+                axes=tuple((a, n) for _, a, n in live),
+                bucket_floats=int(chosen), bucket_bytes=int(chosen) * dsize,
+                num_buckets=int(sweep[chosen]["num_buckets"]),
+                axis_plans=resolve_axis_plans(int(chosen)),
+                predicted_pipelined=sweep[chosen]["pipelined"],
+                predicted_serial=sweep[chosen]["serial"],
+                predicted_per_leaf=per_leaf, pipeline=cfg.pipeline,
+                sweep=sweep, source="cold", key=key)
+            self.cache.put(key, {
+                "kind": "bucket_plan", "bucket_floats": int(chosen),
+                "num_buckets": int(sweep[chosen]["num_buckets"]),
+                "pipelined": sweep[chosen]["pipelined"],
+                "serial": sweep[chosen]["serial"], "per_leaf": per_leaf,
+                "pipeline": cfg.pipeline,
+                "sweep": {str(b): row for b, row in sweep.items()},
+                "_obj": obj})
+            return obj
+
     # ---- per-mesh-axis plans (training/serving hot path) -------------------
     def get_axis_plans(self, axes: Sequence[tuple[str, int]],
                        size_floats: float,
@@ -277,6 +514,22 @@ class PlannerService:
         return list(plans)
 
     # ---- housekeeping ------------------------------------------------------
+    def invalidate_executables(self) -> int:
+        """Drop every derived executable artifact — lowered
+        `CompiledSchedule`s (the per-entry `_exec` maps) and bucket-plan
+        entries — while keeping the priced plans. The next
+        `get_executable`/`get_bucket_plan` re-lowers against the current
+        mesh. Called via `core.bucketing.invalidate_schedules` after an
+        elastic remesh or a fault-tolerant resume."""
+        with self._lock:
+            return self.cache.drop_derived()
+
+    def executable_count(self) -> int:
+        """Derived executable artifacts currently cached (schedules +
+        bucket plans) — what `invalidate_executables` would drop."""
+        with self._lock:
+            return self.cache.derived_count()
+
     def stats(self) -> dict:
         out = {"cache": self.cache.stats.as_dict(),
                "entries": len(self.cache),
@@ -308,6 +561,14 @@ def default_service() -> PlannerService:
             # nothing on the train/serve hot paths calls save() for us.
             _default = PlannerService(cache_path=path,
                                       autosave=path is not None)
+        return _default
+
+
+def peek_default_service() -> PlannerService | None:
+    """The process-wide service if one exists, WITHOUT creating it —
+    invalidation paths (remesh/resume) must not instantiate a service
+    just to empty it."""
+    with _default_lock:
         return _default
 
 

@@ -51,7 +51,9 @@ class FaultTolerantLoop:
                  ckpt_every: int = 50,
                  max_restarts: int = 10,
                  watchdog: StragglerWatchdog | None = None,
-                 on_event: Callable[[str, dict], None] | None = None):
+                 on_event: Callable[[str, dict], None] | None = None,
+                 planner=None,
+                 invalidate_on_resume: bool = True):
         self.step_fn = step_fn
         self.state = state
         self.ckpt = ckpt
@@ -60,11 +62,23 @@ class FaultTolerantLoop:
         self.watchdog = watchdog or StragglerWatchdog()
         self.on_event = on_event or (lambda kind, info: None)
         self.restarts = 0
+        # Lowered CompiledSchedules and bucket plans are derived from the
+        # mesh that existed when they were lowered; a restore may land on
+        # different hardware (preemption → new allocation), so by default
+        # every resume drops them and the next train step re-lowers
+        # against the live axis sizes (core.bucketing, DESIGN.md §9).
+        self.planner = planner
+        self.invalidate_on_resume = invalidate_on_resume
 
     def resume_or_init(self) -> int:
         last = self.ckpt.latest_step()
         if last is not None:
             self.state, step = self.ckpt.restore(self.state)
+            if self.invalidate_on_resume:
+                from repro.core.bucketing import invalidate_schedules
+                dropped = invalidate_schedules(self.planner)
+                self.on_event("invalidate", {"step": step,
+                                             "dropped": dropped})
             self.on_event("resume", {"step": step})
             return step
         return 0
@@ -81,6 +95,15 @@ class FaultTolerantLoop:
                                           "restart": self.restarts})
                 if self.restarts > self.max_restarts:
                     raise
+                if (self.invalidate_on_resume
+                        and self.ckpt.latest_step() is None):
+                    # no checkpoint to restore → resume_or_init won't
+                    # invalidate, but the failure may still mean a new
+                    # allocation: drop stale schedules here too
+                    from repro.core.bucketing import invalidate_schedules
+                    dropped = invalidate_schedules(self.planner)
+                    self.on_event("invalidate", {"step": 0,
+                                                 "dropped": dropped})
                 step = self.resume_or_init()
                 continue
             dt = time.perf_counter() - t0
@@ -95,8 +118,19 @@ class FaultTolerantLoop:
         return self.state
 
 
-def elastic_remesh(state: Any, shardings: Any) -> Any:
+def elastic_remesh(state: Any, shardings: Any, *, planner=None,
+                   invalidate: bool = True) -> Any:
     """Re-place a host (or differently-sharded) pytree onto new shardings.
-    `shardings` is a pytree of jax.sharding.Sharding matching `state`."""
+    `shardings` is a pytree of jax.sharding.Sharding matching `state`.
+
+    A remesh changes axis sizes, so by default every lowered
+    CompiledSchedule and bucket plan derived from the planner's cache is
+    dropped (stale schedules compiled for the old axis size must not
+    survive — they would raise on the new mesh at best). Pass `planner`
+    to invalidate a specific service; the default invalidates the
+    process-wide service if one exists."""
+    if invalidate:
+        from repro.core.bucketing import invalidate_schedules
+        invalidate_schedules(planner)
     return jax.tree.map(
         lambda x, s: jax.device_put(x, s), state, shardings)

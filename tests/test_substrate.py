@@ -172,3 +172,128 @@ def test_elastic_remesh_identity():
     sh = {"w": NamedSharding(mesh, P())}
     out = elastic_remesh(state, sh)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((4, 4)))
+
+
+# ---------------------------------------------------------------------------
+# replanning: bucket schedules must not survive an axis-size change
+# ---------------------------------------------------------------------------
+def test_elastic_remesh_invalidates_bucket_schedules():
+    """An elastic remesh changes axis sizes; every lowered
+    CompiledSchedule and bucket plan derived from the planner cache must
+    be dropped, and the next lookup must rebuild against the new size."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.planner.service import PlannerService
+    from repro.runtime import elastic_remesh
+
+    svc = PlannerService()
+    bp8 = svc.get_bucket_plan([("data", 8)], 4096.0)
+    assert bp8.axis_plans[0].schedule.n == 8
+    assert svc.executable_count() > 0
+
+    mesh = jax.make_mesh((1,), ("data",))
+    state = {"w": jnp.ones((4, 4))}
+    out = elastic_remesh(state, {"w": NamedSharding(mesh, P())},
+                         planner=svc)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((4, 4)))
+    assert svc.executable_count() == 0          # stale schedules gone
+
+    bp4 = svc.get_bucket_plan([("data", 4)], 4096.0)
+    assert bp4.source == "cold"
+    assert bp4.axis_plans[0].schedule.n == 4
+    assert bp4.axis_plans[0].schedule is not bp8.axis_plans[0].schedule
+
+
+def test_ft_resume_invalidates_and_rebuilds_bucket_schedules(tmp_path):
+    """FaultTolerantLoop resume (restore from disk — possibly onto a
+    different allocation) drops the derived schedules and reports it via
+    the event hook; fresh lookups re-lower for the new mesh."""
+    from repro.planner.service import PlannerService
+
+    svc = PlannerService()
+    svc.get_bucket_plan([("data", 8)], 8192.0)
+    assert svc.executable_count() > 0
+
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(10, {"acc": jnp.float32(45.0)})   # sum of 0..9
+    events = []
+    loop = FaultTolerantLoop(
+        lambda s, i: {"acc": s["acc"] + i}, {"acc": jnp.float32(0)}, mgr,
+        ckpt_every=100, planner=svc,
+        on_event=lambda kind, info: events.append((kind, info)))
+    out = loop.run(12)
+    assert float(out["acc"]) == sum(range(12))
+
+    kinds = [k for k, _ in events]
+    assert "resume" in kinds and "invalidate" in kinds
+    inv = dict(events)["invalidate"]
+    assert inv["dropped"] > 0
+    assert svc.executable_count() == 0
+    # replanning after the (conceptual) axis-size change
+    bp = svc.get_bucket_plan([("data", 4)], 8192.0)
+    assert bp.axis_plans[0].schedule.n == 4
+
+
+def test_ft_failure_restart_invalidates_bucket_schedules(tmp_path):
+    """The failure-restart path restores a checkpoint too — it must drop
+    the derived schedules exactly like a cold resume."""
+    from repro.planner.service import PlannerService
+
+    svc = PlannerService()
+    svc.get_bucket_plan([("data", 8)], 4096.0)
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    seen = {"failed": False}
+
+    def step_fn(state, step):
+        if step == 7 and not seen["failed"]:
+            seen["failed"] = True
+            raise RuntimeError("injected device loss")
+        return {"acc": state["acc"] + step}
+
+    loop = FaultTolerantLoop(step_fn, {"acc": jnp.float32(0)}, mgr,
+                             ckpt_every=5, planner=svc)
+    out = loop.run(12)
+    assert float(out["acc"]) == sum(range(12))
+    assert loop.restarts == 1
+    assert svc.executable_count() == 0
+
+
+def test_ft_restart_without_checkpoint_invalidates(tmp_path):
+    """A failure before the first checkpoint restarts from step 0 with no
+    restore — the stale schedules must still be dropped (the failure may
+    mean a new allocation)."""
+    from repro.planner.service import PlannerService
+
+    svc = PlannerService()
+    svc.get_bucket_plan([("data", 8)], 4096.0)
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    seen = {"failed": False}
+
+    def step_fn(state, step):
+        if step == 3 and not seen["failed"]:
+            seen["failed"] = True
+            raise RuntimeError("injected device loss")
+        return {"acc": state["acc"] + step}
+
+    loop = FaultTolerantLoop(step_fn, {"acc": jnp.float32(0)}, mgr,
+                             ckpt_every=50, planner=svc)
+    out = loop.run(6)
+    # no checkpoint: in-memory state survives the restart (steps 0-2
+    # already applied) and the loop replays 0..5 on top
+    assert float(out["acc"]) == sum(range(3)) + sum(range(6))
+    assert loop.restarts == 1
+    assert svc.executable_count() == 0
+
+
+def test_ft_resume_invalidation_opt_out(tmp_path):
+    from repro.planner.service import PlannerService
+
+    svc = PlannerService()
+    svc.get_bucket_plan([("data", 8)], 4096.0)
+    before = svc.executable_count()
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    mgr.save(10, {"acc": jnp.float32(45.0)})
+    loop = FaultTolerantLoop(
+        lambda s, i: {"acc": s["acc"] + i}, {"acc": jnp.float32(0)}, mgr,
+        ckpt_every=100, planner=svc, invalidate_on_resume=False)
+    loop.run(12)
+    assert svc.executable_count() == before     # schedules kept

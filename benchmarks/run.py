@@ -28,7 +28,8 @@ def main() -> None:
                    fig4_delta_microbench, fig8_model_accuracy,
                    planner_bench, roofline, simfast_bench,
                    table3_cpu_testbed, table4_gpu_testbed, table5_fitting,
-                   table6_plan_selection, table7_large_scale)
+                   table6_plan_selection, table7_large_scale,
+                   telemetry_bench)
     all_benches = [
         ("fig3", fig3_incast.run),
         ("fig4", fig4_delta_microbench.run),
@@ -43,6 +44,7 @@ def main() -> None:
         ("simfast", simfast_bench.run),
         ("exec", exec_bench.run),
         ("bucket", bucket_bench.run),
+        ("telemetry", telemetry_bench.run),
     ]
     only = set(args.only.split(",")) if args.only else None
 

@@ -251,13 +251,20 @@ def execute_buckets(leaves, buckets: Sequence[Bucket], axis_plans, *,
 
 
 def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
-                  service=None, fused_reduce: Callable | None = None):
+                  service=None, fused_reduce: Callable | None = None,
+                  stats: dict | None = None):
     """Bucketed, double-buffered gradient AllReduce — the
     `SyncConfig(strategy="plan")` execution path of
     `core.sync.sync_gradients`. Must run inside shard_map with every
     axis present. The bucket size, per-axis plans and their lowered
     schedules come from `PlannerService.get_bucket_plan` (resolved at
-    trace time; warm lookups are a cache probe)."""
+    trace time; warm lookups are a cache probe).
+
+    `stats`, when given, is filled in place with the resolved bucket
+    plan's identity and modeled costs (plan fingerprint key, bucket
+    size, bucket count, predicted pipelined/serial seconds) — the
+    trainer pairs these predictions with measured step timings when it
+    feeds the online loop (`PlannerService.observe`, DESIGN.md §10)."""
     import jax
 
     leaves, treedef = jax.tree.flatten(grads)
@@ -279,6 +286,16 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
     bplan = service.get_bucket_plan(axes, total_bytes / 4.0,
                                     dtype="float32",
                                     params=cfg.params, config=bcfg)
+    if stats is not None:
+        stats.update({
+            "key": bplan.key, "source": bplan.source,
+            "axes": list(bplan.axes),
+            "bucket_floats": bplan.bucket_floats,
+            "bucket_bytes": bplan.bucket_bytes,
+            "num_buckets": bplan.num_buckets,
+            "predicted_pipelined": bplan.predicted_pipelined,
+            "predicted_serial": bplan.predicted_serial,
+        })
     # byte-capped partition: every dtype class honours the same budget
     buckets = partition(sizes, [x.dtype for x in leaves],
                         bplan.bucket_bytes,

@@ -11,7 +11,7 @@ from dataclasses import replace
 
 import numpy as np
 
-from .cost_model import GenModelParams
+from .cost_model import GenModelParams, cost_cps
 
 
 def fit_delta_gamma(xs: np.ndarray, times: np.ndarray, s: float
@@ -100,3 +100,30 @@ def fit_from_cps_benchmarks(ns: np.ndarray, sizes: np.ndarray,
 
 def fit_params_for_level(base: GenModelParams, **overrides) -> GenModelParams:
     return replace(base, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# Online-measurement normalization (runtime telemetry → the CPS fit)
+# ---------------------------------------------------------------------------
+def cps_equivalent_time(n: int, size_floats: float, measured: float,
+                        plan_predicted: float, p: GenModelParams) -> float:
+    """Normalize the measured wall time of an *arbitrary executed plan*
+    into the equivalent co-located-PS sample the least-squares path above
+    consumes.
+
+    The runtime executes whatever plan GenTree picked — not the CPS
+    microbench the Table-2 design matrix describes — so a raw measured
+    time cannot enter `fit_from_cps_benchmarks` directly. But the model
+    itself prices both: scaling the measurement by the *modeled* ratio
+    cost_cps(n, S) / plan_predicted maps "what the executed plan took"
+    onto "what the CPS bench would have taken" under the same parameter
+    drift. At zero drift the factor round-trips exactly; under drift the
+    multiplicative error terms (β, ε) it is designed to recover dominate,
+    which is precisely when the refit fires. This keeps ONE fitting
+    codepath: offline microbenches and online telemetry samples both run
+    through the Table-2 least squares.
+    """
+    if plan_predicted <= 0.0:
+        return float(measured)
+    factor = cost_cps(int(n), float(size_floats), p) / float(plan_predicted)
+    return float(measured) * factor

@@ -30,6 +30,10 @@ class AxisPlan:
     # strategy == "plan": the lowered GenTree schedule to execute
     # (core.lower.CompiledSchedule; compared/hashed by identity)
     schedule: object | None = None
+    # modeled cost of this axis's plan at the priced size (seconds) —
+    # what the runtime pairs with measured timings when it feeds the
+    # online loop (PlannerService.observe, DESIGN.md §10)
+    predicted: float | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,9 +119,11 @@ def plan_axes_gentree(axes: Sequence[tuple[str, int]], size_floats: float,
             dec = res.decisions[topo.name]
             kind = "cps" if dec.algo == "acps" else dec.algo
             fac = dec.factors
+            cost = dec.cost
         else:
-            kind, fac, _cost = best_flat_plan(n, size_floats, p)
-        out.append(AxisPlan(name, kind, tuple(fac) if fac else None))
+            kind, fac, cost = best_flat_plan(n, size_floats, p)
+        out.append(AxisPlan(name, kind, tuple(fac) if fac else None,
+                            predicted=float(cost)))
     return out
 
 
@@ -157,7 +163,8 @@ def resolve_axis_plans(axes: Sequence[tuple[str, int]], cfg: "SyncConfig",
             resp = svc.get_axis_executable(a, n, size_floats,
                                            level=axis_level(i),
                                            params=cfg.params)
-            out.append(AxisPlan(a, "plan", schedule=resp.schedule))
+            out.append(AxisPlan(a, "plan", schedule=resp.schedule,
+                                predicted=resp.predicted_time))
         return out
 
     def axis_plan(a: str, n: int) -> AxisPlan:
@@ -228,12 +235,19 @@ def allreduce_topk(x: jax.Array, axis_name: str, k_frac: float = 0.01
 
 
 def sync_gradients(grads, axes: Sequence[tuple[str, int]], cfg: SyncConfig,
-                   fused_reduce: Callable | None = None):
+                   fused_reduce: Callable | None = None,
+                   stats: dict | None = None):
     """AllReduce every gradient leaf across the DP axes per the config.
 
     Must be called inside shard_map with all `axes` present. Hierarchical:
     leaf-level axis first, then outer axes — the multi-pod pattern
     (intra-pod reduce, inter-pod exchange) falls out naturally.
+
+    `stats`, when given, is filled at trace time with the resolved
+    plans' identity and modeled costs (bucketed path: the bucket plan's
+    fingerprint and pipelined prediction; per-leaf path: the per-axis
+    predictions) so the caller can pair them with measured timings for
+    the online loop.
     """
     if cfg.strategy == "auto":
         names = tuple(a for a, n in axes if n > 1)
@@ -246,10 +260,20 @@ def sync_gradients(grads, axes: Sequence[tuple[str, int]], cfg: SyncConfig,
         # instead of one schedule launch per leaf. bucket_bytes=0 opts
         # back into the per-leaf path below.
         from .bucketing import sync_bucketed
-        return sync_bucketed(grads, axes, cfg, fused_reduce=fused_reduce)
+        return sync_bucketed(grads, axes, cfg, fused_reduce=fused_reduce,
+                             stats=stats)
 
     plans = resolve_axis_plans(axes, cfg, size_floats=float(
         sum(x.size for x in jax.tree.leaves(grads))))
+    if stats is not None:
+        stats.update({
+            "axis_plans": [(p.axis, p.strategy, p.predicted)
+                           for p in plans],
+            "predicted_total": (sum(p.predicted for p in plans)
+                                if all(p.predicted is not None
+                                       for p in plans) and plans
+                                else None),
+        })
 
     def leaf(g):
         for pl in plans:

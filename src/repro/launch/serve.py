@@ -69,14 +69,47 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
         mesh = jax.make_mesh((n_dev,), ("model",))
         probe = jax.random.normal(
             jax.random.PRNGKey(2), (n_dev, sc.batch * cfg.d_model))
-        f = shard_map(lambda v: sched.allreduce(v[0], "model")[None],
-                      mesh=mesh, in_specs=P("model"), out_specs=P("model"))
+        # jitted: an un-jitted shard_map re-traces (and re-dispatches
+        # eagerly, round by round) on every call — compiling once makes
+        # the self-check ~100x faster on host devices AND gives the
+        # timing loop below an executable that measures the collective,
+        # not the tracer
+        f = jax.jit(shard_map(
+            lambda v: sched.allreduce(v[0], "model")[None],
+            mesh=mesh, in_specs=P("model"), out_specs=P("model")))
         got = np.asarray(f(probe))[0]
         want = np.asarray(probe.sum(0))
         err = float(np.abs(got - want).max() /
                     (np.abs(want).max() + 1e-30))
         on_log(f"planner: executed-schedule self-check rel err {err:.2e}")
         assert err < 1e-5, "executed TP schedule disagrees with psum"
+        # The self-check already executed the decode plan — time it and
+        # feed the measurement into the planner's online loop (DESIGN.md
+        # §10): serving deployments accumulate decode-plan samples the
+        # same way training accumulates sync probes, and sustained drift
+        # refits the level class and hot-swaps the schedule.
+        import time
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(probe))
+            ts.append(time.perf_counter() - t0)
+        measured = sorted(ts)[len(ts) // 2]
+        try:
+            # no predicted= override: tp_exec.predicted_time is priced
+            # at the geometric cache-bucket size (up to ~2x the decode
+            # payload); observe's default re-prices at the exact
+            # executed size so the residual carries no constant
+            # bucket-ratio bias
+            obs = default_service().observe(
+                "root_sw", n_dev, float(sc.batch * cfg.d_model), measured,
+                key=tp_exec.key)
+            on_log(f"planner: observed decode plan {measured * 1e3:.3f} "
+                   f"ms (predicted {obs['predicted'] * 1e3:.3f} ms, "
+                   f"drift {obs['drift']:.2f}"
+                   + (", refit" if obs["refit"] else "") + ")")
+        except Exception as e:   # advisory measurement — never fail serve
+            on_log(f"planner: decode observation skipped ({e!r})")
     elif n_dev == 1:
         on_log("planner: single device, no decode collective needed")
     key = jax.random.PRNGKey(sc.seed)

@@ -177,10 +177,14 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
                                           params=sync.params)
         if planner is not None and sync.strategy == "plan":
             from repro.core.sync import axis_level
-            return [AxisPlan(a, "plan", schedule=planner.get_axis_executable(
-                        a, n, size_floats, level=axis_level(i),
-                        params=sync.params).schedule)
-                    for i, (a, n) in enumerate(axes)]
+            out = []
+            for i, (a, n) in enumerate(axes):
+                resp = planner.get_axis_executable(
+                    a, n, size_floats, level=axis_level(i),
+                    params=sync.params)
+                out.append(AxisPlan(a, "plan", schedule=resp.schedule,
+                                    predicted=resp.predicted_time))
+            return out
         # gentree/plan route through the process-wide PlannerService inside
         # resolve_axis_plans; only an explicit override needs handling here.
         return resolve_axis_plans(axes, sync, size_floats)
@@ -281,6 +285,73 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
 # ---------------------------------------------------------------------------
 # driver (reduced-config local training; examples import run_training)
 # ---------------------------------------------------------------------------
+def observe_sync_probe(svc, mesh, axes, size_floats, on_log=print, *,
+                       repeats: int = 3):
+    """Measure each live DP axis's compiled schedule on the real mesh and
+    feed the timings into the planner's online loop (DESIGN.md §10).
+
+    The training step is one fused jit program — the collective's wall
+    time cannot be carved out of it — so the measurement instrument is a
+    *probe*: the axis's lowered `CompiledSchedule` (the exact schedule
+    the step executes) runs alone under shard_map on the live mesh, and
+    its measured median wall time is paired with the GenModel prediction
+    via `PlannerService.observe`. Each axis is probed at TWO sizes (the
+    requested size and a quarter of it): the refit trigger refuses a
+    rank-deficient fit from one repeated (n, size) point
+    (`PlannerService._sample_diversity`), so a train-only deployment
+    must deposit size diversity or its accumulated drift could never
+    refit. A single run only deposits a handful of samples (below any
+    refit policy's `min_samples`), so short smoke runs never perturb
+    the pricing basis."""
+    import time
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
+    from repro.core.sync import axis_level
+
+    out = []
+    big = max(float(size_floats), 4.0)
+    for i, (a, n) in enumerate(axes):
+        if n <= 1:
+            continue
+        for size in (big, big / 4.0):
+            try:
+                resp = svc.get_axis_executable(a, int(n), size,
+                                               level=axis_level(i))
+                sched = resp.schedule
+                probe = jnp.ones((int(n), max(int(size), 1)), jnp.float32)
+                # jitted: an un-jitted shard_map re-traces per call,
+                # which would time the tracer instead of the collective
+                f = jax.jit(shard_map(
+                    lambda v, s=sched, ax=a: s.allreduce(v[0], ax)[None],
+                    mesh=mesh, in_specs=P(a), out_specs=P(a)))
+                jax.block_until_ready(f(probe))          # warm/compile
+                ts = []
+                for _ in range(repeats):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(f(probe))
+                    ts.append(time.perf_counter() - t0)
+                measured = sorted(ts)[len(ts) // 2]
+                # no predicted= override: the probe size rarely lands on
+                # a geometric cache bucket, and resp.predicted_time is
+                # priced at the SNAPPED size — observe's default
+                # re-prices the plan at the exact executed size, so the
+                # residual compares like with like instead of carrying a
+                # constant bucket-ratio bias
+                obs = svc.observe(axis_level(i), int(n), size, measured,
+                                  key=resp.key)
+                out.append(obs)
+                on_log(f"planner: axis {a} sync probe "
+                       f"({int(size)} floats) {measured * 1e3:.3f} ms "
+                       f"(predicted {obs['predicted'] * 1e3:.3f} ms, "
+                       f"drift {obs['drift']:.2f}"
+                       + (", refit" if obs["refit"] else "") + ")")
+            except Exception as e:   # advisory — never fail training
+                on_log(f"planner: sync probe for axis {a} skipped ({e!r})")
+    return out
+
+
 @dataclasses.dataclass
 class TrainConfig:
     arch: str = "stablelm-12b"
@@ -294,6 +365,9 @@ class TrainConfig:
     ckpt_every: int = 25
     seed: int = 0
     log_every: int = 10
+    # feed measured sync timings back into the planner's online loop
+    # (probe after training; per-step wall times into the telemetry ring)
+    observe_sync: bool = True
 
 
 def run_training(tc: TrainConfig, mesh: Mesh | None = None,
@@ -334,6 +408,10 @@ def run_training(tc: TrainConfig, mesh: Mesh | None = None,
                          jax.eval_shape(lambda: b0))
 
     losses = []
+    # the process-wide telemetry hub: the same rings the straggler
+    # watchdog and the planner's drift detector read (DESIGN.md §10)
+    from repro.runtime.telemetry import default_telemetry
+    tele = default_telemetry() if tc.observe_sync else None
 
     def one_step(state, step):
         batch = jax.tree.map(jnp.asarray, data.batch_at(step))
@@ -347,23 +425,50 @@ def run_training(tc: TrainConfig, mesh: Mesh | None = None,
     if tc.ckpt_dir:
         mgr = CheckpointManager(tc.ckpt_dir, keep=2)
         loop = FaultTolerantLoop(one_step, state, mgr,
-                                 ckpt_every=tc.ckpt_every)
+                                 ckpt_every=tc.ckpt_every,
+                                 telemetry=tele)
         state = loop.run(tc.steps)
     else:
+        import time
         for s in range(tc.steps):
+            t0 = time.perf_counter()
             state = one_step(state, s)
+            if tele is not None:
+                tele.record("train/step", time.perf_counter() - t0)
 
     if tc.engine == "manual" and tc.sync in ("gentree", "plan"):
         # Plans resolve once at trace time, so a fresh process shows one
         # miss per axis-plan request; hits appear on engine rebuilds and
         # on warm restarts via $REPRO_PLAN_CACHE.
         from repro.planner.service import default_service
-        st = default_service().stats()
+        svc = default_service()
+        if tc.observe_sync and tc.sync == "plan":
+            # close the measurement loop: execute each DP axis's
+            # compiled schedule alone on the live mesh and feed the
+            # measured timings into the drift detector. The axis list is
+            # filtered exactly as make_manual_train_step builds it —
+            # size-1 axes dropped BEFORE level indexing — so the probe
+            # observes the same Table-5 level class the step priced.
+            dp = dp_axes(mesh)
+            sizes_by_axis = axis_sizes(mesh)
+            live = [(a, sizes_by_axis[a]) for a in dp
+                    if sizes_by_axis[a] > 1]
+            if live:
+                probe_floats = min(
+                    sum(float(x.size) for x in
+                        jax.tree.leaves(state["params"])) or 1.0,
+                    65536.0)
+                observe_sync_probe(svc, mesh, live, probe_floats, on_log)
+        st = svc.stats()
         cs = st["cache"]
         on_log(f"planner cache: {st['entries']} entries, "
                f"{cs['hits']} hits / {cs['misses']} misses"
                + (f", {cs['disk_loads']} loaded from disk"
                   if cs["disk_loads"] else ""))
+        if st["refits"]:
+            on_log(f"planner: {len(st['refits'])} online refit(s): "
+                   + ", ".join(f"{r['level']} (drift {r['drift']:.2f})"
+                               for r in st["refits"]))
 
     return {"state": state, "losses": losses}
 

@@ -17,7 +17,9 @@ productionized as one entry point (DESIGN.md §5):
 """
 from . import cache, calibrate, fingerprint, service, skew  # noqa: F401
 from .cache import PlanCache  # noqa: F401
-from .calibrate import CalibrationConfig, calibrate_levels  # noqa: F401
+from .calibrate import (CalibrationConfig, MeasurementProvider,  # noqa: F401
+                        TelemetryProvider, calibrate_levels)
 from .fingerprint import fingerprint_topo, plan_key  # noqa: F401
-from .service import PlannerService, default_service, get_plan  # noqa: F401
+from .service import (PlannerService, RefitPolicy,  # noqa: F401
+                      default_service, get_plan)
 from .skew import SkewModel, expected_time, pick_plan_under_skew  # noqa: F401

@@ -84,10 +84,21 @@ class CacheStats:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    COUNTERS = ("hits", "misses", "evictions", "disk_loads", "puts")
+
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "disk_loads": self.disk_loads,
                 "puts": self.puts, "hit_rate": self.hit_rate}
+
+    def absorb(self, d: dict) -> None:
+        """Accumulate persisted counters (a restored snapshot's lifetime
+        stats) into this instance; unknown/derived keys (hit_rate) are
+        ignored."""
+        for k in self.COUNTERS:
+            v = d.get(k)
+            if isinstance(v, (int, float)):
+                setattr(self, k, getattr(self, k) + int(v))
 
 
 class PlanCache:
@@ -152,7 +163,7 @@ class PlanCache:
         # rewrite) must not block concurrent get()s on the hot path.
         # Concurrent writers each replace atomically; last one wins.
         if snapshot is not None:
-            self._write(self.path, snapshot)
+            self._write(self.path, *snapshot)
 
     def __len__(self) -> int:
         with self._lock:
@@ -201,16 +212,22 @@ class PlanCache:
             return count
 
     # ---- persistence -------------------------------------------------------
-    def _snapshot_locked(self) -> dict:
-        return {k: {kk: vv for kk, vv in v.items()
-                    if not kk.startswith("_")}
-                for k, v in self._entries.items()}
+    def _snapshot_locked(self) -> tuple[dict, dict]:
+        """(entries, stats) under the lock — the stats block rides in the
+        snapshot so a restart reports true lifetime hit rates instead of
+        starting the counters over."""
+        entries = {k: {kk: vv for kk, vv in v.items()
+                       if not kk.startswith("_")}
+                   for k, v in self._entries.items()}
+        stats = {k: getattr(self.stats, k) for k in CacheStats.COUNTERS}
+        return entries, stats
 
     @staticmethod
-    def _write(path: str, payload: dict) -> None:
+    def _write(path: str, payload: dict, stats: dict | None = None) -> None:
         tmp = f"{path}.tmp{os.getpid()}-{threading.get_ident()}"
         with open(tmp, "w") as f:
-            json.dump({"version": 1, "entries": payload}, f)
+            json.dump({"version": 1, "entries": payload,
+                       "stats": stats or {}}, f)
         os.replace(tmp, path)
 
     def save(self, path: str | None = None) -> None:
@@ -218,8 +235,8 @@ class PlanCache:
         if not path:
             raise ValueError("no persistence path configured")
         with self._lock:
-            payload = self._snapshot_locked()
-        self._write(path, payload)
+            payload, stats = self._snapshot_locked()
+        self._write(path, payload, stats)
 
     def load(self, path: str | None = None) -> int:
         path = path or self.path
@@ -232,6 +249,12 @@ class PlanCache:
             return 0
         entries = payload.get("entries", {})
         with self._lock:
+            # restore lifetime counters BEFORE counting this load's disk
+            # hits, so the persisted history and the fresh activity both
+            # land exactly once
+            stats = payload.get("stats")
+            if isinstance(stats, dict):
+                self.stats.absorb(stats)
             for k, v in entries.items():
                 if k not in self._entries:
                     self._entries[k] = v

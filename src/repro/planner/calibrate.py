@@ -1,15 +1,18 @@
 """Calibration harness: refit GenModelParams from measured curves (§3.4).
 
 Replaces the frozen PAPER_TABLE5 / TPU_V5E presets with *fitted* instances.
-Per level class we run the paper's two microbenches and feed the resulting
-(size, time) samples to core.fitting:
+Per level class a `MeasurementProvider` produces the paper's two
+microbench curves and the resulting (size, time) samples feed core.fitting
+— every provider, offline or online, flows through the SAME least-squares
+path (`fit_level`); there is no second fitting codepath:
 
   * the co-located-PS curve over (N, S) — identifies α, 2β+γ, δ, ε, w_t
     (Table-2 CPS design matrix, w_t by residual grid search);
   * the Fig.-4 fan-in microbench — separates δ from γ, which the CPS curve
     alone cannot (only 2β+γ is identifiable there).
 
-Backends:
+Providers (``cfg.backend`` selects one; pass `provider=` for a custom
+instance):
 
   * "simulator"   — drive core.simulator over a single-switch topology of
     the level class (the default; deterministic, runs anywhere);
@@ -17,7 +20,14 @@ Backends:
     round-trip, used by the calibration tests);
   * "lax"         — time real `lax` collectives on the local mesh; only
     available with ≥2 JAX devices and kept behind an explicit opt-in so
-    headless CI never touches the accelerator runtime.
+    headless CI never touches the accelerator runtime;
+  * `TelemetryProvider` — the online loop (DESIGN.md §10): runtime
+    telemetry samples (`runtime.telemetry`), recorded by
+    `PlannerService.observe` as CPS-equivalent (n, S, time) points,
+    replayed as the CPS curve. The Fig.-4 curve falls back to the closed
+    form at the *current* params: arrival timings cannot separate δ from
+    γ online, so the memory-term split is carried over while the
+    measured combination 2β+γ (and α, ε) is refit from live data.
 
 Recorded samples are kept on the result so they can be persisted/inspected
 (the service exposes them through its stats).
@@ -85,7 +95,8 @@ class CalibrationResult:
 
 
 # ---------------------------------------------------------------------------
-# Sample generation
+# Measurement providers — ONE interface for offline microbenches and the
+# online telemetry loop; everything downstream is the same fitting path.
 # ---------------------------------------------------------------------------
 def _level_topo(level: str, n: int, p: GenModelParams, unit_bytes: int):
     """Single-switch stand-in for a level class: link bandwidth chosen so
@@ -94,57 +105,191 @@ def _level_topo(level: str, n: int, p: GenModelParams, unit_bytes: int):
     return single_switch(n, bw=bw, lat=0.0, level=level)
 
 
-def measure_cps_curve(level: str, source: GenModelParams,
-                      cfg: CalibrationConfig) -> tuple[np.ndarray, ...]:
-    if cfg.backend == "lax":
-        # Real collectives on the local mesh. The local devices can't
-        # distinguish level classes, so every level gets the same curve.
-        return measure_lax_cps(cfg.ns, cfg.sizes)
-    ns, sizes, times = [], [], []
-    for n in cfg.ns:
-        topo = None
-        sim = None
-        if cfg.backend == "simulator":
+def _closed_form_fig4(source: GenModelParams, cfg: "CalibrationConfig"
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """The Fig.-4 fan-in curve sampled from the closed form
+    T(x) = (x+1)·S·δ + (x−1)·S·γ — the one synthesis shared by the
+    closed-form backend and the online provider's δ/γ carry-over."""
+    xs = np.array(cfg.fig4_xs, dtype=float)
+    s = cfg.fig4_size
+    times = (xs + 1) * s * source.delta + (xs - 1) * s * source.gamma
+    return xs, times
+
+
+class MeasurementProvider:
+    """A source of the two microbench curves `fit_level` consumes.
+
+    `cps_curve` returns (ns, sizes, times) of co-located-PS AllReduce
+    runs; `fig4_curve` returns (xs, times) of the fan-in fold
+    microbench. Subclasses measure (simulator / closed form / real lax
+    collectives / runtime telemetry); the fit never knows which.
+    """
+
+    name = "base"
+
+    def cps_curve(self, level: str, source: GenModelParams,
+                  cfg: "CalibrationConfig") -> tuple[np.ndarray, ...]:
+        raise NotImplementedError
+
+    def fig4_curve(self, level: str, source: GenModelParams,
+                   cfg: "CalibrationConfig"
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        raise NotImplementedError
+
+    def pin_w_t(self, level: str, source: GenModelParams) -> int | None:
+        """Incast threshold to pin during the CPS fit, or None to
+        grid-search it from the curve (the offline default: dense
+        (N, S) sweeps identify w_t robustly)."""
+        return None
+
+
+class SimulatorProvider(MeasurementProvider):
+    """Drive core.simulator over a single-switch stand-in topology (the
+    default backend; deterministic, runs anywhere)."""
+
+    name = "simulator"
+
+    def cps_curve(self, level, source, cfg):
+        ns, sizes, times = [], [], []
+        for n in cfg.ns:
             topo = _level_topo(level, n, source, cfg.unit_bytes)
             sim = Simulator(topo, {level: source, "server": source},
                             unit_bytes=cfg.unit_bytes, engine=cfg.engine)
-        for s in cfg.sizes:
-            ns.append(float(n))
-            sizes.append(float(s))
-            if cfg.backend == "closed_form":
-                times.append(cost_cps(n, s, source))
-            elif cfg.backend == "simulator":
+            for s in cfg.sizes:
+                ns.append(float(n))
+                sizes.append(float(s))
                 times.append(sim.simulate(plans_mod.cps(n, s)).total)
-            else:
-                raise ValueError(f"unknown backend {cfg.backend!r}")
-    return np.array(ns), np.array(sizes), np.array(times)
+        return np.array(ns), np.array(sizes), np.array(times)
+
+    def fig4_curve(self, level, source, cfg):
+        """Fan-in microbench: fold x blocks of S units on one server.
+        T(x) = (x+1)·S·δ + (x−1)·S·γ — purely local, no communication, so
+        the simulator backend subtracts the per-round launch α it
+        charges."""
+        xs = np.array(cfg.fig4_xs, dtype=float)
+        s = cfg.fig4_size
+        times = []
+        for x in cfg.fig4_xs:
+            topo = _level_topo(level, 2, source, cfg.unit_bytes)
+            sim = Simulator(topo, {level: source, "server": source},
+                            unit_bytes=cfg.unit_bytes, engine=cfg.engine)
+            p = plans_mod.Plan("fig4", 2, s)
+            st = plans_mod.Step()
+            st.reduces.append(plans_mod.ReduceOp(0, int(x), s))
+            p.steps.append(st)
+            times.append(sim.simulate(p).total - source.alpha)
+        return xs, np.array(times)
+
+
+class ClosedFormProvider(MeasurementProvider):
+    """Sample the Table-2 closed forms directly (exact round-trip; the
+    calibration tests pin parameter recovery against this)."""
+
+    name = "closed_form"
+
+    def cps_curve(self, level, source, cfg):
+        ns, sizes, times = [], [], []
+        for n in cfg.ns:
+            for s in cfg.sizes:
+                ns.append(float(n))
+                sizes.append(float(s))
+                times.append(cost_cps(n, s, source))
+        return np.array(ns), np.array(sizes), np.array(times)
+
+    def fig4_curve(self, level, source, cfg):
+        return _closed_form_fig4(source, cfg)
+
+
+class LaxProvider(MeasurementProvider):
+    """Time real `lax` collectives on the local mesh (≥2 JAX devices).
+    The local devices can't distinguish level classes, so every level
+    gets the same curve."""
+
+    name = "lax"
+
+    def cps_curve(self, level, source, cfg):
+        return measure_lax_cps(cfg.ns, cfg.sizes)
+
+    def fig4_curve(self, level, source, cfg):
+        xs = np.array(cfg.fig4_xs, dtype=float)
+        return xs, _measure_host_fold(cfg.fig4_xs, cfg.fig4_size)
+
+
+class TelemetryProvider(MeasurementProvider):
+    """Replay runtime telemetry as the CPS curve — the online half of the
+    measure→fit loop (DESIGN.md §10).
+
+    `PlannerService.observe` normalizes every measured collective into a
+    CPS-equivalent sample (`core.fitting.cps_equivalent_time`) and files
+    it under the axis's level class in `runtime.telemetry.Telemetry`.
+    This provider hands those samples to the exact same Table-2 least
+    squares the offline microbenches use. The Fig.-4 memory curve is not
+    measurable online (arrival timings cannot separate δ from γ), so it
+    is synthesized from the *current* params: the δ/γ split carries
+    over, while α, ε, w_t and the measured combination 2β+γ refit from
+    live data — the terms that actually drift with contention, failed
+    links and thermal throttling.
+    """
+
+    name = "telemetry"
+
+    def __init__(self, telemetry, min_samples: int = 4):
+        self.telemetry = telemetry
+        self.min_samples = int(min_samples)
+
+    def cps_curve(self, level, source, cfg):
+        samples = self.telemetry.samples(level)
+        if len(samples) < self.min_samples:
+            raise ValueError(
+                f"telemetry has {len(samples)} samples for level "
+                f"{level!r}; need >= {self.min_samples}")
+        # many copies of ONE (n, S) point make the Table-2 design matrix
+        # rank-1: the lstsq minimum-norm solution would be degenerate
+        # (α collapses into the size-proportional columns) and the
+        # swapped-in params would misprice every OTHER point. Refuse —
+        # the refit trigger (`PlannerService.observe`) checks the same
+        # diversity before claiming a refit.
+        points = {(s.n, round(float(s.size_floats), 6)) for s in samples}
+        if len(points) < 2:
+            raise ValueError(
+                f"telemetry samples for level {level!r} cover a single "
+                f"(n, size) point; need >= 2 distinct points to fit")
+        ns = np.array([float(s.n) for s in samples])
+        sizes = np.array([float(s.size_floats) for s in samples])
+        times = np.array([float(s.cps_equivalent) for s in samples])
+        return ns, sizes, times
+
+    def fig4_curve(self, level, source, cfg):
+        return _closed_form_fig4(source, cfg)
+
+    def pin_w_t(self, level, source):
+        """Online samples are sparse (a handful of (n, S) points from
+        whatever axes the mesh happens to have), so the w_t grid search
+        would let the incast column absorb β drift. The threshold is a
+        switch-buffer property, not a contention effect — carry the
+        current value over and let α/β/ε refit from live data."""
+        return int(source.w_t)
+
+
+_PROVIDERS = {p.name: p for p in (SimulatorProvider, ClosedFormProvider,
+                                  LaxProvider)}
+
+
+def provider_for(cfg: CalibrationConfig) -> MeasurementProvider:
+    cls = _PROVIDERS.get(cfg.backend)
+    if cls is None:
+        raise ValueError(f"unknown backend {cfg.backend!r}")
+    return cls()
+
+
+def measure_cps_curve(level: str, source: GenModelParams,
+                      cfg: CalibrationConfig) -> tuple[np.ndarray, ...]:
+    return provider_for(cfg).cps_curve(level, source, cfg)
 
 
 def measure_fig4_curve(level: str, source: GenModelParams,
                        cfg: CalibrationConfig) -> tuple[np.ndarray, np.ndarray]:
-    """Fan-in microbench: fold x blocks of S units on one server.
-    T(x) = (x+1)·S·δ + (x−1)·S·γ — purely local, no communication, so the
-    simulator backend subtracts the per-round launch α it charges."""
-    xs = np.array(cfg.fig4_xs, dtype=float)
-    s = cfg.fig4_size
-    if cfg.backend == "closed_form":
-        times = (xs + 1) * s * source.delta + (xs - 1) * s * source.gamma
-        return xs, times
-    if cfg.backend == "lax":
-        return xs, _measure_host_fold(cfg.fig4_xs, s)
-    if cfg.backend != "simulator":
-        raise ValueError(f"unknown backend {cfg.backend!r}")
-    times = []
-    for x in cfg.fig4_xs:
-        topo = _level_topo(level, 2, source, cfg.unit_bytes)
-        sim = Simulator(topo, {level: source, "server": source},
-                        unit_bytes=cfg.unit_bytes, engine=cfg.engine)
-        p = plans_mod.Plan("fig4", 2, s)
-        st = plans_mod.Step()
-        st.reduces.append(plans_mod.ReduceOp(0, int(x), s))
-        p.steps.append(st)
-        times.append(sim.simulate(p).total - source.alpha)
-    return xs, np.array(times)
+    return provider_for(cfg).fig4_curve(level, source, cfg)
 
 
 def _measure_host_fold(fan_ins, s: float, repeats: int = 5) -> np.ndarray:
@@ -209,12 +354,15 @@ def measure_lax_cps(ns, sizes, axis_name: str = "cal", repeats: int = 3):
 # ---------------------------------------------------------------------------
 # Fitting
 # ---------------------------------------------------------------------------
-def fit_level(samples: LevelSamples) -> GenModelParams:
+def fit_level(samples: LevelSamples,
+              w_t: int | None = None) -> GenModelParams:
     """Combine the two microbench fits into one GenModelParams:
     α/ε/w_t and the combined 2β+γ from the CPS curve, δ/γ from Fig. 4,
-    then β = (2β+γ)/2 − γ/2 once γ is known."""
+    then β = (2β+γ)/2 − γ/2 once γ is known. `w_t` pins the incast
+    threshold instead of grid-searching it (see
+    `MeasurementProvider.pin_w_t`)."""
     cps_fit = fit_from_cps_benchmarks(samples.ns, samples.sizes,
-                                      samples.times)
+                                      samples.times, w_t=w_t)
     delta, gamma = fit_delta_gamma(samples.fig4_xs, samples.fig4_times,
                                    samples.fig4_size)
     delta, gamma = max(delta, 0.0), max(gamma, 0.0)
@@ -224,23 +372,30 @@ def fit_level(samples: LevelSamples) -> GenModelParams:
 
 
 def calibrate_levels(source: dict[str, GenModelParams] | None = None,
-                     cfg: CalibrationConfig | None = None
+                     cfg: CalibrationConfig | None = None, *,
+                     provider: MeasurementProvider | None = None
                      ) -> CalibrationResult:
     """Measure + refit every level class. `source` is the measurement
     target: the params dict the synthetic backends treat as ground truth
-    (on a real cluster the lax backend replaces it with actual timings)."""
+    (on a real cluster the lax backend replaces it with actual timings).
+
+    `provider` overrides the backend lookup with a custom
+    `MeasurementProvider` instance — notably `TelemetryProvider`, which
+    replays online runtime samples through this very path so offline and
+    online calibration share one fitting codepath."""
     source = source or PAPER_TABLE5
     cfg = cfg or CalibrationConfig()
+    provider = provider or provider_for(cfg)
     params: dict[str, GenModelParams] = {}
     samples: dict[str, LevelSamples] = {}
     for level in cfg.levels:
         src = source.get(level, source.get("server", GenModelParams()))
-        ns, sizes, times = measure_cps_curve(level, src, cfg)
-        xs, f4times = measure_fig4_curve(level, src, cfg)
+        ns, sizes, times = provider.cps_curve(level, src, cfg)
+        xs, f4times = provider.fig4_curve(level, src, cfg)
         ls = LevelSamples(level=level, ns=ns, sizes=sizes, times=times,
                           fig4_xs=xs, fig4_size=cfg.fig4_size,
                           fig4_times=f4times)
         samples[level] = ls
-        params[level] = fit_level(ls)
+        params[level] = fit_level(ls, w_t=provider.pin_w_t(level, src))
     return CalibrationResult(params=params, samples=samples,
-                             backend=cfg.backend)
+                             backend=provider.name)

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Mapping, Sequence
 
@@ -32,8 +33,11 @@ from repro.core.simulator import Simulator
 from repro.core.sync import AxisPlan, plan_axes_gentree
 from repro.core.topology import TopoNode
 
+from repro.runtime.telemetry import LevelSample, Telemetry, TelemetryEvent
+
 from .cache import PlanCache, plan_from_json, plan_to_json
-from .calibrate import CalibrationConfig, CalibrationResult, calibrate_levels
+from .calibrate import (CalibrationConfig, CalibrationResult,
+                        TelemetryProvider, calibrate_levels)
 from .fingerprint import axis_key, plan_key
 from .skew import SkewModel, expected_time
 
@@ -79,6 +83,24 @@ class BucketPlan:
     key: str = ""
 
 
+@dataclass(frozen=True)
+class RefitPolicy:
+    """When does observed drift trigger an online refit? (DESIGN.md §10)
+
+    A level class refits when its residual tracker holds at least
+    `min_samples` post-(re)fit observations AND the drift statistic
+    (median |measured − predicted| / predicted) exceeds
+    `drift_threshold`. After a refit, `cooldown` fresh observations must
+    accumulate before the same level may refit again — the loop must
+    converge on measurements of the *new* params, not chase its own
+    transient. `enabled=False` keeps observation/telemetry recording but
+    never refits (monitor-only deployments)."""
+    drift_threshold: float = 0.2
+    min_samples: int = 8
+    cooldown: int = 32
+    enabled: bool = True
+
+
 def _decisions_to_json(decisions) -> dict:
     return {sw: {"algo": d.algo, "factors": d.factors,
                  "rearrange": {str(k): v for k, v in d.rearrange.items()},
@@ -96,7 +118,9 @@ class PlannerService:
                  skew: SkewModel | None = None,
                  baseline_kinds: tuple[str, ...] = ("cps", "ring", "rhd"),
                  gentree_kwargs: dict | None = None,
-                 engine: str | None = None):
+                 engine: str | None = None,
+                 telemetry: Telemetry | None = None,
+                 refit_policy: RefitPolicy | None = None):
         self.params = dict(params) if params else None
         self.cache = cache or PlanCache(capacity=capacity, path=cache_path,
                                         autosave=autosave)
@@ -107,6 +131,26 @@ class PlannerService:
         # "fast" (compiled, default) or "reference" (pure-Python oracle)
         self.engine = engine
         self.calibration: CalibrationResult | None = None
+        # closed-loop controller state (DESIGN.md §10): the shared
+        # runtime telemetry hub observations land in, the policy that
+        # decides when drift triggers a refit, and the refit audit log
+        self.telemetry = telemetry or Telemetry()
+        self.refit_policy = refit_policy or RefitPolicy()
+        # bounded audit log (stats() serializes it; a drifty multi-year
+        # deployment must not accumulate an unbounded history)
+        self.refits: deque = deque(maxlen=256)
+        self._since_refit: dict[str, int] = {}
+        # observe hot-path caches (gated < 1% of a simulated step):
+        # merged (γ/δ-from-server) level params, exact-size default
+        # predictions, and per-level telemetry handles. Entries are
+        # tagged with _params_version — a params swap (calibrate/refit)
+        # bumps the version, so a concurrent observer that computed
+        # against the old basis can never repopulate the cache with
+        # stale params after the swap.
+        self._params_version = 0
+        self._merged_cache: dict[str, tuple[int, GenModelParams]] = {}
+        self._pred_cache: dict[tuple, tuple[int, float]] = {}
+        self._obs_handles: dict[str, tuple] = {}
         self._lock = threading.RLock()
 
     # ---- calibration -------------------------------------------------------
@@ -121,7 +165,221 @@ class PlannerService:
         with self._lock:
             self.params = dict(result.params)
             self.calibration = result
+            self._params_version += 1
+            self._merged_cache.clear()
+            self._pred_cache.clear()
         return result
+
+    # ---- the online loop: observe -> drift -> refit -> invalidate ----------
+    def _effective_axis_params(self) -> dict[str, GenModelParams]:
+        """Pricing basis for mesh-axis requests: the axis paths
+        (`get_axis_executable`, `get_bucket_plan`) default to TPU_V5E
+        when the service is uncalibrated, and observation/refit must
+        price against the same basis those paths quoted."""
+        if self.params is not None:
+            return self.params
+        from repro.core.cost_model import TPU_V5E
+        return TPU_V5E
+
+    def _merged_level_params(self, level: str,
+                             eff: Mapping[str, GenModelParams]
+                             ) -> GenModelParams:
+        """The level's pricing params with the compute terms (γ/δ) taken
+        from the chip ("server") class — exactly how `plan_axes_gentree`
+        and the simulator charge them, so CPS-equivalence factors and
+        refit targets price the same model the planner does."""
+        srv = eff.get("server", GenModelParams())
+        p = eff.get(level, srv)
+        return dataclasses.replace(p, gamma=srv.gamma, delta=srv.delta)
+
+    def observe(self, level: str, n: int, size_floats: float,
+                measured: float, *, predicted: float | None = None,
+                key: str | None = None, dtype: str = "float32",
+                params: Mapping[str, GenModelParams] | None = None) -> dict:
+        """Feed one measured collective back into the loop (DESIGN.md
+        §10): an AllReduce of `size_floats` data units over a mesh axis
+        of `n` devices at Table-5 class `level` took `measured` seconds.
+
+        Records the predicted-vs-measured residual (keyed by `level` and,
+        when given, by the plan fingerprint `key`), files the sample as a
+        CPS-equivalent calibration point, and — when the level's drift
+        exceeds the refit policy — refits that level's `GenModelParams`
+        from the accumulated telemetry through the same `core.fitting`
+        path as offline calibration. The params swap flows through the
+        fingerprints (stale plans become unreachable) and every derived
+        `CompiledSchedule`/bucket plan is dropped, so the next lookup
+        lowers a fresh schedule under the refitted model: a hot swap,
+        never a stale execution.
+
+        `predicted` defaults to the service's own price for that axis at
+        the exact size. A `params` override records timing rings but is
+        excluded from refit — per-request overrides are not the
+        service's pricing basis, so they must not steer it.
+
+        Returns {"level", "rel_residual", "drift", "samples", "refit"}.
+        """
+        override = params is not None
+        # version read BEFORE the params: a concurrent swap after this
+        # point tags our cache writes with the old version, so they are
+        # recomputed (never trusted) by post-swap observers
+        ver = self._params_version
+        eff = dict(params) if override else self._effective_axis_params()
+        n = int(n)
+        size_floats = max(float(size_floats), 1.0)
+        measured = float(measured)
+        if predicted is None:
+            # exact-size default pricing, memoized per params version:
+            # the probe/serve wiring observes the same shapes repeatedly
+            # and the full halves pricing (plan lookup + rescale +
+            # simulate) must stay off the hot path
+            pk = (level, n, round(size_floats, 6), dtype) \
+                if not override else None
+            cached = None if pk is None else self._pred_cache.get(pk)
+            if cached is not None and cached[0] == ver:
+                predicted = cached[1]
+            else:
+                t_rs, t_ag = self._axis_halves_time(n, level, size_floats,
+                                                    dtype, eff)
+                predicted = t_rs + t_ag
+                if pk is not None:
+                    self._pred_cache[pk] = (ver, predicted)
+        # per-level ring + tracker handles resolved once (hot path)
+        handles = self._obs_handles.get(level)
+        if handles is None:
+            handles = (self.telemetry.ring(f"observe/{level}"),
+                       self.telemetry.residuals(f"level/{level}"))
+            self._obs_handles[level] = handles
+        ring, tracker = handles
+        ring.add(measured)
+        if override:
+            # a per-request override is not the service's pricing basis:
+            # its residuals are tracked under the plan fingerprint (and
+            # the measured ring above) for monitoring, but must not
+            # enter the level tracker that steers the refit trigger
+            rel = self.telemetry.residuals(
+                key and f"plan/{key}" or f"level/{level}@override"
+            ).record(predicted, measured)
+            return {"level": level, "predicted": float(predicted),
+                    "measured": measured, "rel_residual": rel,
+                    "refit": False, "drift": tracker.drift(),
+                    "samples": 0}
+        rel = tracker.record(predicted, measured)
+        if key:
+            self.telemetry.residuals(f"plan/{key}").record(predicted,
+                                                           measured)
+        out = {"level": level, "predicted": float(predicted),
+               "measured": measured, "rel_residual": rel, "refit": False}
+
+        entry = self._merged_cache.get(level)
+        if entry is not None and entry[0] == ver:
+            merged = entry[1]
+        else:
+            merged = self._merged_level_params(level, eff)
+            self._merged_cache[level] = (ver, merged)
+        from repro.core.fitting import cps_equivalent_time
+        self.telemetry.record_sample(level, LevelSample(
+            n=n, size_floats=size_floats, measured=measured,
+            cps_equivalent=cps_equivalent_time(n, size_floats, measured,
+                                               predicted, merged)))
+        with self._lock:
+            self._since_refit[level] = self._since_refit.get(level, 0) + 1
+            since = self._since_refit[level]
+        out["drift"] = tracker.drift()
+        out["samples"] = self.telemetry.sample_count(level)
+        pol = self.refit_policy
+        refit_now = False
+        if pol.enabled and out["drift"] > pol.drift_threshold \
+                and tracker.count >= pol.min_samples \
+                and self._sample_diversity(level) >= 2:
+            # claim the refit under the lock: concurrent observers must
+            # not both fit (the second would find the samples consumed)
+            with self._lock:
+                refitted_before = any(r["level"] == level
+                                      for r in self.refits)
+                need = max(pol.cooldown, pol.min_samples) \
+                    if refitted_before else pol.min_samples
+                if self._since_refit.get(level, 0) >= need:
+                    self._since_refit[level] = 0
+                    refit_now = True
+        if refit_now:
+            out.update(self._refit_level(level, drift=out["drift"],
+                                         observations=since))
+            out["refit"] = True
+        return out
+
+    def _sample_diversity(self, level: str) -> int:
+        """Distinct (n, size) points among the level's telemetry samples.
+        A fit from one repeated point would be rank-deficient (the
+        provider refuses it too) — a deployment observing a single shape
+        (e.g. serve's fixed decode size) reports drift but never swaps
+        in degenerate params."""
+        return len({(s.n, round(s.size_floats, 6))
+                    for s in self.telemetry.samples(level)})
+
+    def _refit_level(self, level: str, *, drift: float,
+                     observations: int) -> dict:
+        """Refit one level class from accumulated telemetry and hot-swap:
+        new params → new fingerprints (stale plans unreachable) AND every
+        derived executable artifact dropped (`PlanCache.drop_derived`
+        via `core.bucketing.invalidate_schedules`), so no stale
+        `CompiledSchedule` can ever execute after the swap."""
+        from repro.core.bucketing import invalidate_schedules
+
+        eff = self._effective_axis_params()
+        # the fit's Fig.-4 fallback must pin the γ/δ the pricing paths
+        # actually charge (the chip class), not the level's own defaults
+        source = dict(eff)
+        source[level] = self._merged_level_params(level, eff)
+        provider = TelemetryProvider(self.telemetry,
+                                     min_samples=self.refit_policy
+                                     .min_samples)
+        result = calibrate_levels(source,
+                                  CalibrationConfig(levels=(level,)),
+                                  provider=provider)
+        with self._lock:
+            base = dict(eff)
+            base[level] = result.params[level]
+            self.params = base
+            self.calibration = result
+            self._params_version += 1
+            self._merged_cache.clear()
+            self._pred_cache.clear()
+        dropped = invalidate_schedules(self)
+        # post-swap: old residuals and samples were measured against the
+        # pre-refit params — drift detection restarts from fresh data
+        self.telemetry.clear_samples(level)
+        self.telemetry.residuals(f"level/{level}").reset()
+        event = {"level": level, "drift": drift,
+                 "observations": observations, "dropped": dropped,
+                 "params": dataclasses.asdict(result.params[level])}
+        self.refits.append(event)
+        self.telemetry.events.append(
+            TelemetryEvent("refit", {"level": level, "drift": drift,
+                                     "dropped": dropped}))
+        return {"dropped": dropped}
+
+    def observe_arrivals(self, arrivals) -> None:
+        """Record one collective's per-device arrival times into the
+        telemetry arrival estimator (feeds the empirical skew mode)."""
+        self.telemetry.record_arrivals(arrivals)
+
+    def adopt_empirical_skew(self, *, draws: int = 8, seed: int = 0,
+                             min_collectives: int = 1) -> SkewModel | None:
+        """Swap the service's skew model for an *empirical* one built
+        from measured per-device arrival offsets (`SkewModel.
+        from_offsets`). The skew key is part of every plan fingerprint,
+        so plans re-ranked under synthetic (or no) skew stop being hit
+        and the next lookup re-prices under the measured arrival
+        pattern. Returns the adopted model, or None when telemetry has
+        no usable offsets yet."""
+        est = self.telemetry.arrivals
+        if est.n_devices < 2 or est.count < min_collectives:
+            return None
+        model = SkewModel.from_offsets(est.offsets(), draws=draws,
+                                       seed=seed)
+        with self._lock:
+            self.skew = model
+        return model
 
     # ---- full-topology plans ----------------------------------------------
     def _effective_params(self) -> dict[str, GenModelParams]:
@@ -495,8 +753,15 @@ class PlannerService:
         if entry is not None:
             obj = entry.get("_obj")
             if obj is None:
-                obj = [AxisPlan(a, s, tuple(f) if f else None)
-                       for a, s, f in entry["axis_plans"]]
+                # 4-element rows carry the modeled cost; 3-element rows
+                # (pre-telemetry snapshots) load with predicted=None
+                obj = [AxisPlan(row[0], row[1],
+                                tuple(row[2]) if row[2] else None,
+                                predicted=(float(row[3])
+                                           if len(row) > 3
+                                           and row[3] is not None
+                                           else None))
+                       for row in entry["axis_plans"]]
                 entry["_obj"] = obj
             return list(obj)
         # Cold pricing honours the service's configured engine and
@@ -507,7 +772,8 @@ class PlannerService:
                                   engine=self.engine,
                                   gentree_kwargs=self.gentree_kwargs)
         entry = {"axis_plans": [[p.axis, p.strategy,
-                                 list(p.factors) if p.factors else None]
+                                 list(p.factors) if p.factors else None,
+                                 p.predicted]
                                 for p in plans],
                  "_obj": list(plans)}
         self.cache.put(key, entry)
@@ -533,7 +799,9 @@ class PlannerService:
     def stats(self) -> dict:
         out = {"cache": self.cache.stats.as_dict(),
                "entries": len(self.cache),
-               "calibrated": self.calibration is not None}
+               "calibrated": self.calibration is not None,
+               "refits": list(self.refits),
+               "telemetry": self.telemetry.stats()}
         if self.params:
             out["params"] = {lvl: dataclasses.asdict(p)
                              for lvl, p in self.params.items()}
@@ -556,11 +824,16 @@ def default_service() -> PlannerService:
     global _default
     with _default_lock:
         if _default is None:
+            from repro.runtime.telemetry import default_telemetry
             path = os.environ.get("REPRO_PLAN_CACHE") or None
             # autosave so the promise holds without an explicit save():
             # nothing on the train/serve hot paths calls save() for us.
+            # The process-wide service observes through the process-wide
+            # telemetry hub, so the launchers and the watchdog share one
+            # measurement datapath.
             _default = PlannerService(cache_path=path,
-                                      autosave=path is not None)
+                                      autosave=path is not None,
+                                      telemetry=default_telemetry())
         return _default
 
 

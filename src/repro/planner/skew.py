@@ -40,23 +40,64 @@ from repro.core.plans import Plan
 from repro.core.topology import TopoNode
 
 
+SKEW_DISTS = ("exponential", "uniform", "none", "empirical")
+
+
 @dataclass(frozen=True)
 class SkewModel:
     """Distribution of per-server arrival offsets (seconds).
 
-    dist: "exponential" | "uniform" | "none"; `frac` is the fraction of
-    servers that are skewed at all (the rest arrive at t=0); `draws`
-    Monte-Carlo draws from a fixed seed keep pricing deterministic.
+    dist: "exponential" | "uniform" | "none" | "empirical"; `frac` is
+    the fraction of servers that are skewed at all (the rest arrive at
+    t=0); `draws` Monte-Carlo draws from a fixed seed keep pricing
+    deterministic.
+
+    The *empirical* mode prices measured arrival patterns instead of
+    synthetic draws: `offsets` holds per-device arrival offsets observed
+    by the runtime telemetry (`runtime.telemetry.ArrivalEstimator`), and
+    each draw bootstrap-resamples that pool onto the topology's servers
+    — build one with `SkewModel.from_offsets(...)` or let
+    `PlannerService.adopt_empirical_skew()` do it from live telemetry.
+
+    The distribution is validated eagerly at construction — an unknown
+    `dist` (or an empirical model without offsets) fails here, not deep
+    inside the pricing draw loop.
     """
     dist: str = "exponential"
     scale: float = 0.0
     frac: float = 1.0
     draws: int = 8
     seed: int = 0
+    offsets: tuple[float, ...] | None = None    # empirical mode only
+
+    def __post_init__(self):
+        if self.dist not in SKEW_DISTS:
+            raise ValueError(f"unknown skew dist {self.dist!r}; "
+                             f"expected one of {SKEW_DISTS}")
+        if self.dist == "empirical" and not self.offsets:
+            raise ValueError("empirical skew needs measured offsets; "
+                             "use SkewModel.from_offsets(...)")
+
+    @classmethod
+    def from_offsets(cls, offsets, draws: int = 8, seed: int = 0,
+                     frac: float = 1.0) -> "SkewModel":
+        """Empirical model from measured per-device arrival offsets
+        (seconds; normalized so the earliest arrival is 0). `scale` is
+        set to the worst observed offset so zero-skew fast paths (`scale
+        > 0` gates in the service) behave correctly."""
+        offs = tuple(sorted(max(float(o), 0.0) for o in offsets))
+        if not offs:
+            raise ValueError("empirical skew needs at least one offset")
+        base = min(offs)
+        offs = tuple(o - base for o in offs)
+        return cls(dist="empirical", scale=max(offs), frac=frac,
+                   draws=draws, seed=seed, offsets=offs)
 
     def key(self) -> tuple:
         return (self.dist, "%.9g" % self.scale, "%.9g" % self.frac,
-                self.draws, self.seed)
+                self.draws, self.seed,
+                None if self.offsets is None
+                else tuple("%.9g" % o for o in self.offsets))
 
 
 def draw_offsets(model: SkewModel, n: int) -> np.ndarray:
@@ -66,13 +107,20 @@ def draw_offsets(model: SkewModel, n: int) -> np.ndarray:
     rng = np.random.default_rng(model.seed)
     out = np.zeros((model.draws, n))
     k = max(1, int(round(model.frac * n)))
+    pool = None if model.offsets is None else np.asarray(model.offsets)
     for d in range(model.draws):
         idx = rng.permutation(n)[:k]
         if model.dist == "exponential":
             out[d, idx] = rng.exponential(model.scale, size=k)
         elif model.dist == "uniform":
             out[d, idx] = rng.uniform(0.0, model.scale, size=k)
-        else:
+        elif model.dist == "empirical":
+            # bootstrap-resample the measured pool onto the skewed
+            # servers: topology sizes need not match the measured device
+            # count, and resampling keeps pricing a *distribution* (with
+            # the fixed seed keeping it deterministic)
+            out[d, idx] = pool[rng.integers(0, len(pool), size=k)]
+        else:                       # unreachable: validated eagerly
             raise ValueError(f"unknown skew dist {model.dist!r}")
     return out
 

@@ -1,1 +1,4 @@
 from .ft import FaultTolerantLoop, StragglerWatchdog, elastic_remesh  # noqa: F401
+from .telemetry import (ArrivalEstimator, ResidualTracker,  # noqa: F401
+                        Telemetry, TimingRing, default_telemetry,
+                        set_default_telemetry)

@@ -4,13 +4,24 @@
   checkpoints every `ckpt_every` steps (async), and on any step failure
   (preemption, device loss, injected fault) restores the latest checkpoint
   and replays. The data pipeline is pure-in-step, so replay is exact.
-* StragglerWatchdog — per-step timing EWMA; a step slower than
-  `threshold ×` the EWMA is flagged. In a multi-host deployment the driver
-  reacts by excluding the slow host from the next allocation (here: the
-  hook records the event and the loop optionally re-meshes).
+* StragglerWatchdog — per-step timing over the shared telemetry ring
+  (`runtime.telemetry`); a step slower than `threshold ×` the ring's EWMA
+  is flagged. Straggler detection and the planner's residual tracking
+  consume ONE datapath: the same ring the watchdog reads is the one
+  `PlannerService.stats()` reports and the online refit loop draws trend
+  context from. In a multi-host deployment the driver reacts by excluding
+  the slow host from the next allocation (here: the hook records the
+  event and the loop optionally re-meshes).
 * elastic_remesh — reshard a host-state pytree onto a new mesh/sharding:
   the checkpoint is device-agnostic (numpy), so scaling from e.g. 512 to
   256 chips is a restore-with-different-shardings.
+
+Straggler, failure-restart and remesh events all open a telemetry
+*re-measure window* (`Telemetry.remeasure`): predicted-vs-measured
+residuals, online calibration samples and arrival offsets gathered before
+the event describe hardware that no longer exists, so the drift detector
+restarts from fresh post-event samples instead of refitting against a
+ghost cluster.
 """
 from __future__ import annotations
 
@@ -22,26 +33,50 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 
+from .telemetry import Telemetry, peek_default_telemetry
+
 
 @dataclasses.dataclass
 class StragglerWatchdog:
+    """Per-step straggler detector over the shared telemetry ring.
+
+    Contract unchanged: `observe(step, dt) -> bool`, True when the step
+    straggled. The EWMA baseline lives in `telemetry.ring(key)` — the
+    half-life decay and don't-poison-the-baseline semantics are the
+    ring's `baseline=` flag — so the same samples serve straggler
+    detection, percentile reporting and drift trend display."""
     threshold: float = 2.0
     halflife: int = 20
-    _ewma: float | None = None
+    telemetry: Telemetry | None = None
+    key: str = "train/step"
     events: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.telemetry is None:
+            self.telemetry = Telemetry()
+
+    @property
+    def _ring(self):
+        return self.telemetry.ring(self.key, halflife=self.halflife)
+
+    @property
+    def _ewma(self) -> float | None:
+        """Back-compat view of the baseline (now ring-owned)."""
+        return self._ring.ewma
 
     def observe(self, step: int, dt: float) -> bool:
         """Returns True if this step straggled."""
-        if self._ewma is None:
-            self._ewma = dt
+        ring = self._ring
+        ewma = ring.ewma
+        if ewma is None:
+            ring.add(dt)
             return False
-        straggled = dt > self.threshold * self._ewma
-        k = 2 ** (-1.0 / self.halflife)
-        # slow steps don't poison the baseline
-        if not straggled:
-            self._ewma = k * self._ewma + (1 - k) * dt
+        straggled = dt > self.threshold * ewma
+        # slow steps don't poison the baseline (but stay in the window
+        # for percentiles)
+        ring.add(dt, baseline=not straggled)
         if straggled:
-            self.events.append((step, dt, self._ewma))
+            self.events.append((step, dt, ewma))
         return straggled
 
 
@@ -53,13 +88,25 @@ class FaultTolerantLoop:
                  watchdog: StragglerWatchdog | None = None,
                  on_event: Callable[[str, dict], None] | None = None,
                  planner=None,
-                 invalidate_on_resume: bool = True):
+                 invalidate_on_resume: bool = True,
+                 telemetry: Telemetry | None = None):
         self.step_fn = step_fn
         self.state = state
         self.ckpt = ckpt
         self.ckpt_every = ckpt_every
         self.max_restarts = max_restarts
-        self.watchdog = watchdog or StragglerWatchdog()
+        # one measurement datapath: the loop, its watchdog and (when the
+        # planner closes the loop) the refit machinery share a hub —
+        # explicit telemetry wins, then the planner's, then the watchdog's
+        self.telemetry = telemetry \
+            or (planner.telemetry if planner is not None
+                and getattr(planner, "telemetry", None) is not None
+                else None)
+        if watchdog is None:
+            watchdog = StragglerWatchdog(telemetry=self.telemetry)
+        self.watchdog = watchdog
+        if self.telemetry is None:
+            self.telemetry = watchdog.telemetry
         self.on_event = on_event or (lambda kind, info: None)
         self.restarts = 0
         # Lowered CompiledSchedules and bucket plans are derived from the
@@ -70,6 +117,14 @@ class FaultTolerantLoop:
         self.planner = planner
         self.invalidate_on_resume = invalidate_on_resume
 
+    def _remeasure(self, reason: str, info: dict) -> None:
+        """Open a telemetry re-measure window after an event that may
+        change the executing hardware: pre-event residuals, calibration
+        samples and arrival offsets are dropped so the online refit loop
+        (`PlannerService.observe`) re-converges on post-event data."""
+        if self.telemetry is not None:
+            self.telemetry.remeasure(reason, info)
+
     def resume_or_init(self) -> int:
         last = self.ckpt.latest_step()
         if last is not None:
@@ -77,6 +132,8 @@ class FaultTolerantLoop:
             if self.invalidate_on_resume:
                 from repro.core.bucketing import invalidate_schedules
                 dropped = invalidate_schedules(self.planner)
+                self._remeasure("resume", {"step": step,
+                                           "dropped": dropped})
                 self.on_event("invalidate", {"step": step,
                                              "dropped": dropped})
             self.on_event("resume", {"step": step})
@@ -102,12 +159,18 @@ class FaultTolerantLoop:
                     # allocation: drop stale schedules here too
                     from repro.core.bucketing import invalidate_schedules
                     dropped = invalidate_schedules(self.planner)
+                    self._remeasure("restart", {"step": 0,
+                                                "dropped": dropped})
                     self.on_event("invalidate", {"step": 0,
                                                  "dropped": dropped})
                 step = self.resume_or_init()
                 continue
             dt = time.perf_counter() - t0
             if self.watchdog.observe(step, dt):
+                # a straggler distorts every in-flight measurement: the
+                # refit loop must not fit the planner against a cluster
+                # state the driver is about to mitigate away
+                self._remeasure("straggler", {"step": step, "dt": dt})
                 self.on_event("straggler", {"step": step, "dt": dt})
             step += 1
             if step % self.ckpt_every == 0:
@@ -119,18 +182,27 @@ class FaultTolerantLoop:
 
 
 def elastic_remesh(state: Any, shardings: Any, *, planner=None,
-                   invalidate: bool = True) -> Any:
+                   invalidate: bool = True,
+                   telemetry: Telemetry | None = None) -> Any:
     """Re-place a host (or differently-sharded) pytree onto new shardings.
     `shardings` is a pytree of jax.sharding.Sharding matching `state`.
 
     A remesh changes axis sizes, so by default every lowered
     CompiledSchedule and bucket plan derived from the planner's cache is
     dropped (stale schedules compiled for the old axis size must not
-    survive — they would raise on the new mesh at best). Pass `planner`
+    survive — they would raise on the new mesh at best), and a telemetry
+    re-measure window opens: residuals and arrival offsets measured on
+    the old mesh must not steer a refit of the new one. Pass `planner`
     to invalidate a specific service; the default invalidates the
-    process-wide service if one exists."""
+    process-wide service (and clears the process-wide telemetry hub) if
+    one exists."""
     if invalidate:
         from repro.core.bucketing import invalidate_schedules
-        invalidate_schedules(planner)
+        dropped = invalidate_schedules(planner)
+        tele = telemetry \
+            or (getattr(planner, "telemetry", None) if planner is not None
+                else peek_default_telemetry())
+        if tele is not None:
+            tele.remeasure("remesh", {"dropped": dropped})
     return jax.tree.map(
         lambda x, s: jax.device_put(x, s), state, shardings)

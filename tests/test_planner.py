@@ -232,6 +232,56 @@ def test_service_calibrate_swaps_pricing_basis():
 # ---------------------------------------------------------------------------
 # Skew-aware selection
 # ---------------------------------------------------------------------------
+class TestSkewValidation:
+    def test_unknown_dist_fails_at_construction(self):
+        # eager: never deep inside the pricing draw loop
+        with pytest.raises(ValueError, match="unknown skew dist"):
+            SkewModel(dist="zipf")
+
+    def test_empirical_without_offsets_fails_at_construction(self):
+        with pytest.raises(ValueError, match="empirical"):
+            SkewModel(dist="empirical")
+
+    def test_from_offsets_normalizes_and_gates_scale(self):
+        m = SkewModel.from_offsets([2.0, 2.1, 2.5])
+        assert m.dist == "empirical"
+        assert min(m.offsets) == 0.0                 # earliest → 0
+        assert m.scale == pytest.approx(0.5)         # worst offset
+        assert m.key() != SkewModel(scale=0.5).key()  # offsets in the key
+        assert m.key() != SkewModel.from_offsets([2.0, 2.1, 2.6]).key()
+
+    def test_empirical_draws_come_from_measured_pool(self):
+        import numpy as np
+        m = SkewModel.from_offsets([0.0, 0.25, 0.5], draws=6, seed=1)
+        offs = draw_offsets(m, 8)
+        assert offs.shape == (6, 8)
+        assert set(np.unique(offs)) <= {0.0, 0.25, 0.5}
+        # deterministic under the fixed seed
+        assert (offs == draw_offsets(m, 8)).all()
+
+    def test_empirical_skew_changes_the_winner(self):
+        # mirror of test_high_imbalance_changes_the_winner below, with the
+        # offsets *measured* instead of drawn: under synchronized starts
+        # ring's cheap rounds beat CPS's double incast on the paper ToR;
+        # under a measured heavy-tail arrival pattern the incast fades and
+        # CPS's few rounds win — empirical mode must re-rank exactly like
+        # the synthetic distributions do.
+        n, s = 15, 1.8e8
+        params = {"middle_sw": cm.PAPER_TABLE5["middle_sw"],
+                  "server": cm.PAPER_TABLE5["server"]}
+        topo = single_switch(n)
+        cands = [("ring", plans_mod.ring(n, s)), ("cps", plans_mod.cps(n, s))]
+        sync_winner, _, _ = pick_plan_under_skew(
+            cands, topo, SkewModel(scale=0.0), params)
+        measured = SkewModel.from_offsets(
+            [0.0] * 10 + [0.05, 0.1, 0.1, 0.2, 0.3], draws=8, seed=0)
+        emp_winner, _, cost = pick_plan_under_skew(
+            cands, topo, measured, params)
+        assert sync_winner == "ring"
+        assert emp_winner == "cps"
+        assert cost > 0
+
+
 class TestSkew:
     def test_offsets_deterministic_and_gated_on_scale(self):
         m = SkewModel(scale=0.1, draws=4, seed=3)
@@ -451,6 +501,25 @@ class TestExecutable:
         assert r_ovr.key != r_ici.key
         assert r_ovr.schedule is not None
 
+    def test_axis_plans_carry_predicted_cost(self):
+        svc = PlannerService()
+        plans = svc.get_axis_plans([("data", 8), ("pod", 2)], 1e6)
+        assert all(p.predicted is not None and p.predicted > 0
+                   for p in plans)
+
+    def test_legacy_axis_plan_rows_load_without_predicted(self):
+        svc = PlannerService()
+        axes = [("data", 8)]
+        svc.get_axis_plans(axes, 1e6)
+        # simulate a pre-telemetry snapshot: 3-element rows, no _obj
+        for entry in svc.cache._entries.values():
+            if "axis_plans" in entry:
+                entry["axis_plans"] = [row[:3]
+                                       for row in entry["axis_plans"]]
+                entry.pop("_obj", None)
+        plans = svc.get_axis_plans(axes, 1e6)
+        assert plans and plans[0].predicted is None
+
     def test_plan_strategy_levels_match_gentree_indexing(self):
         """resolve_axis_plans(strategy="plan") must price each axis at the
         same Table-5 level as plan_axes_gentree: size-1 axes are skipped
@@ -475,3 +544,197 @@ class TestExecutable:
             assert r2.key != r.key
         finally:
             set_default_service(None)
+
+
+# ---------------------------------------------------------------------------
+# Measurement providers (offline + online behind ONE interface)
+# ---------------------------------------------------------------------------
+class TestMeasurementProviders:
+    def test_provider_for_maps_backends(self):
+        from repro.planner.calibrate import (ClosedFormProvider,
+                                             LaxProvider, SimulatorProvider,
+                                             provider_for)
+        assert isinstance(provider_for(CalibrationConfig(
+            backend="simulator")), SimulatorProvider)
+        assert isinstance(provider_for(CalibrationConfig(
+            backend="closed_form")), ClosedFormProvider)
+        assert isinstance(provider_for(CalibrationConfig(
+            backend="lax")), LaxProvider)
+        with pytest.raises(ValueError, match="unknown backend"):
+            provider_for(CalibrationConfig(backend="nope"))
+
+    def test_custom_provider_reaches_the_same_fit(self):
+        """calibrate_levels(provider=...) must flow through the identical
+        least-squares path the backend lookup does."""
+        from repro.planner.calibrate import ClosedFormProvider
+        cfg = CalibrationConfig(backend="closed_form")
+        via_backend = calibrate_levels(cm.PAPER_TABLE5, cfg)
+        via_provider = calibrate_levels(cm.PAPER_TABLE5, cfg,
+                                        provider=ClosedFormProvider())
+        assert via_provider.params == via_backend.params
+        assert via_provider.backend == "closed_form"
+
+    def test_telemetry_provider_needs_samples(self):
+        from repro.planner.calibrate import TelemetryProvider
+        from repro.runtime.telemetry import Telemetry
+        prov = TelemetryProvider(Telemetry(), min_samples=4)
+        with pytest.raises(ValueError, match="telemetry has 0 samples"):
+            prov.cps_curve("root_sw", cm.PAPER_TABLE5["root_sw"],
+                           CalibrationConfig())
+
+    def test_telemetry_provider_replays_samples_and_pins_w_t(self):
+        from repro.planner.calibrate import TelemetryProvider
+        from repro.runtime.telemetry import LevelSample, Telemetry
+        tele = Telemetry()
+        src = cm.PAPER_TABLE5["root_sw"]
+        for n in (4, 8):
+            for s in (1e6, 4e6):
+                tele.record_sample("root_sw", LevelSample(
+                    n, s, cm.cost_cps(n, s, src), cm.cost_cps(n, s, src)))
+        prov = TelemetryProvider(tele, min_samples=4)
+        ns, sizes, times = prov.cps_curve("root_sw", src,
+                                          CalibrationConfig())
+        assert len(ns) == 4 and times[0] == pytest.approx(
+            cm.cost_cps(4, 1e6, src))
+        assert prov.pin_w_t("root_sw", src) == src.w_t
+
+    def test_online_refit_through_same_path_recovers_params(self):
+        """CPS-equivalent telemetry of the TRUE closed form, fit online
+        with the current (wrong) params as carry-over source: 2β+γ and α
+        must recover to the truth through the shared fitting path."""
+        import dataclasses as _dc
+
+        from repro.planner.calibrate import TelemetryProvider
+        from repro.runtime.telemetry import LevelSample, Telemetry
+        true = cm.PAPER_TABLE5["root_sw"]
+        wrong = _dc.replace(true, beta=true.beta * 5, alpha=true.alpha * 2)
+        tele = Telemetry()
+        for n in (4, 8, 12):
+            for s in (1e6, 4e6, 1.6e7):
+                t = cm.cost_cps(n, s, true)
+                tele.record_sample("root_sw", LevelSample(n, s, t, t))
+        res = calibrate_levels(
+            {"root_sw": wrong, "server": cm.PAPER_TABLE5["server"]},
+            CalibrationConfig(levels=("root_sw",)),
+            provider=TelemetryProvider(tele, min_samples=4))
+        fit = res.params["root_sw"]
+        assert res.backend == "telemetry"
+        assert fit.alpha == pytest.approx(true.alpha, rel=0.05)
+        assert 2 * fit.beta + fit.gamma == pytest.approx(
+            2 * true.beta + true.gamma, rel=0.05)
+        assert fit.w_t == wrong.w_t          # pinned, not grid-searched
+
+
+# ---------------------------------------------------------------------------
+# Cache stats persistence (lifetime hit rates survive restarts)
+# ---------------------------------------------------------------------------
+class TestStatsPersistence:
+    def test_stats_block_round_trips(self, tmp_path):
+        path = str(tmp_path / "plans.json")
+        c = PlanCache(capacity=8)
+        c.put("k1", {"algo": "cps"})
+        c.get("k1")
+        c.get("missing")
+        c.save(path)
+
+        c2 = PlanCache(capacity=8, path=path)
+        # persisted lifetime counters restored, THEN this load's disk
+        # hits accumulate on top
+        assert c2.stats.hits == 1 and c2.stats.misses == 1
+        assert c2.stats.puts == 1
+        assert c2.stats.disk_loads == 1
+        c2.get("k1")
+        assert c2.stats.hits == 2            # true lifetime hit count
+
+    def test_stats_accumulate_across_generations(self, tmp_path):
+        path = str(tmp_path / "plans.json")
+        c = PlanCache(capacity=8)
+        c.put("a", {"v": 1})
+        c.get("a")
+        c.save(path)
+        c2 = PlanCache(capacity=8, path=path)
+        c2.put("b", {"v": 2})
+        c2.get("b")
+        c2.save(path)
+        c3 = PlanCache(capacity=8, path=path)
+        assert c3.stats.puts == 2
+        assert c3.stats.hits == 2
+        # generation 2 loaded 1 entry from disk, generation 3 loaded 2
+        assert c3.stats.disk_loads == 3
+
+    def test_legacy_snapshot_without_stats_loads_clean(self, tmp_path):
+        import json
+        path = tmp_path / "old.json"
+        path.write_text(json.dumps(
+            {"version": 1, "entries": {"k": {"algo": "ring"}}}))
+        c = PlanCache(capacity=4)
+        assert c.load(str(path)) == 1
+        assert c.stats.disk_loads == 1 and c.stats.hits == 0
+
+
+# ---------------------------------------------------------------------------
+# The observe half of the closed loop (service-level unit tests; the
+# end-to-end refit→invalidate→replan scenario lives in test_substrate.py)
+# ---------------------------------------------------------------------------
+class TestObserve:
+    def test_observe_records_residuals_and_samples(self):
+        from repro.planner.service import RefitPolicy
+        svc = PlannerService(refit_policy=RefitPolicy(enabled=False))
+        r = svc.get_axis_executable("data", 8, 1e6)
+        out = svc.observe("root_sw", 8, 1e6, r.predicted_time * 1.5,
+                          predicted=r.predicted_time, key=r.key)
+        assert out["rel_residual"] == pytest.approx(0.5)
+        assert out["samples"] == 1 and out["refit"] is False
+        assert svc.telemetry.residuals("level/root_sw").count == 1
+        assert svc.telemetry.residuals(f"plan/{r.key}").count == 1
+
+    def test_observe_default_predicted_prices_the_axis(self):
+        svc = PlannerService()
+        # bucket-aligned size: the executable's cache-bucketed price and
+        # observe's exact-size price coincide
+        size = float(1 << 20)
+        r = svc.get_axis_executable("data", 8, size)
+        out = svc.observe("root_sw", 8, size, r.predicted_time)
+        # service's own price at the exact size ≈ the executable's price
+        assert out["predicted"] == pytest.approx(r.predicted_time,
+                                                 rel=0.05)
+        assert abs(out["rel_residual"]) < 0.05
+
+    def test_params_override_is_excluded_from_refit_feed(self):
+        from repro.planner.service import RefitPolicy
+        svc = PlannerService(refit_policy=RefitPolicy(
+            min_samples=1, drift_threshold=0.01))
+        out = svc.observe("root_sw", 8, 1e6, 10.0, predicted=1.0,
+                          params=cm.TPU_V5E)
+        assert out["refit"] is False and out["samples"] == 0
+        assert svc.telemetry.samples("root_sw") == []
+        # override residuals stay OUT of the level tracker that steers
+        # the refit trigger — they land in a monitoring-only key
+        assert svc.telemetry.residuals("level/root_sw").count == 0
+        assert svc.telemetry.residuals("level/root_sw@override").count == 1
+        assert svc.telemetry.ring("observe/root_sw").count == 1
+
+    def test_policy_disabled_never_refits(self):
+        from repro.planner.service import RefitPolicy
+        svc = PlannerService(refit_policy=RefitPolicy(
+            enabled=False, min_samples=1, drift_threshold=0.01))
+        for _ in range(6):
+            out = svc.observe("root_sw", 8, 1e6, 10.0, predicted=1.0)
+        assert out["refit"] is False and len(svc.refits) == 0
+
+    def test_adopt_empirical_skew_swaps_model_and_keys(self):
+        svc = PlannerService()
+        assert svc.adopt_empirical_skew() is None   # no offsets yet
+        topo = single_switch(8)
+        r_before = svc.get_plan(topo, 1 << 20)
+        for _ in range(3):
+            svc.observe_arrivals([0.0, 0.01, 0.05, 0.0, 0.0, 0.2,
+                                  0.0, 0.02])
+        model = svc.adopt_empirical_skew()
+        assert model is not None and model.dist == "empirical"
+        assert svc.skew is model
+        # skew key is part of the fingerprint: old entry unreachable
+        r_after = svc.get_plan(topo, 1 << 20)
+        assert r_after.key != r_before.key
+        assert r_after.source == "cold"
+        assert r_after.expected_skewed_time is not None

@@ -297,3 +297,123 @@ def test_ft_resume_invalidation_opt_out(tmp_path):
         ckpt_every=100, planner=svc, invalidate_on_resume=False)
     loop.run(12)
     assert svc.executable_count() == before     # schedules kept
+
+
+# ---------------------------------------------------------------------------
+# the online loop: observe -> drift -> refit -> invalidate -> replan
+# ---------------------------------------------------------------------------
+def _drifted_cluster(true_params, svc, level="root_sw"):
+    """Ground-truth measurement oracle: what the cluster ACTUALLY takes
+    is the service's chosen plan simulated under the true params."""
+    from repro.core.simulator import Simulator
+    from repro.core.sync import level_switch_topo
+
+    def measure(n, size):
+        resp = svc.get_axis_executable("data", n, size, level=level)
+        topo = level_switch_topo(n, true_params, level)
+        meas = Simulator(topo, true_params,
+                         unit_bytes=4).simulate(resp.plan).total
+        return resp, meas
+
+    return measure
+
+
+def test_refit_fires_and_invalidates_stale_plans():
+    """Satellite: mis-seed GenModelParams, feed synthetic measurements
+    until the refit fires; (a) old fingerprints miss, (b) derived_count
+    drops to zero, (c) the next sync step lowers fresh schedules."""
+    import dataclasses
+
+    from repro.core.cost_model import PAPER_TABLE5
+    from repro.planner.service import PlannerService, RefitPolicy
+
+    true = PAPER_TABLE5
+    wrong = dict(true)
+    wrong["root_sw"] = dataclasses.replace(
+        true["root_sw"], alpha=true["root_sw"].alpha / 3,
+        beta=true["root_sw"].beta / 6)
+    svc = PlannerService(params=wrong, refit_policy=RefitPolicy(
+        min_samples=6, drift_threshold=0.15, cooldown=6))
+    measure = _drifted_cluster(true, svc)
+
+    bp_old = svc.get_bucket_plan([("data", 8)], float(1 << 18))
+    sched_old = bp_old.axis_plans[0].schedule
+    assert svc.cache.derived_count() > 0
+    misses_before_refit = None
+
+    sizes = [(8, 1e6), (8, 4e6), (4, 1e6), (8, 1.6e7), (4, 4e6),
+             (8, 2e6), (8, 8e6), (4, 2e6)]
+    fired = False
+    for n, size in sizes * 3:
+        resp, meas = measure(n, size)
+        out = svc.observe("root_sw", n, size, meas,
+                          predicted=resp.predicted_time, key=resp.key)
+        if out["refit"]:
+            fired = True
+            assert out["dropped"] > 0
+            misses_before_refit = svc.cache.stats.misses
+            break
+    assert fired, "drift never triggered a refit"
+    # (b) every derived executable artifact dropped at the swap
+    assert svc.cache.derived_count() == 0
+    assert svc.refits and svc.refits[0]["level"] == "root_sw"
+
+    # (a) the refitted params flow through the fingerprints: the same
+    # request resolves to a NEW key and the old entry is never hit
+    bp_new = svc.get_bucket_plan([("data", 8)], float(1 << 18))
+    assert bp_new.key != bp_old.key
+    assert bp_new.source == "cold"
+    assert svc.cache.stats.misses > misses_before_refit
+
+    # (c) fresh schedules, lowered under the refitted model — the stale
+    # CompiledSchedule is unreachable (identity assertion)
+    sched_new = bp_new.axis_plans[0].schedule
+    assert sched_new is not None and sched_new is not sched_old
+
+
+def test_closed_loop_converges_and_never_executes_stale_schedules():
+    """Acceptance: a training loop started with deliberately
+    mis-calibrated GenModelParams observes measured costs, refits,
+    replans and converges — post-refit predicted axis cost tracks
+    measured within 10%, and no stale CompiledSchedule is ever executed
+    after the swap (schedule identity)."""
+    import dataclasses
+
+    from repro.core.cost_model import PAPER_TABLE5
+    from repro.planner.service import PlannerService, RefitPolicy
+
+    true = PAPER_TABLE5
+    wrong = dict(true)
+    wrong["root_sw"] = dataclasses.replace(
+        true["root_sw"], alpha=true["root_sw"].alpha / 3,
+        beta=true["root_sw"].beta / 6)
+    svc = PlannerService(params=wrong, refit_policy=RefitPolicy(
+        min_samples=6, drift_threshold=0.15, cooldown=6))
+    measure = _drifted_cluster(true, svc)
+
+    sizes = [(8, 1e6), (8, 4e6), (4, 1e6), (8, 1.6e7), (4, 4e6),
+             (8, 2e6), (8, 8e6), (4, 2e6)]
+    executed = []          # (schedule, params fingerprint at execution)
+    refit_at = None
+    for step in range(4 * len(sizes)):
+        n, size = sizes[step % len(sizes)]
+        resp, meas = measure(n, size)
+        # "execute" the schedule this step: record its identity
+        executed.append(resp.schedule)
+        out = svc.observe("root_sw", n, size, meas,
+                          predicted=resp.predicted_time, key=resp.key)
+        if out["refit"] and refit_at is None:
+            refit_at = len(executed)
+            stale = set(map(id, executed))
+    assert refit_at is not None, "loop never refit"
+
+    # no stale CompiledSchedule executed after the swap
+    post_swap = executed[refit_at:]
+    assert post_swap, "no steps ran after the refit"
+    assert all(id(s) not in stale for s in post_swap)
+
+    # converged: post-refit predictions track measurements within 10%
+    for n, size in sizes:
+        resp, meas = measure(n, size)
+        assert abs(resp.predicted_time - meas) / meas < 0.10, \
+            f"post-refit divergence at n={n} S={size}"

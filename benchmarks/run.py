@@ -2,10 +2,15 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only fig4,table7]
                                             [--json BENCH_planner.json]
+                                            [--trace BENCH_trace.json]
+                                            [--metrics BENCH_metrics.json]
 
 Each module prints its own human-readable table; this driver finishes with
 a machine-readable `name,seconds,derived` CSV summary (and, with --json, a
-JSON file mapping name -> {seconds, derived}).
+JSON file mapping name -> {seconds, derived}). `--trace` enables the
+process-wide span tracer for the whole run and exports a Chrome-trace
+JSON (chrome://tracing / ui.perfetto.dev) with one top-level span per
+bench; `--metrics` exports the metrics registry (JSON + sibling .prom).
 """
 from __future__ import annotations
 
@@ -22,7 +27,17 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the summary as JSON, e.g. "
                          "BENCH_planner.json")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the span tracer for the whole run and "
+                         "export a Chrome-trace JSON")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="export the metrics registry (JSON + .prom)")
     args = ap.parse_args()
+
+    from repro.runtime.trace import default_tracer
+    tracer = default_tracer()
+    if args.trace:
+        tracer.enabled = True
 
     from . import (bucket_bench, exec_bench, fig3_incast,
                    fig4_delta_microbench, fig8_model_accuracy,
@@ -56,7 +71,8 @@ def main() -> None:
         print(f"\n{'=' * 72}\n## {name}\n{'=' * 72}")
         t0 = time.perf_counter()
         try:
-            out = fn()
+            with tracer.span(f"bench/{name}"):
+                out = fn()
             derived = ""
             metrics = {}
             if isinstance(out, dict):
@@ -88,6 +104,13 @@ def main() -> None:
                        for name, dt, derived, metrics in summary},
                       f, indent=2)
         print(f"wrote {args.json}")
+    if args.trace:
+        tracer.export_chrome(args.trace)
+        print(f"wrote {args.trace} ({len(tracer.spans)} spans)")
+    if args.metrics:
+        from repro.runtime.metrics import default_metrics
+        default_metrics().export(args.metrics)
+        print(f"wrote {args.metrics}")
     sys.exit(1 if failed else 0)
 
 

@@ -16,11 +16,18 @@ Two gates keep the closed loop honest:
     6× low on β observes ground-truth measurements, refits from
     telemetry, and afterwards every observed (n, S) point must price
     within 10% of measured.
+  * **tracer overhead < 2% of a smoke train step** — the same smoke run
+    executed twice, once with the span tracer disabled and once enabled
+    (fresh telemetry hub each, so the two medians are clean); the traced
+    run's median per-step wall time may exceed the untraced one by at
+    most 2%. The traced run's Chrome trace and metrics snapshot are
+    exported as `BENCH_trace.json` / `BENCH_metrics.json` so CI uploads
+    a loadable trace artifact alongside the numbers.
 
-`benchmarks.run --json` records `telemetry_overhead_pct` and
-`refit_residual_ratio` in BENCH_core.json so the trajectory is tracked
-across PRs. Runs headless on CPU (the smoke train step jits on the local
-device; no multi-device mesh needed).
+`benchmarks.run --json` records `telemetry_overhead_pct`,
+`trace_overhead_pct` and `refit_residual_ratio` in BENCH_core.json so the
+trajectory is tracked across PRs. Runs headless on CPU (the smoke train
+step jits on the local device; no multi-device mesh needed).
 
     PYTHONPATH=src python -m benchmarks.telemetry_bench [--json PATH]
 """
@@ -135,11 +142,60 @@ def run() -> dict:
         f"post-refit predicted cost diverges {worst * 100:.1f}% from "
         f"measured (gate: < 10%)")
 
+    # ---- gate 3: span-tracer overhead on the smoke train step -------------
+    # Same smoke config twice — untraced then traced — each against a
+    # FRESH telemetry hub so the two train/step medians don't mix with
+    # each other or with earlier benches in the same process. The traced
+    # run's spans + metrics are exported for the CI artifact upload.
+    from repro.runtime.telemetry import (Telemetry, peek_default_telemetry,
+                                         set_default_telemetry)
+    from repro.runtime.trace import Tracer, set_default_tracer
+    from repro.runtime.metrics import default_metrics
+
+    tcfg = TrainConfig(arch="stablelm-12b", steps=SIM_STEPS,
+                       seq_len=32, global_batch=4, engine="manual",
+                       sync="plan", log_every=10 ** 6)
+    old_tele = peek_default_telemetry()
+    old_tracer = set_default_tracer(Tracer(enabled=False))
+    try:
+        set_default_telemetry(Telemetry())
+        run_training(tcfg, smoke=True, on_log=lambda *a, **k: None)
+        untraced_s = default_telemetry().ring("train/step").percentile(50.0)
+
+        traced_tracer = Tracer(enabled=True)
+        set_default_tracer(traced_tracer)
+        set_default_telemetry(Telemetry())
+        run_training(tcfg, smoke=True, on_log=lambda *a, **k: None)
+        traced_s = default_telemetry().ring("train/step").percentile(50.0)
+
+        traced_tracer.export_chrome("BENCH_trace.json")
+        default_metrics().export("BENCH_metrics.json")
+    finally:
+        set_default_tracer(old_tracer)
+        set_default_telemetry(old_tele)
+
+    trace_overhead_pct = max(
+        0.0, 100.0 * (traced_s - untraced_s) / untraced_s)
+    rows.append({"metric": "smoke step untraced (median)",
+                 "value": f"{untraced_s * 1e6:.1f} us"})
+    rows.append({"metric": "smoke step traced (median)",
+                 "value": f"{traced_s * 1e6:.1f} us"})
+    rows.append({"metric": "tracer overhead",
+                 "value": f"{trace_overhead_pct:.3f} %"})
+    rows.append({"metric": "spans recorded (traced run)",
+                 "value": str(len(traced_tracer.spans))})
+    assert traced_tracer.spans, "traced smoke run recorded no spans"
+    assert trace_overhead_pct < 2.0, (
+        f"span tracer costs {trace_overhead_pct:.2f}% of a smoke train "
+        f"step (gate: < 2%)")
+
     print(fmt_table(rows, ["metric", "value"],
                     "telemetry hot path + online refit convergence"))
     out["telemetry_overhead_pct"] = round(overhead_pct, 4)
+    out["trace_overhead_pct"] = round(trace_overhead_pct, 4)
     out["refit_residual_ratio"] = round(worst, 4)
     out["refits"] = refits
+    out["trace_spans"] = len(traced_tracer.spans)
     return out
 
 

@@ -42,6 +42,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
+from repro.runtime.metrics import default_metrics
+from repro.runtime.trace import default_tracer
+
 
 # ---------------------------------------------------------------------------
 # Config + bucket structure
@@ -221,26 +224,38 @@ def execute_buckets(leaves, buckets: Sequence[Bucket], axis_plans, *,
                      else jnp.concatenate(parts))
 
     k = len(flats)
+    tracer = default_tracer()
     results: list = [None] * k
     if pipeline and k > 1 and supports_halves(axis_plans):
         shards, sizes = [None] * k, [None] * k
         for i in range(k):
-            shards[i], sizes[i] = _rs_chain(flats[i], axis_plans,
-                                            fused_reduce)
+            with tracer.span("bucket/rs", bucket=i,
+                             elements=int(flats[i].size)):
+                shards[i], sizes[i] = _rs_chain(flats[i], axis_plans,
+                                                fused_reduce)
             if i:
-                results[i - 1] = _ag_chain(shards[i - 1], axis_plans,
-                                           sizes[i - 1])
-        results[k - 1] = _ag_chain(shards[k - 1], axis_plans, sizes[k - 1])
+                with tracer.span("bucket/ag", bucket=i - 1):
+                    results[i - 1] = _ag_chain(shards[i - 1], axis_plans,
+                                               sizes[i - 1])
+        with tracer.span("bucket/ag", bucket=k - 1):
+            results[k - 1] = _ag_chain(shards[k - 1], axis_plans,
+                                       sizes[k - 1])
     elif supports_halves(axis_plans):
         for i in range(k):
-            shard, sizes = _rs_chain(flats[i], axis_plans, fused_reduce)
-            results[i] = _ag_chain(shard, axis_plans, sizes)
+            with tracer.span("bucket/rs", bucket=i,
+                             elements=int(flats[i].size)):
+                shard, sizes = _rs_chain(flats[i], axis_plans,
+                                         fused_reduce)
+            with tracer.span("bucket/ag", bucket=i):
+                results[i] = _ag_chain(shard, axis_plans, sizes)
     else:
         # no canonical shard layout on some axis: sequential whole-plan
         # AllReduce per bucket (still amortizes per-leaf launches)
         for i in range(k):
-            results[i] = _allreduce_chain(flats[i], axis_plans,
-                                          fused_reduce)
+            with tracer.span("bucket/allreduce", bucket=i,
+                             elements=int(flats[i].size)):
+                results[i] = _allreduce_chain(flats[i], axis_plans,
+                                              fused_reduce)
 
     for bk, res in zip(buckets, results):
         off = 0
@@ -300,9 +315,28 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
     buckets = partition(sizes, [x.dtype for x in leaves],
                         bplan.bucket_bytes,
                         itemsizes=[x.dtype.itemsize for x in leaves])
-    out = execute_buckets(leaves, buckets, bplan.axis_plans,
-                          pipeline=bcfg.pipeline,
-                          fused_reduce=fused_reduce)
+    m = default_metrics()
+    m.counter("sync_bucketed_total",
+              "bucketed plan-strategy gradient syncs").inc()
+    m.histogram("sync_buckets_per_step",
+                "buckets per sync_bucketed call",
+                buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+                ).observe(float(len(buckets)))
+    # pipeline occupancy: modeled speedup of the double-buffered
+    # schedule over serial execution, normalized to [0.5, 1] — 0.5 for
+    # a single bucket (nothing overlaps), → 1 as the RS/AG halves
+    # balance and the bucket count grows (DESIGN.md §9's pipeline model)
+    if bplan.predicted_pipelined > 0.0:
+        m.gauge("bucket_pipeline_occupancy",
+                "modeled serial/pipelined speedup, normalized to [.5,1]"
+                ).set(bplan.predicted_serial
+                      / (2.0 * bplan.predicted_pipelined))
+    with default_tracer().span("sync/bucketed", buckets=len(buckets),
+                               bucket_bytes=bplan.bucket_bytes,
+                               source=bplan.source):
+        out = execute_buckets(leaves, buckets, bplan.axis_plans,
+                              pipeline=bcfg.pipeline,
+                              fused_reduce=fused_reduce)
     return jax.tree.unflatten(treedef, out)
 
 
@@ -340,12 +374,15 @@ def zero3_gather_bucketed(shards, specs, plan, bucket_bytes: int, n: int
                         max(1, int(bucket_bytes) // max(1, int(n))),
                         itemsizes=[s.dtype.itemsize for s in shards])
     out = [None] * len(shards)
-    for bk in buckets:
+    tracer = default_tracer()
+    for bi, bk in enumerate(buckets):
         row = jnp.concatenate([shards[i].reshape(-1) for i in bk.indices]) \
             if len(bk.indices) > 1 else shards[bk.indices[0]].reshape(-1)
         ncols = row.size
         row = _pad_to(row, k)
-        mat = cs.all_gather(row, plan.axis).reshape(n, -1)[:, :ncols]
+        with tracer.span("bucket/zero3_ag", bucket=bi,
+                         leaves=len(bk.indices)):
+            mat = cs.all_gather(row, plan.axis).reshape(n, -1)[:, :ncols]
         off = 0
         for i, c in zip(bk.indices, bk.sizes):
             shape, dtype = specs[i]
@@ -376,7 +413,8 @@ def zero3_scatter_bucketed(fulls, plan, bucket_bytes: int, n: int) -> list:
     buckets = partition(sizes, [x.dtype for x in fulls], bucket_bytes,
                         itemsizes=[x.dtype.itemsize for x in fulls])
     out = [None] * len(fulls)
-    for bk in buckets:
+    tracer = default_tracer()
+    for bi, bk in enumerate(buckets):
         mats = [_pad_to(fulls[i].reshape(-1), n).reshape(n, -1)
                 for i in bk.indices]
         mat = mats[0] if len(mats) == 1 else jnp.concatenate(mats, axis=1)
@@ -385,7 +423,9 @@ def zero3_scatter_bucketed(fulls, plan, bucket_bytes: int, n: int) -> list:
         if pad:
             mat = jnp.concatenate(
                 [mat, jnp.zeros((n, pad), mat.dtype)], axis=1)
-        shard = cs.reduce_scatter(mat.reshape(-1), plan.axis)
+        with tracer.span("bucket/zero3_rs", bucket=bi,
+                         leaves=len(bk.indices)):
+            shard = cs.reduce_scatter(mat.reshape(-1), plan.axis)
         off = 0
         for i in bk.indices:
             out[i] = shard[off:off + chunks[i]]

@@ -157,6 +157,86 @@ def evaluate_plan(plan: Plan, p: GenModelParams) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Per-term decomposition — the cost ledger's pricing side (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CostBreakdown:
+    """Predicted time split into the five GenModel terms (Eq. 11):
+    A·α + B·β + C·γ + D·δ + incast·ε.  ``total`` reproduces
+    ``evaluate_plan`` exactly (same walk, same maxes — the winning
+    server's split is attributed, not an average)."""
+    alpha: float = 0.0
+    beta: float = 0.0
+    gamma: float = 0.0
+    delta: float = 0.0
+    incast: float = 0.0
+
+    TERMS = ("alpha", "beta", "gamma", "delta", "incast")
+
+    @property
+    def total(self) -> float:
+        return self.alpha + self.beta + self.gamma + self.delta + self.incast
+
+    def as_dict(self) -> dict[str, float]:
+        return {t: getattr(self, t) for t in self.TERMS}
+
+    def shares(self) -> dict[str, float]:
+        """Fractions of total per term (all-zero breakdown → zeros)."""
+        tot = self.total
+        if tot <= 0.0:
+            return {t: 0.0 for t in self.TERMS}
+        return {t: getattr(self, t) / tot for t in self.TERMS}
+
+    def scaled_to(self, target_total: float) -> "CostBreakdown":
+        """Rescale proportionally so ``total == target_total`` (used when a
+        quoted prediction came from a different pricer — e.g. the
+        Simulator's halves split — but term *proportions* come from the
+        model walk).  A zero breakdown books everything under α."""
+        tot = self.total
+        if tot <= 0.0:
+            return CostBreakdown(alpha=target_total)
+        k = target_total / tot
+        return CostBreakdown(self.alpha * k, self.beta * k, self.gamma * k,
+                             self.delta * k, self.incast * k)
+
+
+def evaluate_plan_terms(plan: Plan, p: GenModelParams) -> CostBreakdown:
+    """``evaluate_plan`` with the ledger kept open: identical step walk and
+    identical per-server maxes, but each step's winning comm/compute server
+    contributes its β/ε (resp. γ/δ) split instead of a fused scalar."""
+    al = be = ga = de = inc = 0.0
+    for st in plan.steps:
+        send: dict[int, float] = {}
+        for t in st.transfers:
+            send[t.src] = send.get(t.src, 0.0) + t.size
+        recv = st.recv_bytes_by_dst()
+        fi = st.fan_in_by_dst()
+        comm = comm_b = comm_i = 0.0
+        for srv in set(send) | set(recv):
+            b = max(send.get(srv, 0.0), recv.get(srv, 0.0))
+            w = fi.get(srv, 0) + 1 if srv in fi else 0  # w counts self
+            b_term = b * p.beta
+            i_term = _incast(w, recv.get(srv, 0.0), p)
+            if b_term + i_term > comm:
+                comm, comm_b, comm_i = b_term + i_term, b_term, i_term
+        comp = comp_g = comp_d = 0.0
+        by_srv: dict[int, tuple[float, float]] = {}
+        for r in st.reduces:
+            a, d = by_srv.get(r.server, (0.0, 0.0))
+            by_srv[r.server] = (a + r.adds, d + r.mem_ops)
+        for a, d in by_srv.values():
+            g_term, d_term = a * p.gamma, d * p.delta
+            if g_term + d_term > comp:
+                comp, comp_g, comp_d = g_term + d_term, g_term, d_term
+        al += p.alpha
+        be += comm_b
+        inc += comm_i
+        ga += comp_g
+        de += comp_d
+    return CostBreakdown(al, be, ga, de, inc)
+
+
+# ---------------------------------------------------------------------------
 # Model-driven plan-type choice for a flat group (used by GenTree §4.2).
 # ---------------------------------------------------------------------------
 def best_flat_plan(n: int, s: float, p: GenModelParams,

@@ -103,6 +103,46 @@ def fit_params_for_level(base: GenModelParams, **overrides) -> GenModelParams:
 
 
 # ---------------------------------------------------------------------------
+# Per-term residual attribution — the cost ledger's diagnosis side
+# (DESIGN.md §11).  Input: one share vector per observed collective
+# (predicted seconds booked under each GenModel term, from
+# cost_model.evaluate_plan_terms) plus the measured wall time.  Output:
+# per-term multipliers m_t minimizing ||S·m − measured||₂, i.e. the
+# uniform per-term scaling that best explains all samples at once.
+# m_t == 1 → the term is priced right; m_t == 3 → "δ drifted 3×".
+# ---------------------------------------------------------------------------
+TERM_NAMES = ("alpha", "beta", "gamma", "delta", "incast")
+
+
+def attribute_term_drift(shares: list[dict[str, float]],
+                         measured: list[float],
+                         ) -> dict[str, float | None]:
+    """Least-squares per-term drift multipliers over a sample window.
+
+    ``shares[i][t]`` is the predicted seconds sample *i* books under term
+    *t*; ``measured[i]`` its wall time.  Terms with zero share across the
+    whole window are unidentifiable and map to ``None``.  Needs at least
+    one sample; with fewer samples than active terms the minimum-norm
+    solution is returned (pinned to the observed directions).
+    """
+    if len(shares) != len(measured):
+        raise ValueError("shares and measured must have equal length")
+    if not shares:
+        return {t: None for t in TERM_NAMES}
+    S = np.array([[float(sh.get(t, 0.0)) for t in TERM_NAMES]
+                  for sh in shares], dtype=float)
+    y = np.asarray(measured, dtype=float)
+    active = S.any(axis=0)
+    out: dict[str, float | None] = {t: None for t in TERM_NAMES}
+    if not active.any():
+        return out
+    coef, *_ = np.linalg.lstsq(S[:, active], y, rcond=None)
+    for t, m in zip(np.array(TERM_NAMES)[active], coef):
+        out[str(t)] = float(m)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Online-measurement normalization (runtime telemetry → the CPS fit)
 # ---------------------------------------------------------------------------
 def cps_equivalent_time(n: int, size_floats: float, measured: float,

@@ -46,6 +46,8 @@ from typing import Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro.runtime.trace import default_tracer
+
 from .plans import Plan
 
 
@@ -111,52 +113,74 @@ class CompiledSchedule:
 
     # ---- jax execution (call inside shard_map) -----------------------------
     def _run_steps(self, steps: Sequence[ExecStep], buf, axis_name: str,
-                   fused_reduce: Callable | None):
+                   fused_reduce: Callable | None, phase: str = "steps"):
+        # Span caveat (DESIGN.md §11): this body runs at shard_map/jit
+        # TRACE time, so span durations measure staging-out, not device
+        # execution — but the span *structure* (which step, which round,
+        # which fold, at what width/fan) is exactly the executed
+        # schedule. Device wall time stays the telemetry hub's job; the
+        # numpy mirror below records real durations for the same spans.
         import jax.numpy as jnp
         from jax import lax
 
+        tracer = default_tracer()
         idx = lax.axis_index(axis_name)
         chunk = buf.shape[1]
         zero = jnp.zeros((chunk,), buf.dtype)
-        for st in steps:
+        for si, st in enumerate(steps):
             if not st.rounds and not st.folds:
                 continue
-            stage = jnp.zeros((max(st.n_slots, 1), chunk), buf.dtype)
-            for rd in st.rounds:
-                w = rd.send_blks.shape[1]
-                sb = jnp.asarray(rd.send_blks)[idx]          # (W,)
-                rows = [jnp.where(
-                    sb[j] >= 0,
-                    lax.dynamic_index_in_dim(buf, jnp.maximum(sb[j], 0),
-                                             0, keepdims=False),
-                    zero) for j in range(w)]
-                recv = lax.ppermute(jnp.stack(rows), axis_name,
-                                    list(rd.perm))           # (W, chunk)
-                off = jnp.asarray(rd.recv_off)[idx]
-                safe = jnp.maximum(off, 0)
-                cur = lax.dynamic_slice(stage, (safe, 0), (w, chunk))
-                stage = lax.dynamic_update_slice(
-                    stage, jnp.where(off >= 0, recv, cur), (safe, 0))
-            for fd in st.folds:
-                blk = jnp.asarray(fd.blk)[idx]
-                safeb = jnp.maximum(blk, 0)
-                own = lax.dynamic_index_in_dim(buf, safeb, 0,
-                                               keepdims=False)
-                rows = []
-                for j in range(fd.ops.shape[1]):
-                    s = jnp.asarray(fd.ops[:, j])[idx]
-                    r = lax.dynamic_index_in_dim(stage, jnp.maximum(s, 0),
-                                                 0, keepdims=False)
-                    rows.append(jnp.where(s >= 0, r, zero))
-                rows.append(jnp.where(jnp.asarray(fd.include_self)[idx],
-                                      own, zero))
-                stacked = jnp.stack(rows, axis=0)
-                if fused_reduce is not None and stacked.shape[0] > 1:
-                    folded = fused_reduce(stacked).astype(buf.dtype)
-                else:
-                    folded = stacked.sum(axis=0)
-                buf = lax.dynamic_update_index_in_dim(
-                    buf, jnp.where(blk >= 0, folded, own), safeb, 0)
+            with tracer.span(f"exec/{phase}/step", step=si,
+                             rounds=len(st.rounds), folds=len(st.folds),
+                             plan=self.plan_name):
+                stage = jnp.zeros((max(st.n_slots, 1), chunk), buf.dtype)
+                for ri, rd in enumerate(st.rounds):
+                    with tracer.span("exec/round", round=ri,
+                                     width=int(rd.send_blks.shape[1]),
+                                     pairs=len(rd.perm)):
+                        w = rd.send_blks.shape[1]
+                        sb = jnp.asarray(rd.send_blks)[idx]      # (W,)
+                        rows = [jnp.where(
+                            sb[j] >= 0,
+                            lax.dynamic_index_in_dim(
+                                buf, jnp.maximum(sb[j], 0), 0,
+                                keepdims=False),
+                            zero) for j in range(w)]
+                        recv = lax.ppermute(jnp.stack(rows), axis_name,
+                                            list(rd.perm))  # (W, chunk)
+                        off = jnp.asarray(rd.recv_off)[idx]
+                        safe = jnp.maximum(off, 0)
+                        cur = lax.dynamic_slice(stage, (safe, 0),
+                                                (w, chunk))
+                        stage = lax.dynamic_update_slice(
+                            stage, jnp.where(off >= 0, recv, cur),
+                            (safe, 0))
+                for fi, fd in enumerate(st.folds):
+                    with tracer.span("exec/fold", fold=fi,
+                                     fan=int(fd.ops.shape[1])):
+                        blk = jnp.asarray(fd.blk)[idx]
+                        safeb = jnp.maximum(blk, 0)
+                        own = lax.dynamic_index_in_dim(buf, safeb, 0,
+                                                       keepdims=False)
+                        rows = []
+                        for j in range(fd.ops.shape[1]):
+                            s = jnp.asarray(fd.ops[:, j])[idx]
+                            r = lax.dynamic_index_in_dim(
+                                stage, jnp.maximum(s, 0), 0,
+                                keepdims=False)
+                            rows.append(jnp.where(s >= 0, r, zero))
+                        rows.append(jnp.where(
+                            jnp.asarray(fd.include_self)[idx], own, zero))
+                        stacked = jnp.stack(rows, axis=0)
+                        if fused_reduce is not None \
+                                and stacked.shape[0] > 1:
+                            folded = fused_reduce(stacked).astype(
+                                buf.dtype)
+                        else:
+                            folded = stacked.sum(axis=0)
+                        buf = lax.dynamic_update_index_in_dim(
+                            buf, jnp.where(blk >= 0, folded, own),
+                            safeb, 0)
         return buf
 
     def _check_axis(self, axis_name: str) -> None:
@@ -178,8 +202,12 @@ class CompiledSchedule:
         if pad:
             flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
         buf = flat.reshape(self.num_blocks, -1)
-        buf = self._run_steps(self.rs, buf, axis_name, fused_reduce)
-        buf = self._run_steps(self.ag, buf, axis_name, fused_reduce)
+        with default_tracer().span("exec/allreduce", plan=self.plan_name,
+                                   n=self.n, blocks=self.num_blocks):
+            buf = self._run_steps(self.rs, buf, axis_name, fused_reduce,
+                                  phase="rs")
+            buf = self._run_steps(self.ag, buf, axis_name, fused_reduce,
+                                  phase="ag")
         full = buf.reshape(-1)
         if pad:
             full = full[:-pad]
@@ -201,9 +229,13 @@ class CompiledSchedule:
         if pad:
             flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
         buf = flat.reshape(self.num_blocks, -1)
-        buf = self._run_steps(self.rs, buf, axis_name, fused_reduce)
-        if self.reorder is not None:
-            buf = self._run_steps([self.reorder], buf, axis_name, None)
+        with default_tracer().span("exec/reduce_scatter",
+                                   plan=self.plan_name, n=self.n):
+            buf = self._run_steps(self.rs, buf, axis_name, fused_reduce,
+                                  phase="rs")
+            if self.reorder is not None:
+                buf = self._run_steps([self.reorder], buf, axis_name,
+                                      None, phase="reorder")
         k = self.blocks_per_shard
         idx = lax.axis_index(axis_name)
         return lax.dynamic_slice_in_dim(buf, idx * k, k, axis=0).reshape(-1)
@@ -223,44 +255,60 @@ class CompiledSchedule:
         idx = lax.axis_index(axis_name)
         buf = lax.dynamic_update_slice_in_dim(
             buf, flat.reshape(k, -1), idx * k, axis=0)
-        if self.unorder is not None:
-            buf = self._run_steps([self.unorder], buf, axis_name, None)
-        buf = self._run_steps(self.ag, buf, axis_name, None)
+        with default_tracer().span("exec/all_gather",
+                                   plan=self.plan_name, n=self.n):
+            if self.unorder is not None:
+                buf = self._run_steps([self.unorder], buf, axis_name,
+                                      None, phase="unorder")
+            buf = self._run_steps(self.ag, buf, axis_name, None,
+                                  phase="ag")
         return buf.reshape(-1)
 
     # ---- numpy execution (reference; tests) --------------------------------
     def _run_steps_numpy(self, steps: Sequence[ExecStep],
-                         buf: np.ndarray) -> np.ndarray:
+                         buf: np.ndarray,
+                         phase: str = "steps") -> np.ndarray:
+        # Same span names as the jax path, but here durations are real —
+        # this is the interpreter the equivalence suite runs.
         n = self.n
-        for st in steps:
-            stage = np.zeros((n, max(st.n_slots, 1), buf.shape[2]),
-                             buf.dtype)
-            for rd in st.rounds:
-                w = rd.send_blks.shape[1]
-                payload = {}
-                for s, _ in rd.perm:
-                    rows = np.zeros((w, buf.shape[2]), buf.dtype)
-                    for j, b in enumerate(rd.send_blks[s]):
-                        if b >= 0:
-                            rows[j] = buf[s, b]
-                    payload[s] = rows
-                for s, d in rd.perm:
-                    off = rd.recv_off[d]
-                    stage[d, off:off + w] = payload[s]
-            for fd in st.folds:
-                new = {}
-                for m in range(n):
-                    if fd.blk[m] < 0:
-                        continue
-                    acc = np.zeros(buf.shape[2], np.float64)
-                    for s in fd.ops[m]:
-                        if s >= 0:
-                            acc = acc + stage[m, s]
-                    if fd.include_self[m]:
-                        acc = acc + buf[m, fd.blk[m]]
-                    new[m] = acc.astype(buf.dtype)
-                for m, v in new.items():
-                    buf[m, fd.blk[m]] = v
+        tracer = default_tracer()
+        for si, st in enumerate(steps):
+            with tracer.span(f"exec/{phase}/step", step=si,
+                             rounds=len(st.rounds), folds=len(st.folds),
+                             plan=self.plan_name):
+                stage = np.zeros((n, max(st.n_slots, 1), buf.shape[2]),
+                                 buf.dtype)
+                for ri, rd in enumerate(st.rounds):
+                    with tracer.span("exec/round", round=ri,
+                                     width=int(rd.send_blks.shape[1]),
+                                     pairs=len(rd.perm)):
+                        w = rd.send_blks.shape[1]
+                        payload = {}
+                        for s, _ in rd.perm:
+                            rows = np.zeros((w, buf.shape[2]), buf.dtype)
+                            for j, b in enumerate(rd.send_blks[s]):
+                                if b >= 0:
+                                    rows[j] = buf[s, b]
+                            payload[s] = rows
+                        for s, d in rd.perm:
+                            off = rd.recv_off[d]
+                            stage[d, off:off + w] = payload[s]
+                for fi, fd in enumerate(st.folds):
+                    with tracer.span("exec/fold", fold=fi,
+                                     fan=int(fd.ops.shape[1])):
+                        new = {}
+                        for m in range(n):
+                            if fd.blk[m] < 0:
+                                continue
+                            acc = np.zeros(buf.shape[2], np.float64)
+                            for s in fd.ops[m]:
+                                if s >= 0:
+                                    acc = acc + stage[m, s]
+                            if fd.include_self[m]:
+                                acc = acc + buf[m, fd.blk[m]]
+                            new[m] = acc.astype(buf.dtype)
+                        for m, v in new.items():
+                            buf[m, fd.blk[m]] = v
         return buf
 
     def run_numpy(self, X: np.ndarray) -> np.ndarray:
@@ -276,8 +324,10 @@ class CompiledSchedule:
             X = np.concatenate(
                 [X, np.zeros((self.n, pad), X.dtype)], axis=1)
         buf = X.reshape(self.n, self.num_blocks, -1).copy()
-        buf = self._run_steps_numpy(self.rs, buf)
-        buf = self._run_steps_numpy(self.ag, buf)
+        with default_tracer().span("exec/run_numpy", plan=self.plan_name,
+                                   n=self.n, blocks=self.num_blocks):
+            buf = self._run_steps_numpy(self.rs, buf, phase="rs")
+            buf = self._run_steps_numpy(self.ag, buf, phase="ag")
         out = buf.reshape(self.n, -1)
         return out[:, :size] if pad else out
 
@@ -401,6 +451,14 @@ def lower_plan(plan: Plan,
             f"plan {plan.name!r} carries no block annotations "
             "(Plan.num_blocks is None) — rebuild it with a block-aware "
             "builder before lowering")
+    with default_tracer().span("lower/lower_plan", plan=plan.name,
+                               n=plan.n, blocks=plan.num_blocks):
+        return _lower_plan_inner(plan, placement)
+
+
+def _lower_plan_inner(plan: Plan,
+                      placement: Sequence[int] | Mapping[int, int] | None
+                      ) -> CompiledSchedule:
     n = plan.n
     ids = plan.ids()
     if placement is None:

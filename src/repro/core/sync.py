@@ -286,4 +286,7 @@ def sync_gradients(grads, axes: Sequence[tuple[str, int]], cfg: SyncConfig,
                                           schedule=pl.schedule)
         return g
 
-    return jax.tree.map(leaf, grads)
+    from repro.runtime.trace import default_tracer
+    with default_tracer().span("sync/gradients", strategy=cfg.strategy,
+                               axes=len(plans)):
+        return jax.tree.map(leaf, grads)

@@ -16,6 +16,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.models.config import smoke_config
 from repro.models.registry import build
+from repro.runtime.metrics import default_metrics
+from repro.runtime.trace import default_tracer
 
 
 @dataclasses.dataclass
@@ -77,7 +79,9 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
         f = jax.jit(shard_map(
             lambda v: sched.allreduce(v[0], "model")[None],
             mesh=mesh, in_specs=P("model"), out_specs=P("model")))
-        got = np.asarray(f(probe))[0]
+        with default_tracer().span("serve/self_check", n=n_dev,
+                                   algo=tp_exec.algo):
+            got = np.asarray(f(probe))[0]
         want = np.asarray(probe.sum(0))
         err = float(np.abs(got - want).max() /
                     (np.abs(want).max() + 1e-30))
@@ -131,16 +135,25 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
     prefill = jax.jit(lambda p, b: api.prefill(p, b, cache_len=sc.cache_len))
     decode = jax.jit(api.decode_step)
 
-    logits, cache = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
-    out = [np.asarray(tok)]
-    for i in range(sc.max_new - 1):
-        step_batch = {"tokens": tok[:, None]}
-        if cfg.family == "vlm":
-            emb = jnp.take(params["embed"], tok[:, None], axis=0)
-            step_batch = {"embeds": emb}
-        logits, cache = decode(params, cache, step_batch)
+    tracer = default_tracer()
+    metrics = default_metrics()
+    with tracer.span("serve/prefill", batch=sc.batch,
+                     prompt_len=sc.prompt_len):
+        logits, cache = prefill(params, batch)
         tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+    metrics.counter("serve_prefill_total", "prefill calls").inc()
+    out = [np.asarray(tok)]
+    decode_ctr = metrics.counter("serve_decode_steps_total",
+                                 "decode steps executed")
+    for i in range(sc.max_new - 1):
+        with tracer.span("serve/decode", token=i + 1):
+            step_batch = {"tokens": tok[:, None]}
+            if cfg.family == "vlm":
+                emb = jnp.take(params["embed"], tok[:, None], axis=0)
+                step_batch = {"embeds": emb}
+            logits, cache = decode(params, cache, step_batch)
+            tok = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        decode_ctr.inc()
         out.append(np.asarray(tok))
     gen = np.stack(out, axis=1)
     on_log(f"served batch={sc.batch} prompt={sc.prompt_len} "

@@ -368,6 +368,13 @@ class TrainConfig:
     # feed measured sync timings back into the planner's online loop
     # (probe after training; per-step wall times into the telemetry ring)
     observe_sync: bool = True
+    # when set, enable the process-wide tracer for the run and export a
+    # Chrome-trace JSON (load in chrome://tracing or ui.perfetto.dev) of
+    # every recorded span — planner, lowering, bucketing and train steps
+    trace_path: str | None = None
+    # when set, export the process-wide metrics registry (JSON snapshot +
+    # sibling .prom text file) at the end of the run
+    metrics_path: str | None = None
 
 
 def run_training(tc: TrainConfig, mesh: Mesh | None = None,
@@ -413,9 +420,22 @@ def run_training(tc: TrainConfig, mesh: Mesh | None = None,
     from repro.runtime.telemetry import default_telemetry
     tele = default_telemetry() if tc.observe_sync else None
 
+    from repro.runtime.metrics import default_metrics
+    from repro.runtime.trace import default_tracer
+    tracer = default_tracer()
+    if tc.trace_path:
+        tracer.enabled = True
+    step_hist = default_metrics().histogram(
+        "train_step_seconds", "wall time per training step",
+        buckets=(0.001, 0.005, 0.01, 0.05, 0.1, 0.5, 1.0, 5.0, 30.0))
+
     def one_step(state, step):
-        batch = jax.tree.map(jnp.asarray, data.batch_at(step))
-        state, metrics = step_fn(state, batch)
+        import time as _time
+        t0 = _time.perf_counter()
+        with tracer.span("train/step", step=step):
+            batch = jax.tree.map(jnp.asarray, data.batch_at(step))
+            state, metrics = step_fn(state, batch)
+        step_hist.observe(_time.perf_counter() - t0)
         if step % tc.log_every == 0:
             on_log(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
                    f"gnorm {float(metrics['gnorm']):.3f}")
@@ -470,6 +490,13 @@ def run_training(tc: TrainConfig, mesh: Mesh | None = None,
                    + ", ".join(f"{r['level']} (drift {r['drift']:.2f})"
                                for r in st["refits"]))
 
+    if tc.trace_path:
+        tracer.export_chrome(tc.trace_path)
+        on_log(f"trace: {len(tracer.spans)} spans -> {tc.trace_path}")
+    if tc.metrics_path:
+        default_metrics().export(tc.metrics_path)
+        on_log(f"metrics -> {tc.metrics_path}")
+
     return {"state": state, "losses": losses}
 
 
@@ -483,11 +510,16 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome-trace JSON of the run")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="export a metrics snapshot (JSON + .prom)")
     args = ap.parse_args()
     out = run_training(TrainConfig(
         arch=args.arch, steps=args.steps, engine=args.engine,
         sync=args.sync, seq_len=args.seq_len, global_batch=args.batch,
-        ckpt_dir=args.ckpt_dir))
+        ckpt_dir=args.ckpt_dir, trace_path=args.trace,
+        metrics_path=args.metrics))
     print(f"final loss: {out['losses'][-1]:.4f}")
 
 

@@ -21,6 +21,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from repro.core.plans import Plan, ReduceOp, Step, Transfer
+from repro.runtime.metrics import default_metrics
 
 
 # ---------------------------------------------------------------------------
@@ -143,9 +144,15 @@ class PlanCache:
             entry = self._entries.get(key)
             if entry is None:
                 self.stats.misses += 1
+                default_metrics().counter(
+                    "plan_cache_misses_total",
+                    "plan-cache lookups that missed").inc()
                 return None
             self._entries.move_to_end(key)
             self.stats.hits += 1
+            default_metrics().counter(
+                "plan_cache_hits_total",
+                "plan-cache lookups served warm").inc()
             return entry
 
     def put(self, key: str, entry: dict) -> None:
@@ -159,6 +166,10 @@ class PlanCache:
                 self.stats.evictions += 1
             if self.autosave and self.path:
                 snapshot = self._snapshot_locked()
+        m = default_metrics()
+        m.counter("plan_cache_puts_total", "plan-cache inserts").inc()
+        m.gauge("plan_cache_entries", "entries currently cached"
+                ).set(len(self))
         # Serialize + write outside the lock: an autosave (whole-file JSON
         # rewrite) must not block concurrent get()s on the hot path.
         # Concurrent writers each replace atomically; last one wins.

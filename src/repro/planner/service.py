@@ -33,7 +33,10 @@ from repro.core.simulator import Simulator
 from repro.core.sync import AxisPlan, plan_axes_gentree
 from repro.core.topology import TopoNode
 
-from repro.runtime.telemetry import LevelSample, Telemetry, TelemetryEvent
+from repro.runtime.metrics import default_metrics
+from repro.runtime.telemetry import (LedgerEntry, LevelSample, Telemetry,
+                                     TelemetryEvent)
+from repro.runtime.trace import default_tracer
 
 from .cache import PlanCache, plan_from_json, plan_to_json
 from .calibrate import (CalibrationConfig, CalibrationResult,
@@ -94,11 +97,18 @@ class RefitPolicy:
     accumulate before the same level may refit again — the loop must
     converge on measurements of the *new* params, not chase its own
     transient. `enabled=False` keeps observation/telemetry recording but
-    never refits (monitor-only deployments)."""
+    never refits (monitor-only deployments).
+
+    `term_attribution=True` makes each refit event carry a per-term
+    diagnosis: the cost-ledger window for the level is solved for the
+    per-term drift multipliers (`core.fitting.attribute_term_drift`), so
+    the event says *which* GenModel term drifted ("δ drifted 3×, α
+    stable") instead of only the blind median drift (DESIGN.md §11)."""
     drift_threshold: float = 0.2
     min_samples: int = 8
     cooldown: int = 32
     enabled: bool = True
+    term_attribution: bool = True
 
 
 def _decisions_to_json(decisions) -> dict:
@@ -150,6 +160,9 @@ class PlannerService:
         self._params_version = 0
         self._merged_cache: dict[str, tuple[int, GenModelParams]] = {}
         self._pred_cache: dict[tuple, tuple[int, float]] = {}
+        # per-shape GenModel term breakdowns (cost_model.CostBreakdown)
+        # feeding the cost ledger — same versioning contract as above
+        self._shares_cache: dict[tuple, tuple[int, object]] = {}
         self._obs_handles: dict[str, tuple] = {}
         self._lock = threading.RLock()
 
@@ -168,6 +181,7 @@ class PlannerService:
             self._params_version += 1
             self._merged_cache.clear()
             self._pred_cache.clear()
+            self._shares_cache.clear()
         return result
 
     # ---- the online loop: observe -> drift -> refit -> invalidate ----------
@@ -281,6 +295,27 @@ class PlannerService:
             n=n, size_floats=size_floats, measured=measured,
             cps_equivalent=cps_equivalent_time(n, size_floats, measured,
                                                predicted, merged)))
+        # cost ledger (DESIGN.md §11): the quoted prediction decomposed
+        # into per-term seconds — proportions from the GenModel walk over
+        # the executed plan structure, rescaled so they sum to the quoted
+        # prediction exactly — filed next to the measured wall time. The
+        # breakdown is memoized per shape under the same params-version
+        # contract as the prediction itself.
+        sk = (level, n, round(size_floats, 6), dtype)
+        sentry = self._shares_cache.get(sk)
+        if sentry is not None and sentry[0] == ver:
+            breakdown = sentry[1]
+        else:
+            breakdown = self._axis_term_shares(n, level, size_floats,
+                                               dtype, eff, merged)
+            self._shares_cache[sk] = (ver, breakdown)
+        self.telemetry.ledger.record(LedgerEntry(
+            level=level, n=n, size_floats=size_floats,
+            predicted=float(predicted), measured=measured,
+            shares=breakdown.scaled_to(float(predicted)).as_dict()))
+        default_metrics().counter(
+            "planner_observations_total",
+            "collectives fed back through PlannerService.observe").inc()
         with self._lock:
             self._since_refit[level] = self._since_refit.get(level, 0) + 1
             since = self._since_refit[level]
@@ -325,6 +360,20 @@ class PlannerService:
         `CompiledSchedule` can ever execute after the swap."""
         from repro.core.bucketing import invalidate_schedules
 
+        tracer = default_tracer()
+        metrics = default_metrics()
+        # diagnose BEFORE the fit consumes the window: solve the level's
+        # cost-ledger entries for per-term drift multipliers so the refit
+        # event names the drifting term (m_t ≈ 1 → stable; see
+        # core.fitting.attribute_term_drift and DESIGN.md §11)
+        term_drift = None
+        if self.refit_policy.term_attribution:
+            entries = self.telemetry.ledger.entries(level)
+            if entries:
+                from repro.core.fitting import attribute_term_drift
+                term_drift = attribute_term_drift(
+                    [e.shares for e in entries],
+                    [e.measured for e in entries])
         eff = self._effective_axis_params()
         # the fit's Fig.-4 fallback must pin the γ/δ the pricing paths
         # actually charge (the chip class), not the level's own defaults
@@ -333,30 +382,41 @@ class PlannerService:
         provider = TelemetryProvider(self.telemetry,
                                      min_samples=self.refit_policy
                                      .min_samples)
-        result = calibrate_levels(source,
-                                  CalibrationConfig(levels=(level,)),
-                                  provider=provider)
-        with self._lock:
-            base = dict(eff)
-            base[level] = result.params[level]
-            self.params = base
-            self.calibration = result
-            self._params_version += 1
-            self._merged_cache.clear()
-            self._pred_cache.clear()
-        dropped = invalidate_schedules(self)
-        # post-swap: old residuals and samples were measured against the
-        # pre-refit params — drift detection restarts from fresh data
+        with tracer.span("planner/refit", level=level, drift=drift):
+            result = calibrate_levels(source,
+                                      CalibrationConfig(levels=(level,)),
+                                      provider=provider)
+            with self._lock:
+                base = dict(eff)
+                base[level] = result.params[level]
+                self.params = base
+                self.calibration = result
+                self._params_version += 1
+                self._merged_cache.clear()
+                self._pred_cache.clear()
+                self._shares_cache.clear()
+            dropped = invalidate_schedules(self)
+        # post-swap: old residuals, samples and ledger rows were measured
+        # against the pre-refit params — drift detection restarts from
+        # fresh data
         self.telemetry.clear_samples(level)
         self.telemetry.residuals(f"level/{level}").reset()
+        self.telemetry.ledger.clear(level)
         event = {"level": level, "drift": drift,
                  "observations": observations, "dropped": dropped,
+                 "term_drift": term_drift,
                  "params": dataclasses.asdict(result.params[level])}
         self.refits.append(event)
         self.telemetry.events.append(
             TelemetryEvent("refit", {"level": level, "drift": drift,
-                                     "dropped": dropped}))
-        return {"dropped": dropped}
+                                     "dropped": dropped,
+                                     "term_drift": term_drift}))
+        metrics.counter("planner_refits_total",
+                        "online GenModel refits triggered by drift").inc()
+        metrics.gauge("planner_params_version",
+                      "pricing-basis version (bumps on calibrate/refit)"
+                      ).set(self._params_version)
+        return {"dropped": dropped, "term_drift": term_drift}
 
     def observe_arrivals(self, arrivals) -> None:
         """Record one collective's per-device arrival times into the
@@ -417,39 +477,44 @@ class PlannerService:
                 size_floats=size_floats)
 
         # ---- cold path: generate, (optionally) re-rank under skew --------
-        result = gentree_mod.gentree(topo, size_floats, params=params,
-                                     engine=self.engine,
-                                     **self.gentree_kwargs)
-        algo, plan = "gentree", result.plan
-        decisions = _decisions_to_json(result.decisions)
-        skewed = None
-        if self.skew is not None and self.skew.scale > 0.0:
-            candidates = [("gentree", result.plan)]
-            n = topo.num_servers()
-            for kind in self.baseline_kinds:
-                if kind == "rhd" and (n & (n - 1)) != 0:
-                    continue
-                if n < 2:
-                    continue
-                candidates.append(
-                    (kind, gentree_mod.baseline_plan(kind, topo,
-                                                     size_floats)))
-            from .skew import pick_plan_under_skew
-            algo, plan, skewed = pick_plan_under_skew(
-                candidates, topo, self.skew, params, unit_bytes=dsize,
-                engine=self.engine)
-            if algo != "gentree":
-                # per-switch decisions describe the discarded GenTree
-                # plan, not the baseline that won — don't mis-report them
-                decisions = {}
-        sim = Simulator(topo, params, unit_bytes=dsize, engine=self.engine)
-        predicted = sim.simulate(plan).total
+        with default_tracer().span("planner/generate_plan",
+                                   servers=topo.num_servers(),
+                                   bucket=bucket):
+            result = gentree_mod.gentree(topo, size_floats, params=params,
+                                         engine=self.engine,
+                                         **self.gentree_kwargs)
+            algo, plan = "gentree", result.plan
+            decisions = _decisions_to_json(result.decisions)
+            skewed = None
+            if self.skew is not None and self.skew.scale > 0.0:
+                candidates = [("gentree", result.plan)]
+                n = topo.num_servers()
+                for kind in self.baseline_kinds:
+                    if kind == "rhd" and (n & (n - 1)) != 0:
+                        continue
+                    if n < 2:
+                        continue
+                    candidates.append(
+                        (kind, gentree_mod.baseline_plan(kind, topo,
+                                                         size_floats)))
+                from .skew import pick_plan_under_skew
+                algo, plan, skewed = pick_plan_under_skew(
+                    candidates, topo, self.skew, params, unit_bytes=dsize,
+                    engine=self.engine)
+                if algo != "gentree":
+                    # per-switch decisions describe the discarded GenTree
+                    # plan, not the baseline that won — don't mis-report
+                    # them
+                    decisions = {}
+            sim = Simulator(topo, params, unit_bytes=dsize,
+                            engine=self.engine)
+            predicted = sim.simulate(plan).total
 
-        entry = {"plan": plan_to_json(plan), "algo": algo,
-                 "predicted_time": predicted, "decisions": decisions,
-                 "expected_skewed_time": skewed,
-                 "nbytes_bucket": bucket, "_obj": plan}
-        self.cache.put(key, entry)
+            entry = {"plan": plan_to_json(plan), "algo": algo,
+                     "predicted_time": predicted, "decisions": decisions,
+                     "expected_skewed_time": skewed,
+                     "nbytes_bucket": bucket, "_obj": plan}
+            self.cache.put(key, entry)
         return PlanResponse(plan=plan, algo=algo, predicted_time=predicted,
                             decisions=decisions, expected_skewed_time=skewed,
                             source="cold", key=key, nbytes_bucket=bucket,
@@ -565,6 +630,28 @@ class PlannerService:
         split = folds[-1] if folds else len(plan.steps) - 1
         return (float(sum(res.per_step[:split + 1])),
                 float(sum(res.per_step[split + 1:])))
+
+    def _axis_term_shares(self, n: int, level: str, size_floats: float,
+                          dtype: str, eff, merged: GenModelParams):
+        """GenModel per-term breakdown (`cost_model.CostBreakdown`) of the
+        axis's plan at the exact size — the *proportions* side of the cost
+        ledger. Same plan fetch + rescale as `_axis_halves_time`, but
+        priced by the single-switch term walk (`evaluate_plan_terms`)
+        under the merged (γ/δ-from-server) level params, so each term is
+        attributed the way the planner charges it. The caller rescales
+        the breakdown to the quoted prediction (`scaled_to`)."""
+        from repro.core.cost_model import evaluate_plan_terms
+        from repro.core.sync import level_switch_topo
+        topo = level_switch_topo(int(n), eff, level)
+        dsize = DTYPE_BYTES.get(dtype, 4)
+        size_floats = max(size_floats, 1.0)
+        resp = self.get_plan(topo, size_floats * dsize, dtype, params=eff)
+        plan = resp.plan
+        factor = size_floats / resp.size_floats if resp.size_floats \
+            else 1.0
+        if abs(factor - 1.0) > 1e-12:
+            plan = self._scaled_plan(plan, factor)
+        return evaluate_plan_terms(plan, merged)
 
     def get_bucket_plan(self, axes: Sequence[tuple[str, int]],
                         total_floats: float, dtype: str = "float32", *,
@@ -687,23 +774,26 @@ class PlannerService:
                 cands.append(int(math.ceil(total)))    # monolithic: K = 1
 
             sweep: dict[int, dict] = {}
-            for bf in cands:
-                k = max(1, math.ceil(total / bf))
-                t_rs = t_ag = 0.0
-                shard = float(bf)
-                for i, _a, n in live:
-                    rs, ag = halves(i, n, shard)
-                    t_rs += rs
-                    t_ag += ag
-                    shard /= n      # outer axes see the inner axes' shard
-                # t_rs/t_ag ride along so consumers (bucket_bench's CI gate)
-                # can recompute the pipeline model independently instead of
-                # tautologically re-minimizing the stored totals
-                sweep[bf] = {
-                    "num_buckets": k, "t_rs": t_rs, "t_ag": t_ag,
-                    "pipelined": pipelined_time(t_rs, t_ag, k),
-                    "serial": serial_time(t_rs, t_ag, k),
-                }
+            with default_tracer().span("planner/bucket_sweep",
+                                       candidates=len(cands)):
+                for bf in cands:
+                    k = max(1, math.ceil(total / bf))
+                    t_rs = t_ag = 0.0
+                    shard = float(bf)
+                    for i, _a, n in live:
+                        rs, ag = halves(i, n, shard)
+                        t_rs += rs
+                        t_ag += ag
+                        shard /= n  # outer axes see the inner axes' shard
+                    # t_rs/t_ag ride along so consumers (bucket_bench's CI
+                    # gate) can recompute the pipeline model independently
+                    # instead of tautologically re-minimizing the stored
+                    # totals
+                    sweep[bf] = {
+                        "num_buckets": k, "t_rs": t_rs, "t_ag": t_ag,
+                        "pipelined": pipelined_time(t_rs, t_ag, k),
+                        "serial": serial_time(t_rs, t_ag, k),
+                    }
             rank = "pipelined" if cfg.pipeline else "serial"
             chosen = min(sweep, key=lambda b: (sweep[b][rank], b))
 
@@ -788,7 +878,14 @@ class PlannerService:
         mesh. Called via `core.bucketing.invalidate_schedules` after an
         elastic remesh or a fault-tolerant resume."""
         with self._lock:
-            return self.cache.drop_derived()
+            dropped = self.cache.drop_derived()
+        m = default_metrics()
+        m.counter("planner_schedule_invalidations_total",
+                  "invalidate_executables calls (remesh/resume/refit)"
+                  ).inc()
+        m.counter("planner_executables_dropped_total",
+                  "derived schedules + bucket plans dropped").inc(dropped)
+        return dropped
 
     def executable_count(self) -> int:
         """Derived executable artifacts currently cached (schedules +

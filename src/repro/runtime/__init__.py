@@ -1,4 +1,33 @@
-from .ft import FaultTolerantLoop, StragglerWatchdog, elastic_remesh  # noqa: F401
-from .telemetry import (ArrivalEstimator, ResidualTracker,  # noqa: F401
-                        Telemetry, TimingRing, default_telemetry,
+"""Runtime substrate: telemetry hub, span tracer, metrics registry, and
+the fault-tolerant loop.
+
+`ft` pulls in jax at import time, so its symbols are exported lazily
+(PEP 562): `repro.runtime.trace` / `.metrics` / `.telemetry` stay
+importable on a machine with no accelerator stack.
+"""
+from .metrics import (MetricsRegistry, default_metrics,  # noqa: F401
+                      set_default_metrics)
+from .telemetry import (ArrivalEstimator, CostLedger,  # noqa: F401
+                        LedgerEntry, ResidualTracker, Telemetry,
+                        TimingRing, default_telemetry,
                         set_default_telemetry)
+from .trace import (Tracer, default_tracer,  # noqa: F401
+                    set_default_tracer)
+
+_FT = ("FaultTolerantLoop", "StragglerWatchdog", "elastic_remesh")
+
+__all__ = [
+    "ArrivalEstimator", "CostLedger", "LedgerEntry", "ResidualTracker",
+    "Telemetry", "TimingRing",
+    "default_telemetry", "set_default_telemetry",
+    "Tracer", "default_tracer", "set_default_tracer",
+    "MetricsRegistry", "default_metrics", "set_default_metrics",
+    *_FT,
+]
+
+
+def __getattr__(name):
+    if name in _FT:
+        from . import ft
+        return getattr(ft, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -33,7 +33,9 @@ import jax
 
 from repro.checkpoint import CheckpointManager
 
+from .metrics import default_metrics
 from .telemetry import Telemetry, peek_default_telemetry
+from .trace import default_tracer
 
 
 @dataclasses.dataclass
@@ -77,6 +79,11 @@ class StragglerWatchdog:
         ring.add(dt, baseline=not straggled)
         if straggled:
             self.events.append((step, dt, ewma))
+            default_tracer().instant("ft/straggler", step=step, dt=dt,
+                                     ewma=ewma)
+            default_metrics().counter(
+                "ft_straggler_events_total",
+                "steps flagged slower than threshold x EWMA").inc()
         return straggled
 
 
@@ -128,7 +135,11 @@ class FaultTolerantLoop:
     def resume_or_init(self) -> int:
         last = self.ckpt.latest_step()
         if last is not None:
-            self.state, step = self.ckpt.restore(self.state)
+            with default_tracer().span("ft/restore", step=last):
+                self.state, step = self.ckpt.restore(self.state)
+            default_metrics().counter(
+                "ft_resumes_total",
+                "checkpoint restores (resume-or-init hits)").inc()
             if self.invalidate_on_resume:
                 from repro.core.bucketing import invalidate_schedules
                 dropped = invalidate_schedules(self.planner)
@@ -148,6 +159,11 @@ class FaultTolerantLoop:
                 self.state = self.step_fn(self.state, step)
             except Exception as e:           # device loss / preemption
                 self.restarts += 1
+                default_tracer().instant("ft/failure", step=step,
+                                         restart=self.restarts)
+                default_metrics().counter(
+                    "ft_restarts_total",
+                    "failed steps that triggered restore-and-replay").inc()
                 self.on_event("failure", {"step": step, "error": repr(e),
                                           "restart": self.restarts})
                 if self.restarts > self.max_restarts:
@@ -174,7 +190,11 @@ class FaultTolerantLoop:
                 self.on_event("straggler", {"step": step, "dt": dt})
             step += 1
             if step % self.ckpt_every == 0:
-                self.ckpt.save(step, self.state)
+                with default_tracer().span("ft/checkpoint", step=step):
+                    self.ckpt.save(step, self.state)
+                default_metrics().counter(
+                    "ft_checkpoints_total",
+                    "periodic checkpoint saves").inc()
                 self.on_event("checkpoint", {"step": step})
         self.ckpt.save(step, self.state)
         self.ckpt.wait()
@@ -196,13 +216,17 @@ def elastic_remesh(state: Any, shardings: Any, *, planner=None,
     to invalidate a specific service; the default invalidates the
     process-wide service (and clears the process-wide telemetry hub) if
     one exists."""
-    if invalidate:
-        from repro.core.bucketing import invalidate_schedules
-        dropped = invalidate_schedules(planner)
-        tele = telemetry \
-            or (getattr(planner, "telemetry", None) if planner is not None
-                else peek_default_telemetry())
-        if tele is not None:
-            tele.remeasure("remesh", {"dropped": dropped})
-    return jax.tree.map(
-        lambda x, s: jax.device_put(x, s), state, shardings)
+    with default_tracer().span("ft/remesh", invalidate=invalidate):
+        if invalidate:
+            from repro.core.bucketing import invalidate_schedules
+            dropped = invalidate_schedules(planner)
+            tele = telemetry \
+                or (getattr(planner, "telemetry", None)
+                    if planner is not None
+                    else peek_default_telemetry())
+            if tele is not None:
+                tele.remeasure("remesh", {"dropped": dropped})
+        default_metrics().counter(
+            "ft_remesh_total", "elastic remesh operations").inc()
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, s), state, shardings)

@@ -120,11 +120,13 @@ class TimingRing:
             return self._buf[: self._count]
         return self._buf[self._next:] + self._buf[: self._next]
 
-    def percentile(self, q: float) -> float:
-        """q in [0, 100]; linear interpolation over the retained window."""
+    def percentile(self, q: float) -> float | None:
+        """q in [0, 100]; linear interpolation over the retained window.
+        Empty-window contract: ``None`` (no sample can stand in for a
+        percentile — 0.0 would read as "instant")."""
         with self._lock:
             if not self._count:
-                return 0.0
+                return None
             xs = sorted(self._buf[: self._count]
                         if self._count < self.capacity else self._buf)
         pos = (len(xs) - 1) * min(max(q, 0.0), 100.0) / 100.0
@@ -133,6 +135,8 @@ class TimingRing:
         return xs[lo] + (xs[hi] - xs[lo]) * (pos - lo)
 
     def summary(self) -> dict:
+        """Safe on an empty ring: percentile/ewma/last fields are None,
+        count/total/mean are zero."""
         return {"count": self._count, "total": self._total,
                 "mean": self.mean(), "ewma": self._ewma,
                 "p50": self.percentile(50.0), "p95": self.percentile(95.0),
@@ -202,16 +206,22 @@ class ResidualTracker:
         mid = len(xs) // 2
         return xs[mid] if len(xs) % 2 else 0.5 * (xs[mid - 1] + xs[mid])
 
-    def drift(self) -> float:
+    def drift(self) -> float | None:
         """Median |relative residual| over the window — the refit
-        policy's trigger statistic (robust to straggler outliers)."""
+        policy's trigger statistic (robust to straggler outliers).
+        Empty-window contract: ``None`` (an empty tracker has measured
+        nothing; 0.0 would read as "zero drift, model perfect")."""
         with self._lock:
+            if not self._window:
+                return None
             return self._median(self._sorted_abs)
 
-    def bias(self) -> float:
+    def bias(self) -> float | None:
         """Median signed relative residual (positive: model optimistic,
-        the cluster is slower than predicted)."""
+        the cluster is slower than predicted). ``None`` when empty."""
         with self._lock:
+            if not self._window:
+                return None
             return self._median(self._sorted_signed)
 
     def reset(self) -> None:
@@ -279,6 +289,72 @@ class LevelSample:
 
 
 @dataclass
+class LedgerEntry:
+    """One priced collective in the cost ledger (DESIGN.md §11): the
+    quoted prediction decomposed into per-term predicted seconds
+    (``shares`` sums to ``predicted`` — enforced where it is built, see
+    `cost_model.CostBreakdown.scaled_to`) next to the measured wall
+    time. A window of these is what `core.fitting.attribute_term_drift`
+    solves to name the drifting term."""
+    level: str
+    n: int
+    size_floats: float
+    predicted: float
+    measured: float
+    shares: dict[str, float]
+
+
+class CostLedger:
+    """Bounded per-level store of `LedgerEntry` rows. Pure storage —
+    the attribution least-squares lives in `core.fitting` so this module
+    stays stdlib-only. Cleared by `Telemetry.remeasure()` along with the
+    other suspect state (old hardware, old prices)."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._entries: dict[str, deque[LedgerEntry]] = {}
+        self._lock = threading.Lock()
+
+    def record(self, entry: LedgerEntry) -> None:
+        with self._lock:
+            dq = self._entries.get(entry.level)
+            if dq is None:
+                dq = self._entries[entry.level] = deque(
+                    maxlen=self.capacity)
+            dq.append(entry)
+
+    def entries(self, level: str) -> list[LedgerEntry]:
+        with self._lock:
+            return list(self._entries.get(level, ()))
+
+    def count(self, level: str) -> int:
+        with self._lock:
+            return len(self._entries.get(level, ()))
+
+    def levels(self) -> list[str]:
+        with self._lock:
+            return sorted(self._entries)
+
+    def totals(self, level: str) -> dict[str, float]:
+        """Summed predicted seconds per term over the retained window —
+        the 'where does the model think the time goes' view."""
+        out: dict[str, float] = {}
+        for e in self.entries(level):
+            for term, sec in e.shares.items():
+                out[term] = out.get(term, 0.0) + sec
+        return out
+
+    def clear(self, level: str | None = None) -> None:
+        with self._lock:
+            if level is None:
+                self._entries.clear()
+            else:
+                self._entries.pop(level, None)
+
+
+@dataclass
 class TelemetryEvent:
     kind: str
     info: dict = field(default_factory=dict)
@@ -306,6 +382,7 @@ class Telemetry:
         # window per straggler, and a weeks-long deployment must not
         # grow (or serialize, via stats()) an unbounded event log
         self.events: deque[TelemetryEvent] = deque(maxlen=ring_capacity)
+        self.ledger = CostLedger(capacity=ring_capacity)
         self._rings: dict[str, TimingRing] = {}
         self._residuals: dict[str, ResidualTracker] = {}
         self._samples: dict[str, list[LevelSample]] = {}
@@ -388,6 +465,7 @@ class Telemetry:
                 rt.reset()
             self._samples.clear()
             self.arrivals.reset()
+            self.ledger.clear()
 
     # ---- reporting ---------------------------------------------------------
     def stats(self) -> dict:
@@ -398,6 +476,8 @@ class Telemetry:
                                   "bias": rt.bias()}
                               for k, rt in self._residuals.items()},
                 "samples": {lvl: len(s) for lvl, s in self._samples.items()},
+                "ledger": {lvl: self.ledger.count(lvl)
+                           for lvl in self.ledger.levels()},
                 "arrival_devices": self.arrivals.n_devices,
                 "events": [(e.kind, e.info) for e in self.events],
             }

@@ -60,6 +60,10 @@ except ImportError:
         def tuples(*a, **kw):
             return _Strategy()
 
+        @staticmethod
+        def recursive(*a, **kw):
+            return _Strategy()
+
     def given(*a, **kw):
         def deco(fn):
             return _SKIP(fn)

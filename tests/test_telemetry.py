@@ -3,7 +3,8 @@ residual tracking, arrival-offset estimation, re-measure windows, and the
 shared watchdog/planner datapath (DESIGN.md §10)."""
 import pytest
 
-from repro.runtime.telemetry import (ArrivalEstimator, LevelSample,
+from repro.runtime.telemetry import (ArrivalEstimator, CostLedger,
+                                     LedgerEntry, LevelSample,
                                      ResidualTracker, Telemetry, TimingRing)
 
 
@@ -91,6 +92,36 @@ class TestResidualTracker:
 
 
 # ---------------------------------------------------------------------------
+# Empty-window contract: no sample can masquerade as a measurement
+# ---------------------------------------------------------------------------
+class TestEmptyWindowContract:
+    def test_empty_ring_percentile_is_none(self):
+        r = TimingRing(capacity=4)
+        assert r.percentile(50.0) is None
+        assert r.percentile(0.0) is None
+        r.add(1.0)
+        assert r.percentile(50.0) == 1.0
+        r.reset()
+        assert r.percentile(95.0) is None
+
+    def test_empty_ring_summary_identity_fields(self):
+        s = TimingRing(capacity=4).summary()
+        assert s["count"] == 0 and s["total"] == 0
+        assert s["mean"] == 0.0
+        assert s["ewma"] is None and s["last"] is None
+        assert s["p50"] is None and s["p95"] is None
+
+    def test_empty_tracker_drift_and_bias_are_none(self):
+        t = ResidualTracker()
+        assert t.drift() is None
+        assert t.bias() is None
+        t.record(1.0, 1.5)
+        assert t.drift() == pytest.approx(0.5)
+        t.reset()
+        assert t.drift() is None and t.bias() is None
+
+
+# ---------------------------------------------------------------------------
 # ArrivalEstimator
 # ---------------------------------------------------------------------------
 class TestArrivalEstimator:
@@ -157,6 +188,63 @@ class TestTelemetry:
         st = tele.stats()
         assert "x" in st["rings"] and "level/a" in st["residuals"]
         assert st["rings"]["x"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# CostLedger (DESIGN.md §11): per-term predicted seconds next to measured
+# ---------------------------------------------------------------------------
+def _entry(level="root_sw", predicted=1.0, measured=1.1, **shares):
+    base = {"alpha": 0.0, "beta": 0.0, "gamma": 0.0, "delta": 0.0,
+            "incast": 0.0}
+    base.update(shares)
+    return LedgerEntry(level=level, n=8, size_floats=1e6,
+                       predicted=predicted, measured=measured, shares=base)
+
+
+class TestCostLedger:
+    def test_record_and_per_level_isolation(self):
+        led = CostLedger()
+        led.record(_entry(level="root_sw", alpha=0.4, beta=0.6))
+        led.record(_entry(level="cross_dc", alpha=1.0))
+        assert led.count("root_sw") == 1 and led.count("cross_dc") == 1
+        assert led.levels() == ["cross_dc", "root_sw"]
+        assert led.entries("nope") == []
+
+    def test_totals_sum_terms_over_window(self):
+        led = CostLedger()
+        led.record(_entry(alpha=0.4, beta=0.6))
+        led.record(_entry(alpha=0.1, beta=0.9))
+        tot = led.totals("root_sw")
+        assert tot["alpha"] == pytest.approx(0.5)
+        assert tot["beta"] == pytest.approx(1.5)
+
+    def test_bounded_window(self):
+        led = CostLedger(capacity=3)
+        for i in range(10):
+            led.record(_entry(alpha=float(i)))
+        assert led.count("root_sw") == 3
+        assert [e.shares["alpha"] for e in led.entries("root_sw")] == \
+            [7.0, 8.0, 9.0]
+
+    def test_clear_level_and_all(self):
+        led = CostLedger()
+        led.record(_entry(level="a"))
+        led.record(_entry(level="b"))
+        led.clear("a")
+        assert led.count("a") == 0 and led.count("b") == 1
+        led.clear()
+        assert led.levels() == []
+
+    def test_remeasure_clears_ledger(self):
+        tele = Telemetry()
+        tele.ledger.record(_entry(alpha=1.0))
+        tele.remeasure("remesh", {})
+        assert tele.ledger.levels() == []
+
+    def test_stats_reports_ledger_counts(self):
+        tele = Telemetry()
+        tele.ledger.record(_entry(level="root_sw"))
+        assert tele.stats()["ledger"] == {"root_sw": 1}
 
 
 # ---------------------------------------------------------------------------

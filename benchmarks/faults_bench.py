@@ -1,0 +1,111 @@
+"""Guarded-execution overhead gates (DESIGN.md §12).
+
+Every collective on the plan path now launches through `GuardedSchedule`
+(retry + fallback ladder + injector poll + launch accounting). Two gates
+keep that armor cheap:
+
+  * **guarded-launch overhead < 3%** — the guarded `run_numpy` of a real
+    lowered plan vs. the bare schedule. The guard's per-launch work
+    (metrics counter, injector poll, wall-clock bracket) must be noise
+    next to the collective it wraps.
+  * **fallback-path overhead < 3%** — a *demoted* guard (sticky flat
+    rung after a failure) dispatching its fallback vs. calling the
+    fallback directly. Demotion must cost one failed attempt, not a per
+    -launch tax.
+
+An empty scoped FaultInjector masks any ambient $REPRO_FAULT_PLAN so the
+measurement is deterministic. `benchmarks.run --json` records
+`guarded_overhead_pct` / `fallback_overhead_pct` in BENCH_core.json.
+
+    PYTHONPATH=src python -m benchmarks.faults_bench
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import fmt_table
+
+REPEATS = 30
+N = 8
+COLS = 200_000          # ~12.8 MB across the axis: ms-scale run_numpy
+
+
+def _paired_times(fn_a, fn_b, repeats: int = REPEATS
+                  ) -> tuple[float, float]:
+    """Best-of-N for two paths, interleaved so ambient load (CI noise,
+    co-running jobs) hits both equally. Minima, not medians: the floor
+    is the intrinsic cost; everything above it is scheduler noise that
+    would otherwise dominate a small relative overhead."""
+    fn_a(), fn_b()                         # warm up both paths
+    best_a = best_b = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return best_a, best_b
+
+
+def run() -> dict:
+    from repro.core.lower import GuardedSchedule, GuardPolicy
+    from repro.planner.service import PlannerService
+    from repro.runtime.faults import FaultInjector, FaultPlan
+
+    svc = PlannerService()
+    inner = svc.get_axis_executable("data", N, float(COLS)).schedule
+    X = np.random.default_rng(0).normal(size=(N, COLS))
+
+    with FaultInjector(FaultPlan()):       # mask ambient chaos plans
+        # ---- gate 1: guarded launch vs bare schedule ----------------------
+        guarded = GuardedSchedule(inner)
+        t_bare, t_guard = _paired_times(lambda: inner.run_numpy(X),
+                                        lambda: guarded.run_numpy(X))
+        guard_pct = 100.0 * (t_guard - t_bare) / t_bare
+
+        # ---- gate 2: demoted fallback dispatch vs direct call -------------
+        demoted = GuardedSchedule(
+            inner, policy=GuardPolicy(max_retries=0, backoff=0.0))
+
+        def planned_rung():
+            raise RuntimeError("planned rung down")
+
+        def flat_rung():
+            return inner.run_numpy(X)
+
+        # one real failure demotes; the ladder then serves the flat rung
+        demoted._guarded("allreduce", planned_rung, flat_rung)
+        assert demoted.demoted
+        t_direct, t_ladder = _paired_times(
+            flat_rung,
+            lambda: demoted._guarded("allreduce", planned_rung, flat_rung))
+        fallback_pct = 100.0 * (t_ladder - t_direct) / t_direct
+
+    rows = [
+        {"path": "guarded launch", "bare_ms": t_bare * 1e3,
+         "armored_ms": t_guard * 1e3, "overhead_pct": guard_pct},
+        {"path": "demoted fallback", "bare_ms": t_direct * 1e3,
+         "armored_ms": t_ladder * 1e3, "overhead_pct": fallback_pct},
+    ]
+    print(fmt_table(
+        [{k: (f"{v:.3f}" if isinstance(v, float) else v)
+          for k, v in r.items()} for r in rows],
+        ["path", "bare_ms", "armored_ms", "overhead_pct"],
+        "guarded execution overhead (n=%d, %d cols)" % (N, COLS)))
+
+    ok = guard_pct < 3.0 and fallback_pct < 3.0
+    print(f"guarded-launch overhead {guard_pct:.2f}% "
+          f"(gate < 3%), fallback-path overhead {fallback_pct:.2f}% "
+          f"(gate < 3%): {'OK' if ok else 'FAIL'}")
+    return {"ok": ok,
+            "guarded_overhead_pct": round(guard_pct, 3),
+            "fallback_overhead_pct": round(fallback_pct, 3),
+            "guarded_launches": guarded.stats["launches"],
+            "demoted_launches": demoted.stats["demoted_launches"]}
+
+
+if __name__ == "__main__":
+    run()

@@ -39,7 +39,7 @@ def main() -> None:
     if args.trace:
         tracer.enabled = True
 
-    from . import (bucket_bench, exec_bench, fig3_incast,
+    from . import (bucket_bench, exec_bench, faults_bench, fig3_incast,
                    fig4_delta_microbench, fig8_model_accuracy,
                    planner_bench, roofline, simfast_bench,
                    table3_cpu_testbed, table4_gpu_testbed, table5_fitting,
@@ -60,6 +60,7 @@ def main() -> None:
         ("exec", exec_bench.run),
         ("bucket", bucket_bench.run),
         ("telemetry", telemetry_bench.run),
+        ("faults", faults_bench.run),
     ]
     only = set(args.only.split(",")) if args.only else None
 

@@ -12,6 +12,7 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any
 
 import jax
@@ -33,6 +34,46 @@ def _to_storable(x: np.ndarray) -> np.ndarray:
                    8: np.uint64}[x.dtype.itemsize])
 
 
+def _file_crc(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc & 0xFFFFFFFF
+
+
+CHECKSUM_FILE = "checksums.json"
+_PAYLOAD_FILES = ("arrays.npz", "tree.json")
+
+
+def write_checksums(path: str) -> None:
+    """Record per-file CRC32s for a saved checkpoint dir (written before
+    the atomic rename, so a complete dir always carries its manifest)."""
+    sums = {name: _file_crc(os.path.join(path, name))
+            for name in _PAYLOAD_FILES
+            if os.path.exists(os.path.join(path, name))}
+    with open(os.path.join(path, CHECKSUM_FILE), "w") as f:
+        json.dump({"crc32": sums}, f)
+
+
+def verify_checksums(path: str) -> bool:
+    """True when the dir's payload files match their recorded CRC32s.
+    A checkpoint written before checksum manifests existed (no
+    checksums.json) passes vacuously — `load_pytree` remains the final
+    arbiter; this is the cheap first line (DESIGN.md §12)."""
+    manifest = os.path.join(path, CHECKSUM_FILE)
+    if not os.path.exists(manifest):
+        return all(os.path.exists(os.path.join(path, n))
+                   for n in _PAYLOAD_FILES)
+    try:
+        with open(manifest) as f:
+            sums = json.load(f)["crc32"]
+        return all(_file_crc(os.path.join(path, name)) == int(want)
+                   for name, want in sums.items())
+    except (OSError, ValueError, KeyError, TypeError):
+        return False
+
+
 def save_pytree(tree: Pytree, path: str) -> None:
     os.makedirs(path, exist_ok=True)
     flat, treedef = jax.tree.flatten(tree)
@@ -47,6 +88,7 @@ def save_pytree(tree: Pytree, path: str) -> None:
     }
     with open(os.path.join(path, "tree.json"), "w") as f:
         json.dump(meta, f)
+    write_checksums(path)
 
 
 def load_pytree(path: str, like: Pytree) -> Pytree:
@@ -126,9 +168,54 @@ class CheckpointManager:
             return None
         return int(tag.split("_")[1])
 
-    def restore(self, like: Pytree, step: int | None = None) -> tuple[Pytree, int]:
-        step = step if step is not None else self.latest_step()
-        if step is None:
+    def available_steps(self) -> list[int]:
+        """Complete checkpoint steps on disk, newest first."""
+        try:
+            names = os.listdir(self.dir)
+        except OSError:
+            return []
+        steps = []
+        for d in names:
+            if d.startswith("step_"):
+                try:
+                    steps.append(int(d.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return sorted(steps, reverse=True)
+
+    def verify(self, step: int) -> bool:
+        """Checksum-verify one checkpoint dir (see `verify_checksums`)."""
+        return verify_checksums(
+            os.path.join(self.dir, f"step_{step:08d}"))
+
+    def restore(self, like: Pytree, step: int | None = None
+                ) -> tuple[Pytree, int]:
+        """Restore the requested (or newest intact) checkpoint.
+
+        An explicit `step` is authoritative: corruption there raises.
+        Without one, candidates are tried newest-first; a checkpoint
+        failing its checksum manifest or its actual load falls back to
+        the previous step (counted in `ckpt_restore_fallbacks_total`) —
+        a torn/bit-flipped latest save costs `ckpt_every` steps of
+        replay, not the job (DESIGN.md §12)."""
+        if step is not None:
+            path = os.path.join(self.dir, f"step_{step:08d}")
+            return load_pytree(path, like), step
+        candidates = self.available_steps()
+        if not candidates:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:08d}")
-        return load_pytree(path, like), step
+        errors = []
+        for cand in candidates:
+            path = os.path.join(self.dir, f"step_{cand:08d}")
+            try:
+                if not verify_checksums(path):
+                    raise ValueError(f"checksum mismatch in {path}")
+                return load_pytree(path, like), cand
+            except Exception as e:      # corrupt/unreadable: try older
+                errors.append((cand, repr(e)))
+                from repro.runtime.metrics import default_metrics
+                default_metrics().counter(
+                    "ckpt_restore_fallbacks_total",
+                    "corrupt checkpoints skipped during restore").inc()
+        raise FileNotFoundError(
+            f"no intact checkpoint in {self.dir}; tried {errors}")

@@ -331,10 +331,24 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
                 "modeled serial/pipelined speedup, normalized to [.5,1]"
                 ).set(bplan.predicted_serial
                       / (2.0 * bplan.predicted_pipelined))
+    axis_plans = bplan.axis_plans
+    if getattr(cfg, "guard", True):
+        # guard the executed schedules (DESIGN.md §12); guard_schedule
+        # memoizes per underlying schedule, so demotion state persists
+        # across steps that cache-hit the same bucket plan
+        import dataclasses as _dc
+
+        from .lower import guard_schedule
+        tele = getattr(service, "telemetry", None)
+        axis_plans = [
+            _dc.replace(pl, schedule=guard_schedule(pl.schedule,
+                                                    telemetry=tele))
+            if pl.schedule is not None else pl
+            for pl in axis_plans]
     with default_tracer().span("sync/bucketed", buckets=len(buckets),
                                bucket_bytes=bplan.bucket_bytes,
                                source=bplan.source):
-        out = execute_buckets(leaves, buckets, bplan.axis_plans,
+        out = execute_buckets(leaves, buckets, axis_plans,
                               pipeline=bcfg.pipeline,
                               fused_reduce=fused_reduce)
     return jax.tree.unflatten(treedef, out)

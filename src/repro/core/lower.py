@@ -619,3 +619,211 @@ def _lower_plan_inner(plan: Plan,
         owner_of_block=owner, blocks_per_shard=blocks_per_shard,
         reorder=reorder, unorder=unorder,
         placement=tuple(inv[m] for m in range(n)))
+
+
+# ---------------------------------------------------------------------------
+# Guarded execution (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class GuardPolicy:
+    """Launch guard knobs for GuardedSchedule.
+
+    `timeout` is a *post-hoc* budget: schedule launches happen at trace
+    time inside shard_map, so an in-flight dispatch cannot be aborted —
+    a launch that overruns the budget still returns its (valid) result,
+    but the guard counts the timeout and demotes subsequent launches to
+    the flat fallback rung. `max_retries` bounds re-attempts of the
+    planned rung with exponential `backoff` (seconds, doubling, capped
+    at 2 s). `fallback=False` turns the ladder's flat rung off: the last
+    error is raised instead."""
+    timeout: float | None = None
+    max_retries: int = 1
+    backoff: float = 0.05
+    fallback: bool = True
+
+
+class GuardedSchedule:
+    """Fallback-laddered wrapper around a CompiledSchedule.
+
+    Ladder per launch: planned schedule (with bounded retry) → flat jax
+    collective (`lax.psum` / psum+slice / `lax.all_gather`) → raise.
+    Every rung transition is counted in the metrics registry
+    (`guarded_*_total`) and opens a telemetry re-measure window
+    (`Telemetry.remeasure`) — a fallback means measurements of the
+    planned schedule stopped describing what actually ran. After a
+    fallback or timeout the guard *demotes*: subsequent launches take
+    the flat rung directly (sticky, cleared by `reset_guard`), so a
+    persistently failing schedule costs one failed attempt, not one per
+    step. An armed `runtime.faults` injector is consulted before each
+    planned-rung attempt (`check_launch`), which is how chaos tests
+    exercise the ladder deterministically.
+
+    Everything not guarded (describe, blocks_per_shard, run_numpy-less
+    attrs, …) delegates to the wrapped schedule, so the wrapper is a
+    drop-in anywhere a CompiledSchedule flows (core.bucketing probes
+    `blocks_per_shard` via getattr; collectives compare by identity).
+    """
+
+    def __init__(self, schedule, *, policy: GuardPolicy | None = None,
+                 telemetry=None):
+        self.inner = schedule
+        self.policy = policy or GuardPolicy()
+        self.telemetry = telemetry
+        self._demoted = False
+        self.stats = {"launches": 0, "retries": 0, "fallbacks": 0,
+                      "timeouts": 0, "demoted_launches": 0}
+
+    def __getattr__(self, name):
+        inner = self.__dict__.get("inner")
+        if inner is None:
+            raise AttributeError(name)
+        return getattr(inner, name)
+
+    @property
+    def demoted(self) -> bool:
+        return self._demoted
+
+    def reset_guard(self) -> None:
+        self._demoted = False
+
+    # -- internals ----------------------------------------------------------
+    def _metrics(self):
+        from repro.runtime.metrics import default_metrics
+        return default_metrics()
+
+    def _remeasure(self, reason: str, info: dict) -> None:
+        tele = self.telemetry
+        if tele is None:
+            from repro.runtime.telemetry import peek_default_telemetry
+            tele = peek_default_telemetry()
+        if tele is not None:
+            tele.remeasure(reason, info)
+
+    def _note_fallback(self, what: str, err) -> None:
+        self.stats["fallbacks"] += 1
+        self._demoted = True
+        self._metrics().counter(
+            "guarded_fallbacks_total",
+            "guarded launches demoted to the flat collective rung").inc()
+        default_tracer().instant("guard/fallback", plan=self.inner.plan_name,
+                                 what=what, error=repr(err))
+        self._remeasure("guard_fallback",
+                        {"plan": self.inner.plan_name, "what": what,
+                         "error": repr(err)})
+
+    def _guarded(self, what: str, attempt, fallback):
+        import time as _time
+        m = self._metrics()
+        self.stats["launches"] += 1
+        m.counter("guarded_launches_total",
+                  "collective launches through the schedule guard").inc()
+        pol = self.policy
+        if self._demoted and fallback is not None and pol.fallback:
+            self.stats["demoted_launches"] += 1
+            m.counter("guarded_demoted_launches_total",
+                      "launches served by the flat rung after demotion"
+                      ).inc()
+            return fallback()
+        err = None
+        for attempt_i in range(pol.max_retries + 1):
+            if attempt_i:
+                self.stats["retries"] += 1
+                m.counter("guarded_retries_total",
+                          "planned-rung retry attempts").inc()
+                if pol.backoff > 0:
+                    _time.sleep(min(pol.backoff * (2 ** (attempt_i - 1)),
+                                    2.0))
+            try:
+                from repro.runtime.faults import active_injector
+                inj = active_injector()
+                if inj is not None:
+                    inj.check_launch(f"{self.inner.plan_name}/{what}")
+                t0 = _time.perf_counter()
+                out = attempt()
+                dt = _time.perf_counter() - t0
+                if pol.timeout is not None and dt > pol.timeout:
+                    # dispatch already completed — result is valid, but
+                    # demote so the next launch takes the flat rung
+                    self.stats["timeouts"] += 1
+                    self._demoted = True
+                    m.counter("guarded_timeouts_total",
+                              "launches exceeding the per-launch budget"
+                              ).inc()
+                    self._remeasure("guard_timeout",
+                                    {"plan": self.inner.plan_name,
+                                     "what": what, "dt": dt,
+                                     "budget": pol.timeout})
+                return out
+            except Exception as e:            # noqa: BLE001 — ladder rung
+                err = e
+        if fallback is not None and pol.fallback:
+            self._note_fallback(what, err)
+            return fallback()
+        raise err
+
+    # -- guarded collective surface -----------------------------------------
+    def allreduce(self, x, axis_name: str, *,
+                  fused_reduce: Callable | None = None):
+        from jax import lax
+        return self._guarded(
+            "allreduce",
+            lambda: self.inner.allreduce(x, axis_name,
+                                         fused_reduce=fused_reduce),
+            lambda: lax.psum(x, axis_name))
+
+    def reduce_scatter(self, x, axis_name: str, *,
+                       fused_reduce: Callable | None = None):
+        def flat_rs():
+            # mirror the inner contract: pad to the block multiple, full
+            # psum, take this device's canonical shard
+            import jax.numpy as jnp
+            from jax import lax
+            flat = x.reshape(-1)
+            pad = (-flat.size) % self.inner.num_blocks
+            if pad:
+                flat = jnp.concatenate(
+                    [flat, jnp.zeros((pad,), flat.dtype)])
+            full = lax.psum(flat, axis_name)
+            k = full.size // self.inner.n
+            idx = lax.axis_index(axis_name)
+            return lax.dynamic_slice_in_dim(full, idx * k, k)
+
+        return self._guarded(
+            "reduce_scatter",
+            lambda: self.inner.reduce_scatter(x, axis_name,
+                                              fused_reduce=fused_reduce),
+            flat_rs)
+
+    def all_gather(self, shard, axis_name: str):
+        def flat_ag():
+            from jax import lax
+            return lax.all_gather(shard.reshape(-1), axis_name, axis=0,
+                                  tiled=True)
+
+        return self._guarded(
+            "all_gather",
+            lambda: self.inner.all_gather(shard, axis_name),
+            flat_ag)
+
+    def run_numpy(self, X: np.ndarray) -> np.ndarray:
+        # reference path: guard machinery applies (bench measures its
+        # overhead here) but there is no flat numpy rung — errors raise
+        return self._guarded("run_numpy",
+                             lambda: self.inner.run_numpy(X), None)
+
+
+def guard_schedule(schedule, *, telemetry=None, policy=None):
+    """Memoized GuardedSchedule for `schedule`: repeated calls (one per
+    train step on the bucketed path) return the SAME wrapper, so sticky
+    demotion and guard stats survive across launches instead of being
+    reset by every re-wrap. Idempotent on an already-guarded schedule."""
+    if schedule is None or isinstance(schedule, GuardedSchedule):
+        return schedule
+    g = getattr(schedule, "_guard_wrapper", None)
+    if g is None:
+        g = GuardedSchedule(schedule, telemetry=telemetry, policy=policy)
+        try:
+            schedule._guard_wrapper = g
+        except (AttributeError, TypeError):
+            pass                      # unwritable object: unmemoized wrap
+    return g

@@ -52,6 +52,9 @@ class SyncConfig:
     params: dict[str, GenModelParams] | None = None
     bucket_bytes: int | None = None          # None=auto | 0=off | fixed
     pipeline: bool = True                    # double-buffer RS/AG halves
+    # Wrap executed schedules in core.lower.GuardedSchedule (retry +
+    # flat-psum fallback ladder, DESIGN.md §12). Off ⇒ raw schedules.
+    guard: bool = True
 
 
 # Table-5 class per mesh-axis position: the leaf axis rides the pod fabric
@@ -163,7 +166,12 @@ def resolve_axis_plans(axes: Sequence[tuple[str, int]], cfg: "SyncConfig",
             resp = svc.get_axis_executable(a, n, size_floats,
                                            level=axis_level(i),
                                            params=cfg.params)
-            out.append(AxisPlan(a, "plan", schedule=resp.schedule,
+            sched = resp.schedule
+            if getattr(cfg, "guard", True):
+                from .lower import guard_schedule
+                sched = guard_schedule(
+                    sched, telemetry=getattr(svc, "telemetry", None))
+            out.append(AxisPlan(a, "plan", schedule=sched,
                                 predicted=resp.predicted_time))
         return out
 

@@ -117,6 +117,11 @@ class TopoNode:
     uplink_latency: float = 0.0     # s
     level: str = "server"           # "server" | "middle_sw" | "root_sw" | "cross_dc"
     parent: "TopoNode | None" = None
+    # Health state (DESIGN.md §12): "ok" | "degraded" | "dead". A degraded
+    # link keeps serving at reduced uplink_bw (nominal_bw preserves the
+    # healthy value for restore); a dead node is excluded by prune_dead().
+    health: str = "ok"
+    nominal_bw: float | None = None
     _sid: int = -1                  # server id (leaves only, assigned by finalize)
     _routing: "RoutingIndex | None" = field(default=None, repr=False,
                                             compare=False)
@@ -192,6 +197,75 @@ class TopoNode:
 
     def server_ids(self) -> list[int]:
         return [s._sid for s in self.servers()]
+
+    # ---- health (DESIGN.md §12) --------------------------------------------
+    def _invalidate_routing(self) -> None:
+        """Drop cached routing indices that bake in this node's uplink.
+        The uplink appears only in indices rooted at this node or at an
+        ancestor, so climbing to the root suffices; descendant subtree
+        indices never route over it."""
+        n = self
+        while n is not None:
+            n._routing = None
+            n = n.parent
+
+    def mark_degraded(self, factor: float) -> "TopoNode":
+        """Degrade this node's uplink to `factor` × its nominal bandwidth
+        (0 < factor ≤ 1). The changed uplink_bw flows into the planner
+        fingerprint (`topo_canonical` hashes it), so any PlannerService
+        keyed on this topology reprices from a cold cache entry — no
+        schedule priced for the healthy link survives."""
+        factor = float(factor)
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"degrade factor must be in (0, 1]: {factor}")
+        if self.nominal_bw is None:
+            self.nominal_bw = self.uplink_bw
+        self.uplink_bw = self.nominal_bw * factor
+        self.health = "ok" if factor == 1.0 else "degraded"
+        self._invalidate_routing()
+        return self
+
+    def mark_dead(self) -> "TopoNode":
+        """Mark this node (and implicitly its subtree) failed. Dead nodes
+        still fingerprint distinctly (health is hashed) and are removed
+        from planning topologies via `prune_dead()`."""
+        self.health = "dead"
+        self._invalidate_routing()
+        return self
+
+    def restore_health(self) -> "TopoNode":
+        if self.nominal_bw is not None:
+            self.uplink_bw = self.nominal_bw
+        self.health = "ok"
+        self._invalidate_routing()
+        return self
+
+    def has_dead(self) -> bool:
+        return any(n.health == "dead" for n in self.iter_nodes())
+
+    def prune_dead(self) -> "TopoNode":
+        """A finalized deep copy of this tree without dead subtrees (a
+        switch whose children all died is itself removed). Raises
+        ValueError when nothing survives — the caller has no topology
+        left to plan over."""
+        def copy(node: "TopoNode") -> "TopoNode | None":
+            if node.health == "dead":
+                return None
+            kids = [k for k in (copy(c) for c in node.children)
+                    if k is not None]
+            if node.children and not kids:
+                return None
+            out = TopoNode(name=node.name, children=kids,
+                           uplink_bw=node.uplink_bw,
+                           uplink_latency=node.uplink_latency,
+                           level=node.level, health=node.health,
+                           nominal_bw=node.nominal_bw)
+            return out
+
+        root = copy(self)
+        if root is None or not root.servers():
+            raise ValueError("prune_dead: no live servers remain")
+        return root.finalize()
 
     # ---- routing -----------------------------------------------------------
     def path_links(self, src: "TopoNode", dst: "TopoNode") -> list["TopoNode"]:

@@ -63,7 +63,12 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
             on_log(f"planner: plan not lowerable ({e}); advisory decode "
                    f"plan {desc}")
     if tp_exec is not None:
-        sched = tp_exec.schedule
+        # guarded execution (DESIGN.md §12): a failing planned schedule
+        # falls back to flat lax.psum instead of failing the deployment
+        from repro.core.lower import guard_schedule
+        sched = guard_schedule(
+            tp_exec.schedule,
+            telemetry=default_service().telemetry)
         on_log(f"planner: decode AllReduce executes {tp_exec.algo} plan "
                f"({sched.describe()})")
         from jax.sharding import PartitionSpec as P
@@ -158,8 +163,12 @@ def serve(sc: ServeConfig, smoke: bool = True, on_log=print) -> dict:
     gen = np.stack(out, axis=1)
     on_log(f"served batch={sc.batch} prompt={sc.prompt_len} "
            f"new={sc.max_new}: first row {gen[0][:8].tolist()}...")
-    return {"tokens": gen, "tp_exec": tp_exec,
-            "tp_schedule": None if tp_exec is None else tp_exec.schedule}
+    if tp_exec is not None:
+        from repro.core.lower import guard_schedule
+        tp_sched = guard_schedule(tp_exec.schedule)   # memoized wrapper
+    else:
+        tp_sched = None
+    return {"tokens": gen, "tp_exec": tp_exec, "tp_schedule": tp_sched}
 
 
 def main():

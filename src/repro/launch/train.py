@@ -182,7 +182,13 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
                 resp = planner.get_axis_executable(
                     a, n, size_floats, level=axis_level(i),
                     params=sync.params)
-                out.append(AxisPlan(a, "plan", schedule=resp.schedule,
+                sched = resp.schedule
+                if getattr(sync, "guard", True):
+                    from repro.core.lower import guard_schedule
+                    sched = guard_schedule(
+                        sched,
+                        telemetry=getattr(planner, "telemetry", None))
+                out.append(AxisPlan(a, "plan", schedule=sched,
                                     predicted=resp.predicted_time))
             return out
         # gentree/plan route through the process-wide PlannerService inside
@@ -225,7 +231,21 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
         except LoweringError:
             return None
         cs = bp.axis_plans[0].schedule if bp.axis_plans else None
-        return bp if cs is not None and cs.blocks_per_shard else None
+        if cs is None or not cs.blocks_per_shard:
+            return None
+        if getattr(sync, "guard", True):
+            # the zero3 bucketed halves launch plan.schedule directly,
+            # so the guard (DESIGN.md §12) must wrap here too — the
+            # memoized wrapper keeps demotion sticky across retraces
+            import dataclasses as _dc
+            from repro.core.lower import guard_schedule
+            tele = getattr(svc, "telemetry", None)
+            bp = _dc.replace(bp, axis_plans=[
+                _dc.replace(pl, schedule=guard_schedule(pl.schedule,
+                                                        telemetry=tele))
+                if pl.schedule is not None else pl
+                for pl in bp.axis_plans])
+        return bp
 
     def step(state, batch):
         from repro.models import actsharding
@@ -375,6 +395,11 @@ class TrainConfig:
     # when set, export the process-wide metrics registry (JSON snapshot +
     # sibling .prom text file) at the end of the run
     metrics_path: str | None = None
+    # chaos mode (DESIGN.md §12): a `FaultPlan.parse` spec string (e.g.
+    # "seed=7,steps=200,link_degrade=0.01,payload_corrupt=0.05") arms a
+    # deterministic fault injector for the run; None defers to any
+    # $REPRO_FAULT_PLAN / surrounding FaultInjector context
+    fault_plan: str | None = None
 
 
 def run_training(tc: TrainConfig, mesh: Mesh | None = None,
@@ -442,19 +467,42 @@ def run_training(tc: TrainConfig, mesh: Mesh | None = None,
         losses.append(float(metrics["loss"]))
         return state
 
+    import contextlib
+    injector = None
+    inj_scope = contextlib.nullcontext()
+    if tc.fault_plan:
+        from repro.runtime.faults import FaultInjector, FaultPlan
+        injector = FaultInjector(FaultPlan.parse(tc.fault_plan))
+        # entering the scope arms the process-global injector, so
+        # GuardedSchedule launches see the payload-corruption events too
+        inj_scope = injector
+        on_log(f"chaos: armed fault plan {injector.plan.key()} "
+               f"({len(injector.plan.events)} events)")
     if tc.ckpt_dir:
+        # hand the loop the planner so injected link faults replan
+        # through the service's health map (DESIGN.md §12)
+        loop_planner = None
+        if tc.engine == "manual" and tc.sync in ("gentree", "plan"):
+            from repro.planner.service import default_service
+            loop_planner = default_service()
         mgr = CheckpointManager(tc.ckpt_dir, keep=2)
         loop = FaultTolerantLoop(one_step, state, mgr,
                                  ckpt_every=tc.ckpt_every,
-                                 telemetry=tele)
-        state = loop.run(tc.steps)
+                                 telemetry=tele,
+                                 planner=loop_planner,
+                                 injector=injector)
+        with inj_scope:
+            state = loop.run(tc.steps)
+        if injector is not None:
+            on_log(f"chaos: injector fired {injector.stats()['fired']}")
     else:
         import time
-        for s in range(tc.steps):
-            t0 = time.perf_counter()
-            state = one_step(state, s)
-            if tele is not None:
-                tele.record("train/step", time.perf_counter() - t0)
+        with inj_scope:
+            for s in range(tc.steps):
+                t0 = time.perf_counter()
+                state = one_step(state, s)
+                if tele is not None:
+                    tele.record("train/step", time.perf_counter() - t0)
 
     if tc.engine == "manual" and tc.sync in ("gentree", "plan"):
         # Plans resolve once at trace time, so a fresh process shows one
@@ -514,12 +562,15 @@ def main():
                     help="export a Chrome-trace JSON of the run")
     ap.add_argument("--metrics", default=None, metavar="PATH",
                     help="export a metrics snapshot (JSON + .prom)")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="arm a deterministic chaos fault plan, e.g. "
+                         "'seed=7,steps=200,payload_corrupt=0.05'")
     args = ap.parse_args()
     out = run_training(TrainConfig(
         arch=args.arch, steps=args.steps, engine=args.engine,
         sync=args.sync, seq_len=args.seq_len, global_batch=args.batch,
         ckpt_dir=args.ckpt_dir, trace_path=args.trace,
-        metrics_path=args.metrics))
+        metrics_path=args.metrics, fault_plan=args.faults))
     print(f"final loss: {out['losses'][-1]:.4f}")
 
 

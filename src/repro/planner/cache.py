@@ -79,18 +79,21 @@ class CacheStats:
     evictions: int = 0
     disk_loads: int = 0
     puts: int = 0
+    load_errors: int = 0     # corrupt entries/files skipped by load()
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
-    COUNTERS = ("hits", "misses", "evictions", "disk_loads", "puts")
+    COUNTERS = ("hits", "misses", "evictions", "disk_loads", "puts",
+                "load_errors")
 
     def as_dict(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "disk_loads": self.disk_loads,
-                "puts": self.puts, "hit_rate": self.hit_rate}
+                "puts": self.puts, "load_errors": self.load_errors,
+                "hit_rate": self.hit_rate}
 
     def absorb(self, d: dict) -> None:
         """Accumulate persisted counters (a restored snapshot's lifetime
@@ -249,6 +252,33 @@ class PlanCache:
             payload, stats = self._snapshot_locked()
         self._write(path, payload, stats)
 
+    @staticmethod
+    def _entry_valid(v) -> bool:
+        """Structural validation of one persisted entry: a decodable file
+        can still carry truncated/bit-flipped entries (DESIGN.md §12).
+        Plan entries must round-trip `plan_from_json`; axis-plan and
+        bucket-plan entries must carry their row lists. Never raises."""
+        if not isinstance(v, dict):
+            return False
+        try:
+            if "plan" in v:
+                plan_from_json(v["plan"])
+                return "algo" in v and "predicted_time" in v
+            if "axis_plans" in v:
+                return all(isinstance(row, (list, tuple)) and len(row) >= 3
+                           for row in v["axis_plans"])
+            if "bucket_floats" in v:     # bucket-plan sweep entry
+                return "num_buckets" in v
+        except Exception:
+            return False
+        return True    # unknown entry shape: let the reader decide
+
+    def _count_load_error(self, n: int = 1) -> None:
+        self.stats.load_errors += n
+        default_metrics().counter(
+            "planner_cache_load_errors_total",
+            "corrupt plan-cache files/entries skipped at load").inc(n)
+
     def load(self, path: str | None = None) -> int:
         path = path or self.path
         if not path:
@@ -256,10 +286,29 @@ class PlanCache:
         try:
             with open(path) as f:
                 payload = json.load(f)
+        except FileNotFoundError:
+            return 0
         except (OSError, ValueError):
+            # truncated/corrupt persistence file: startup proceeds with a
+            # cold cache instead of crashing the service (DESIGN.md §12)
+            with self._lock:
+                self._count_load_error()
+            return 0
+        if not isinstance(payload, dict):
+            with self._lock:
+                self._count_load_error()
             return 0
         entries = payload.get("entries", {})
+        if not isinstance(entries, dict):
+            with self._lock:
+                self._count_load_error()
+            return 0
+        bad = [k for k, v in entries.items() if not self._entry_valid(v)]
+        for k in bad:
+            entries.pop(k)
         with self._lock:
+            if bad:
+                self._count_load_error(len(bad))
             # restore lifetime counters BEFORE counting this load's disk
             # hits, so the persisted history and the fresh activity both
             # land exactly once

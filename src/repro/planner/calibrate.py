@@ -116,6 +116,113 @@ def _closed_form_fig4(source: GenModelParams, cfg: "CalibrationConfig"
     return xs, times
 
 
+# ---------------------------------------------------------------------------
+# Refit guardrails (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ParamGuard:
+    """Plausibility envelope for fitted GenModelParams. The caps are
+    deliberately loose — ~1000× the largest Table-5 value — because the
+    guard exists to stop *garbage* (NaN from a degenerate design matrix,
+    negative per-unit costs, a β implying sub-kB/s links), not to
+    second-guess a legitimate fit. `max_step_ratio` bounds per-refit
+    movement of any single term: one fault-distorted sample window can
+    move the fleet's model by at most that factor per refit."""
+    max_alpha: float = 10.0       # seconds of launch overhead per round
+    max_beta: float = 1e-3        # s per 4-byte unit (≈4 kB/s links)
+    max_gamma: float = 1e-3
+    max_delta: float = 1e-3
+    max_epsilon: float = 1e-3
+    min_w_t: int = 1
+    max_w_t: int = 1 << 20
+    max_step_ratio: float = 8.0
+
+
+DEFAULT_GUARD = ParamGuard()
+
+_TERM_CAPS = (("alpha", "max_alpha"), ("beta", "max_beta"),
+              ("gamma", "max_gamma"), ("delta", "max_delta"),
+              ("epsilon", "max_epsilon"))
+
+
+def validate_params(p: GenModelParams,
+                    guard: ParamGuard | None = None) -> list[str]:
+    """Violation strings for an implausible fit (empty list = sane).
+    Checks every cost term for NaN/inf, negativity and the guard's
+    plausibility cap, and w_t for range."""
+    guard = guard or DEFAULT_GUARD
+    bad = []
+    for term, cap in _TERM_CAPS:
+        v = float(getattr(p, term))
+        if not np.isfinite(v):
+            bad.append(f"{term} is not finite ({v})")
+        elif v < 0.0:
+            bad.append(f"{term} is negative ({v:.3g})")
+        elif v > getattr(guard, cap):
+            bad.append(f"{term} {v:.3g} exceeds plausibility cap "
+                       f"{getattr(guard, cap):.3g}")
+    w = int(p.w_t)
+    if not guard.min_w_t <= w <= guard.max_w_t:
+        bad.append(f"w_t {w} outside [{guard.min_w_t}, {guard.max_w_t}]")
+    return bad
+
+
+def clamp_params(old: GenModelParams, new: GenModelParams,
+                 guard: ParamGuard | None = None
+                 ) -> tuple[GenModelParams, list[str]]:
+    """Clamp each fitted term into [old/r, old·r] of its previous value
+    (r = guard.max_step_ratio) so one refit cannot swing the model by
+    more than a bounded factor. Terms whose previous value is 0 are
+    capped at the guard's plausibility limit instead (no ratio basis).
+    Returns (clamped params, names of clamped terms)."""
+    guard = guard or DEFAULT_GUARD
+    r = float(guard.max_step_ratio)
+    updates, clamped = {}, []
+    for term, cap in _TERM_CAPS:
+        ov, nv = float(getattr(old, term)), float(getattr(new, term))
+        if ov > 0.0:
+            lo, hi = ov / r, ov * r
+        else:
+            lo, hi = 0.0, float(getattr(guard, cap))
+        cv = min(max(nv, lo), hi)
+        if cv != nv:
+            clamped.append(term)
+            updates[term] = cv
+    w = int(new.w_t)
+    cw = min(max(w, guard.min_w_t), guard.max_w_t)
+    if cw != w:
+        clamped.append("w_t")
+        updates["w_t"] = cw
+    return (replace(new, **updates) if updates else new), clamped
+
+
+def quarantine_outliers(samples, k: float = 4.0) -> tuple[list, list]:
+    """Split telemetry samples into (kept, quarantined). A sample is
+    quarantined when its cps_equivalent time sits more than `k`× (or
+    below 1/k×) the *median* of its own (n, size) group — a fault-window
+    measurement (straggler, degraded link mid-flight, retry storm) that
+    would otherwise drag the least squares. Groups smaller than 3 have
+    no robust center and are kept whole."""
+    groups: dict[tuple, list] = {}
+    for s in samples:
+        groups.setdefault((int(s.n), round(float(s.size_floats), 6)),
+                          []).append(s)
+    kept, quarantined = [], []
+    for grp in groups.values():
+        if len(grp) < 3:
+            kept.extend(grp)
+            continue
+        med = float(np.median([float(s.cps_equivalent) for s in grp]))
+        if med <= 0.0:
+            kept.extend(grp)
+            continue
+        for s in grp:
+            ratio = float(s.cps_equivalent) / med
+            (quarantined if (ratio > k or ratio < 1.0 / k)
+             else kept).append(s)
+    return kept, quarantined
+
+
 class MeasurementProvider:
     """A source of the two microbench curves `fit_level` consumes.
 
@@ -233,12 +340,29 @@ class TelemetryProvider(MeasurementProvider):
 
     name = "telemetry"
 
-    def __init__(self, telemetry, min_samples: int = 4):
+    def __init__(self, telemetry, min_samples: int = 4,
+                 quarantine_k: float | None = 4.0):
         self.telemetry = telemetry
         self.min_samples = int(min_samples)
+        self.quarantine_k = quarantine_k
+        self.quarantined = 0          # samples dropped by the last curve
 
     def cps_curve(self, level, source, cfg):
         samples = self.telemetry.samples(level)
+        if self.quarantine_k:
+            # robust-filter fault-window outliers BEFORE the diversity /
+            # min-sample checks: a poisoned window must not both distort
+            # the fit and count toward its sample quorum (DESIGN.md §12)
+            kept, dropped = quarantine_outliers(samples,
+                                                k=self.quarantine_k)
+            self.quarantined = len(dropped)
+            if dropped:
+                from repro.runtime.metrics import default_metrics
+                default_metrics().counter(
+                    "planner_quarantined_samples_total",
+                    "telemetry samples excluded from refits as outliers"
+                ).inc(len(dropped))
+                samples = kept
         if len(samples) < self.min_samples:
             raise ValueError(
                 f"telemetry has {len(samples)} samples for level "

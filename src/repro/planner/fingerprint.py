@@ -25,9 +25,14 @@ def _f(x: float) -> str:
 
 
 def topo_canonical(node: TopoNode) -> tuple:
-    """Order-invariant canonical form of a topology subtree."""
+    """Order-invariant canonical form of a topology subtree. Health state
+    is part of the form (DESIGN.md §12): a degraded link already hashes
+    differently through its reduced uplink_bw, but a dead node with
+    unchanged capacities must not alias its healthy twin — plans built
+    before a failure would otherwise stay reachable after it."""
     children = tuple(sorted(topo_canonical(c) for c in node.children))
-    return (node.level, _f(node.uplink_bw), _f(node.uplink_latency), children)
+    return (node.level, _f(node.uplink_bw), _f(node.uplink_latency),
+            getattr(node, "health", "ok"), children)
 
 
 def params_canonical(params: Mapping[str, GenModelParams] | None) -> tuple:

@@ -109,6 +109,15 @@ class RefitPolicy:
     cooldown: int = 32
     enabled: bool = True
     term_attribution: bool = True
+    # Refit guardrails (DESIGN.md §12): reject NaN/negative/implausible
+    # fitted params (`calibrate.validate_params`), clamp per-refit
+    # movement of each term to the guard's max_step_ratio
+    # (`calibrate.clamp_params`), and quarantine outlier telemetry
+    # samples before fitting (`calibrate.quarantine_outliers`, k =
+    # `quarantine_k`; None/0 disables). `guardrails=False` restores the
+    # pre-§12 trust-the-fit behaviour.
+    guardrails: bool = True
+    quarantine_k: float = 4.0
 
 
 def _decisions_to_json(decisions) -> dict:
@@ -132,8 +141,11 @@ class PlannerService:
                  telemetry: Telemetry | None = None,
                  refit_policy: RefitPolicy | None = None):
         self.params = dict(params) if params else None
-        self.cache = cache or PlanCache(capacity=capacity, path=cache_path,
-                                        autosave=autosave)
+        # `cache or ...` would discard a caller-supplied EMPTY cache
+        # (PlanCache defines __len__, so a cold cache is falsy)
+        self.cache = cache if cache is not None \
+            else PlanCache(capacity=capacity, path=cache_path,
+                           autosave=autosave)
         self.skew = skew
         self.baseline_kinds = baseline_kinds
         self.gentree_kwargs = dict(gentree_kwargs or {})
@@ -164,6 +176,12 @@ class PlannerService:
         # feeding the cost ledger — same versioning contract as above
         self._shares_cache: dict[tuple, tuple[int, object]] = {}
         self._obs_handles: dict[str, tuple] = {}
+        # degraded-level health map (DESIGN.md §12): level class →
+        # bandwidth multiplier in (0, 1). Applied to every pricing basis
+        # via _apply_health, so a degraded link reprices (β/factor) and
+        # refingerprints (the synthesized switch topology's uplink_bw
+        # realizes β) without touching the stored params.
+        self._degraded: dict[str, float] = {}
         self._lock = threading.RLock()
 
     # ---- calibration -------------------------------------------------------
@@ -184,16 +202,83 @@ class PlannerService:
             self._shares_cache.clear()
         return result
 
+    # ---- degraded-mode health (DESIGN.md §12) ------------------------------
+    def _apply_health(self, eff: Mapping[str, GenModelParams]
+                      ) -> dict[str, GenModelParams]:
+        """The pricing basis with degraded levels repriced: a level at
+        bandwidth multiplier f pays β/f per unit. Every axis pricing and
+        execution path flows through this, and β determines the
+        synthesized switch topology's uplink bandwidth — so a degrade
+        changes both the params fingerprint and the topo fingerprint,
+        making every plan priced for the healthy link unreachable."""
+        if not self._degraded:
+            return dict(eff)
+        out = dict(eff)
+        for lvl, f in self._degraded.items():
+            p = out.get(lvl)
+            if p is not None and 0.0 < f < 1.0:
+                out[lvl] = dataclasses.replace(p, beta=p.beta / f)
+        return out
+
+    def mark_degraded(self, level: str, factor: float) -> int:
+        """Declare `level`'s links degraded to `factor` × nominal
+        bandwidth (0 < factor < 1; ≥ 1 clears). Bumps the params version,
+        clears the pricing caches, drops every derived executable and
+        opens a telemetry re-measure window — the planner replans around
+        the degraded link on the next lookup, under a new fingerprint.
+        Returns the number of derived artifacts dropped."""
+        factor = float(factor)
+        if factor <= 0.0:
+            raise ValueError(f"degrade factor must be > 0: {factor}")
+        with self._lock:
+            if factor >= 1.0:
+                self._degraded.pop(level, None)
+            else:
+                self._degraded[level] = factor
+            self._params_version += 1
+            self._merged_cache.clear()
+            self._pred_cache.clear()
+            self._shares_cache.clear()
+        dropped = self.invalidate_executables()
+        m = default_metrics()
+        m.counter("planner_degrade_events_total",
+                  "level health transitions (degrade/restore)").inc()
+        m.gauge("planner_degraded_levels",
+                "level classes currently marked degraded"
+                ).set(float(len(self._degraded)))
+        default_tracer().instant("planner/degrade", level=level,
+                                 factor=factor, dropped=dropped)
+        # measurements of the healthy link must not steer a refit of the
+        # degraded one (and vice versa on restore)
+        self.telemetry.remeasure("degrade", {"level": level,
+                                             "factor": factor,
+                                             "dropped": dropped})
+        return dropped
+
+    def clear_degraded(self, level: str | None = None) -> None:
+        """Restore `level` (or every level) to nominal health; reprices
+        and invalidates exactly like `mark_degraded`."""
+        with self._lock:
+            levels = [level] if level is not None \
+                else list(self._degraded)
+        for lvl in levels:
+            self.mark_degraded(lvl, 1.0)
+
+    def degraded(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._degraded)
+
     # ---- the online loop: observe -> drift -> refit -> invalidate ----------
     def _effective_axis_params(self) -> dict[str, GenModelParams]:
         """Pricing basis for mesh-axis requests: the axis paths
         (`get_axis_executable`, `get_bucket_plan`) default to TPU_V5E
         when the service is uncalibrated, and observation/refit must
-        price against the same basis those paths quoted."""
+        price against the same basis those paths quoted. Health-adjusted
+        (`_apply_health`): a degraded level prices at its sagged β."""
         if self.params is not None:
-            return self.params
+            return self._apply_health(self.params)
         from repro.core.cost_model import TPU_V5E
-        return TPU_V5E
+        return self._apply_health(TPU_V5E)
 
     def _merged_level_params(self, level: str,
                              eff: Mapping[str, GenModelParams]
@@ -325,7 +410,12 @@ class PlannerService:
         refit_now = False
         if pol.enabled and out["drift"] > pol.drift_threshold \
                 and tracker.count >= pol.min_samples \
-                and self._sample_diversity(level) >= 2:
+                and self._sample_diversity(level) >= 2 \
+                and level not in self._degraded:
+            # a degraded level is *known, repriced* state (DESIGN.md
+            # §12): its drift reflects the sag the health map already
+            # models, so fitting telemetry from it would bake a
+            # transient fault into the calibrated params
             # claim the refit under the lock: concurrent observers must
             # not both fit (the second would find the samples consumed)
             with self._lock:
@@ -337,9 +427,12 @@ class PlannerService:
                     self._since_refit[level] = 0
                     refit_now = True
         if refit_now:
-            out.update(self._refit_level(level, drift=out["drift"],
-                                         observations=since))
-            out["refit"] = True
+            res = self._refit_level(level, drift=out["drift"],
+                                    observations=since)
+            out.update(res)
+            # a guardrail rejection is not a refit: the pricing basis
+            # did not change (DESIGN.md §12)
+            out["refit"] = not res.get("rejected")
         return out
 
     def _sample_diversity(self, level: str) -> int:
@@ -379,16 +472,52 @@ class PlannerService:
         # actually charge (the chip class), not the level's own defaults
         source = dict(eff)
         source[level] = self._merged_level_params(level, eff)
+        pol = self.refit_policy
         provider = TelemetryProvider(self.telemetry,
-                                     min_samples=self.refit_policy
-                                     .min_samples)
+                                     min_samples=pol.min_samples,
+                                     quarantine_k=(pol.quarantine_k
+                                                   if pol.guardrails
+                                                   else None))
         with tracer.span("planner/refit", level=level, drift=drift):
             result = calibrate_levels(source,
                                       CalibrationConfig(levels=(level,)),
                                       provider=provider)
+            fitted = result.params[level]
+            clamped: list[str] = []
+            if pol.guardrails:
+                # refit guardrails (DESIGN.md §12): a NaN/negative/
+                # implausible fit never becomes the fleet's pricing
+                # basis, and a plausible one moves each term by at most
+                # the guard's step ratio per refit
+                from .calibrate import clamp_params, validate_params
+                violations = validate_params(fitted)
+                if violations:
+                    return self._reject_refit(level, drift=drift,
+                                              observations=observations,
+                                              violations=violations,
+                                              term_drift=term_drift)
+                # clamp against the merged (γ/δ-from-server) basis the
+                # fit targeted and the pricing paths charge — clamping
+                # against the raw level row would "correct" the compute
+                # terms back toward the level's defaults on every refit
+                fitted, clamped = clamp_params(
+                    self._merged_level_params(level, eff), fitted)
+                if clamped:
+                    metrics.counter(
+                        "planner_refit_params_clamped_total",
+                        "fitted terms clamped to the per-refit movement "
+                        "bound").inc(len(clamped))
+                result.params[level] = fitted
             with self._lock:
-                base = dict(eff)
-                base[level] = result.params[level]
+                # swap basis = the RAW stored params, not the health-
+                # adjusted eff: a transient degrade must never be baked
+                # into the calibrated params it overlays
+                if self.params is not None:
+                    base = dict(self.params)
+                else:
+                    from repro.core.cost_model import TPU_V5E
+                    base = dict(TPU_V5E)
+                base[level] = fitted
                 self.params = base
                 self.calibration = result
                 self._params_version += 1
@@ -404,7 +533,8 @@ class PlannerService:
         self.telemetry.ledger.clear(level)
         event = {"level": level, "drift": drift,
                  "observations": observations, "dropped": dropped,
-                 "term_drift": term_drift,
+                 "term_drift": term_drift, "clamped": clamped,
+                 "quarantined": provider.quarantined,
                  "params": dataclasses.asdict(result.params[level])}
         self.refits.append(event)
         self.telemetry.events.append(
@@ -417,6 +547,35 @@ class PlannerService:
                       "pricing-basis version (bumps on calibrate/refit)"
                       ).set(self._params_version)
         return {"dropped": dropped, "term_drift": term_drift}
+
+    def _reject_refit(self, level: str, *, drift: float,
+                      observations: int, violations: list,
+                      term_drift) -> dict:
+        """Guardrail rejection (DESIGN.md §12): the fit produced garbage
+        (NaN / negative / implausible terms), so the pricing basis stays
+        untouched. The poisoned sample window is discarded — the next
+        refit attempt must argue from fresh measurements, and the
+        cooldown applies (the rejection is logged in the audit deque the
+        trigger consults) so a persistent fault can't hammer the fitter.
+        """
+        self.telemetry.clear_samples(level)
+        self.telemetry.residuals(f"level/{level}").reset()
+        self.telemetry.ledger.clear(level)
+        event = {"level": level, "drift": drift,
+                 "observations": observations, "dropped": 0,
+                 "term_drift": term_drift, "rejected": violations}
+        self.refits.append(event)
+        self.telemetry.events.append(
+            TelemetryEvent("refit_rejected",
+                           {"level": level, "drift": drift,
+                            "violations": violations}))
+        default_metrics().counter(
+            "planner_refits_rejected_total",
+            "refits rejected by the param guardrails").inc()
+        default_tracer().instant("planner/refit_rejected", level=level,
+                                 violations=len(violations))
+        return {"dropped": 0, "term_drift": term_drift,
+                "rejected": violations}
 
     def observe_arrivals(self, arrivals) -> None:
         """Record one collective's per-device arrival times into the
@@ -579,6 +738,10 @@ class PlannerService:
         if eff is None:
             from repro.core.cost_model import TPU_V5E
             eff = TPU_V5E
+        # health-adjust AFTER the override resolution: a degraded link is
+        # a property of the fleet, not of the request, so per-request
+        # params overrides still price (and replan) around it
+        eff = self._apply_health(eff)
         if topo is None:
             from repro.core.sync import level_switch_topo
             topo = level_switch_topo(int(n), eff, level)
@@ -691,6 +854,7 @@ class PlannerService:
         if eff is None:
             from repro.core.cost_model import TPU_V5E
             eff = TPU_V5E
+        eff = self._apply_health(eff)
         dsize = DTYPE_BYTES.get(dtype, 4)
         total = max(float(total_floats), 1.0)
         leaf_key = (tuple(int(s) for s in leaf_sizes)
@@ -837,8 +1001,8 @@ class PlannerService:
         eff = params if params is not None else self.params
         bucket = self.cache.bucket(max(size_floats, 1.0) * 4)
         from repro.core.cost_model import TPU_V5E
-        key = axis_key(axes, eff if eff is not None else TPU_V5E, bucket,
-                       extra=self._config_extra())
+        eff = self._apply_health(eff if eff is not None else TPU_V5E)
+        key = axis_key(axes, eff, bucket, extra=self._config_extra())
         entry = self.cache.get(key)
         if entry is not None:
             obj = entry.get("_obj")
@@ -898,6 +1062,7 @@ class PlannerService:
                "entries": len(self.cache),
                "calibrated": self.calibration is not None,
                "refits": list(self.refits),
+               "degraded": dict(self._degraded),
                "telemetry": self.telemetry.stats()}
         if self.params:
             out["params"] = {lvl: dataclasses.asdict(p)

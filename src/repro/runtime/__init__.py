@@ -5,6 +5,8 @@ the fault-tolerant loop.
 (PEP 562): `repro.runtime.trace` / `.metrics` / `.telemetry` stay
 importable on a machine with no accelerator stack.
 """
+from .faults import (FaultEvent, FaultInjector,  # noqa: F401
+                     FaultPlan, InjectedFault, active_injector)
 from .metrics import (MetricsRegistry, default_metrics,  # noqa: F401
                       set_default_metrics)
 from .telemetry import (ArrivalEstimator, CostLedger,  # noqa: F401
@@ -22,6 +24,8 @@ __all__ = [
     "default_telemetry", "set_default_telemetry",
     "Tracer", "default_tracer", "set_default_tracer",
     "MetricsRegistry", "default_metrics", "set_default_metrics",
+    "FaultEvent", "FaultInjector", "FaultPlan", "InjectedFault",
+    "active_injector",
     *_FT,
 ]
 

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Callable
 
 import jax
@@ -51,11 +52,17 @@ class StragglerWatchdog:
     halflife: int = 20
     telemetry: Telemetry | None = None
     key: str = "train/step"
-    events: list = dataclasses.field(default_factory=list)
+    # bounded: a multi-month job with periodic stragglers must not grow
+    # an unbounded event list; the deque keeps the freshest max_events
+    # (len() / indexing / iteration all behave list-like)
+    max_events: int = 256
+    events: deque = dataclasses.field(default=None)
 
     def __post_init__(self):
         if self.telemetry is None:
             self.telemetry = Telemetry()
+        if self.events is None:
+            self.events = deque(maxlen=self.max_events)
 
     @property
     def _ring(self):
@@ -96,7 +103,9 @@ class FaultTolerantLoop:
                  on_event: Callable[[str, dict], None] | None = None,
                  planner=None,
                  invalidate_on_resume: bool = True,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None,
+                 injector=None,
+                 forgive_after: int = 200):
         self.step_fn = step_fn
         self.state = state
         self.ckpt = ckpt
@@ -123,6 +132,16 @@ class FaultTolerantLoop:
         # against the live axis sizes (core.bucketing, DESIGN.md §9).
         self.planner = planner
         self.invalidate_on_resume = invalidate_on_resume
+        # chaos hooks (DESIGN.md §12): the loop consults the armed fault
+        # injector at each step boundary; None defers to the scoped /
+        # env-armed injector (`runtime.faults.active_injector`) at run
+        # time, so entering a FaultInjector context needs no re-plumb.
+        self.injector = injector
+        # restart-budget decay: `forgive_after` consecutive successful
+        # steps reset `restarts` to 0, so a long job with occasional
+        # preemptions never exhausts max_restarts (0 disables).
+        self.forgive_after = forgive_after
+        self._progress = 0
 
     def _remeasure(self, reason: str, info: dict) -> None:
         """Open a telemetry re-measure window after an event that may
@@ -151,13 +170,76 @@ class FaultTolerantLoop:
             return step
         return 0
 
+    def _active_injector(self):
+        if self.injector is not None:
+            return self.injector
+        from .faults import active_injector
+        return active_injector()
+
+    def _apply_fault(self, ev, step: int) -> None:
+        """Realize one injected step-scoped fault (DESIGN.md §12).
+        device_loss raises (the except path restores-and-replays, like a
+        real preemption); link faults flow into the planner's health map
+        so it replans around the sag; delay slows this step (exercising
+        the watchdog); file_corrupt clobbers the newest checkpoint (the
+        checksum fallback restores the previous one)."""
+        inj = self._active_injector()
+        if ev.kind == "device_loss":
+            from .faults import InjectedFault
+            raise InjectedFault(ev)
+        if ev.kind == "delay":
+            time.sleep(min(max(ev.magnitude, 0.0), 0.25))
+        elif ev.kind in ("link_degrade", "link_restore"):
+            planner = self.planner
+            if planner is not None and hasattr(planner, "mark_degraded"):
+                factor = ev.magnitude if ev.kind == "link_degrade" else 1.0
+                dropped = planner.mark_degraded(ev.target or "root_sw",
+                                                factor)
+                self.on_event("degrade" if factor < 1.0 else "restore",
+                              {"step": step, "level": ev.target,
+                               "factor": factor, "dropped": dropped})
+        elif ev.kind == "file_corrupt" and inj is not None:
+            # settle any in-flight async save first, so the fault
+            # deterministically clobbers the *completed* newest
+            # checkpoint instead of racing its writer
+            if hasattr(self.ckpt, "wait"):
+                self.ckpt.wait()
+            steps = self.ckpt.available_steps() \
+                if hasattr(self.ckpt, "available_steps") else []
+            if steps:
+                import os
+                tag = f"step_{steps[0]:08d}"
+                inj.corrupt_file(os.path.join(self.ckpt.dir, tag,
+                                              "arrays.npz"))
+                self.on_event("ckpt_corrupt", {"step": step,
+                                               "target": tag})
+
     def run(self, total_steps: int, start_step: int | None = None) -> Any:
         step = self.resume_or_init() if start_step is None else start_step
         while step < total_steps:
             t0 = time.perf_counter()
             try:
+                inj = self._active_injector()
+                if inj is not None:
+                    for ev in inj.step_events(step):
+                        self._apply_fault(ev, step)
                 self.state = self.step_fn(self.state, step)
+                self._progress += 1
+                if self.forgive_after and self.restarts \
+                        and self._progress >= self.forgive_after:
+                    # sustained progress forgives old restarts: the
+                    # budget guards against crash loops, not lifetime
+                    # preemption count
+                    default_metrics().counter(
+                        "ft_restart_budget_resets_total",
+                        "restart budgets reset after sustained progress"
+                    ).inc()
+                    self.on_event("budget_reset",
+                                  {"step": step, "restarts": self.restarts})
+                    self.restarts = 0
+                    self._progress = 0
             except Exception as e:           # device loss / preemption
+                self._progress = 0
                 self.restarts += 1
                 default_tracer().instant("ft/failure", step=step,
                                          restart=self.restarts)

@@ -538,7 +538,12 @@ class TestExecutable:
             # (original axis index 1), so the same request warm-hits...
             r = svc.get_axis_executable("pod", 4, 1e6, level="cross_dc")
             assert r.source == "memory"
-            assert r.schedule is pl[0].schedule
+            # resolve wraps the executed schedule in the launch guard
+            # (DESIGN.md §12); the UNDERLYING schedule must be the same
+            # cached object the service hands out
+            from repro.core.lower import GuardedSchedule
+            assert isinstance(pl[0].schedule, GuardedSchedule)
+            assert r.schedule is pl[0].schedule.inner
             # ...while root_sw pricing would be a different (cold) entry
             r2 = svc.get_axis_executable("pod", 4, 1e6, level="root_sw")
             assert r2.key != r.key

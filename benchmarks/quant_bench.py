@@ -1,0 +1,135 @@
+"""Quantized compressed collectives, priced end-to-end (DESIGN.md §13).
+
+Two gates:
+
+  * **wire ratio** — the fp8 wire format (8-bit payload + one f32 scale
+    per 128-lane tile) must move <= 0.27x the f32 bytes, scales
+    included, at every payload size probed (exact `Precision.wire_bytes`
+    accounting, partial tiles and all);
+  * **priced argmin** — the (bucket x precision) sweep must PICK a
+    compressed wire on a bandwidth-dominated level (big β: the β·S
+    saving dwarfs the extra quant passes) and REJECT compression on a
+    γ/δ-dominated level (memory-bound: the quant passes cost more than
+    the wire saving) — same tolerance, same mesh, opposite verdicts.
+    Compression is a *priced* decision, not a flag.
+
+`benchmarks.run --json` records `quant_wire_ratio` (fp8, 1 MiB payload)
+and `quant_sweep_best_ms` (flagship mesh, tolerance-opened sweep) in
+BENCH_core.json so the trajectory is tracked across PRs. Model-only: no
+devices needed.
+
+    PYTHONPATH=src python -m benchmarks.quant_bench [--json PATH]
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core.cost_model import PRECISIONS, TPU_V5E
+from repro.core.bucketing import BucketConfig
+from repro.planner.service import PlannerService
+
+from .common import fmt_table
+
+MESH = [("data", 32), ("pod", 16)]              # SYM512-style DP view
+LEAF_SIZES = [1_000_000] * 12 + [250_000] * 24 + [25_000] * 60
+TOTAL_FLOATS = float(sum(LEAF_SIZES))
+TOLERANCE = 0.3                                 # opens every lossy wire
+
+WIRE_GATE = 0.27                                # fp8 incl. scales vs f32
+
+
+def _bandwidth_dominated() -> dict:
+    """TPU_V5E with β inflated 50x: transport-bound — compression wins."""
+    return {lvl: replace(p, beta=p.beta * 50.0)
+            for lvl, p in TPU_V5E.items()}
+
+
+def _compute_dominated() -> dict:
+    """β/ε nearly free, γ/δ inflated 100x: every quant pass is priced at
+    full memory cost while the wire saving is worthless."""
+    return {lvl: replace(p, beta=p.beta * 1e-4, epsilon=p.epsilon * 1e-4,
+                         gamma=p.gamma * 100.0, delta=p.delta * 100.0)
+            for lvl, p in TPU_V5E.items()}
+
+
+def run() -> dict:
+    out: dict = {"ok": True}
+
+    # ---- gate (a): exact wire-byte accounting ------------------------------
+    fp8 = PRECISIONS["fp8"]
+    rows = []
+    worst = 0.0
+    for n in (1, 100, 128, 129, 4096, 250_000, 1 << 20):
+        ratio = fp8.wire_bytes(n) / (4 * n)
+        # the gate applies from one scale tile up — a lone element is
+        # all scale overhead (5 B vs 4 B) and no planner would compress
+        # it; the row stays in the table to document the floor
+        if n >= fp8.scale_block:
+            worst = max(worst, ratio)
+        rows.append({"elements": n,
+                     "fp8 bytes": fp8.wire_bytes(n),
+                     "f32 bytes": 4 * n,
+                     "ratio": f"{ratio:.4f}",
+                     "gated": "yes" if n >= fp8.scale_block else ""})
+    print(fmt_table(rows, ["elements", "fp8 bytes", "f32 bytes", "ratio",
+                           "gated"],
+                    "fp8 wire bytes (payload + per-tile f32 scales)"))
+    assert worst <= WIRE_GATE, (
+        f"fp8 wire ratio {worst:.4f} exceeds the {WIRE_GATE} gate")
+    out["quant_wire_ratio"] = round(fp8.wire_bytes(1 << 20) / (4 << 20), 4)
+
+    # ---- gate (b): compression is a priced verdict -------------------------
+    sweep_rows = []
+    verdicts = {}
+    for regime, params in (("bandwidth", _bandwidth_dominated()),
+                           ("compute", _compute_dominated())):
+        svc = PlannerService(params=params)
+        lossy = svc.get_bucket_plan(
+            MESH, TOTAL_FLOATS, leaf_sizes=LEAF_SIZES,
+            config=BucketConfig(tolerance=TOLERANCE))
+        full = svc.get_bucket_plan(MESH, TOTAL_FLOATS,
+                                   leaf_sizes=LEAF_SIZES)
+        verdicts[regime] = lossy.precision
+        # opening the tolerance can never price WORSE: f32 stays in the
+        # candidate set, so the argmin only improves
+        assert lossy.predicted_pipelined <= full.predicted_pipelined \
+            + 1e-12, regime
+        sweep_rows.append({
+            "regime": regime,
+            "precision": lossy.precision,
+            "sweep ms": f"{lossy.predicted_pipelined * 1e3:.3f}",
+            "f32 ms": f"{full.predicted_pipelined * 1e3:.3f}",
+            "saving": f"{(1 - lossy.predicted_pipelined / full.predicted_pipelined) * 100:.1f}%",
+        })
+        print(f"{regime}-dominated: sweep chose {lossy.precision} "
+              f"({lossy.predicted_pipelined * 1e3:.3f} ms vs f32 "
+              f"{full.predicted_pipelined * 1e3:.3f} ms)")
+        if regime == "bandwidth":
+            out["quant_sweep_best_ms"] = round(
+                lossy.predicted_pipelined * 1e3, 4)
+            out["quant_sweep_precision"] = lossy.precision
+    print(fmt_table(sweep_rows,
+                    ["regime", "precision", "sweep ms", "f32 ms", "saving"],
+                    "priced (bucket x precision) argmin, tolerance=0.3"))
+    assert verdicts["bandwidth"] != "f32", (
+        "bandwidth-dominated level must pick a compressed wire")
+    assert verdicts["compute"] == "f32", (
+        "γ/δ-dominated level must reject compression")
+    return out
+
+
+def main() -> None:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    out = run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

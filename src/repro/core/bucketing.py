@@ -56,11 +56,23 @@ class BucketConfig:
     bucket_bytes: None → "auto" (GenModel argmin over the sweep);
     an explicit int fixes the bucket size; 0 disables bucketing entirely
     (legacy per-leaf execution).
+
+    precision pins a wire format by name ("f32"/"bf16"/"fp8"/"int8");
+    None lets the sweep argmin over every format `tolerance` allows.
+    tolerance is the caller's per-sync relative error budget: None means
+    no lossy consent (the sweep stays lossless; a pinned lossy precision
+    is trusted as explicit opt-in), a float clamps any format whose
+    `Precision.error_budget` exceeds it to full precision
+    (DESIGN.md §13). Both are part of `key()` — and therefore of the
+    bucket-plan cache fingerprint — so a tolerance change can never be
+    served a stale compressed schedule.
     """
     bucket_bytes: int | None = None
     pipeline: bool = True               # overlap AG(k) with RS(k+1)
     min_bucket_bytes: int = 1 << 18     # sweep floor (256 KiB)
     max_bucket_bytes: int = 1 << 28     # sweep ceiling (256 MiB)
+    precision: str | None = None        # pinned wire format (None: sweep)
+    tolerance: float | None = None      # error budget (None: lossless only)
 
     def __post_init__(self):
         if self.bucket_bytes is not None and self.bucket_bytes < 0:
@@ -71,6 +83,12 @@ class BucketConfig:
             raise ValueError(
                 f"need 0 < min_bucket_bytes <= max_bucket_bytes; got "
                 f"{self.min_bucket_bytes}..{self.max_bucket_bytes}")
+        if self.precision is not None:
+            from .cost_model import PRECISIONS
+            if self.precision not in PRECISIONS:
+                raise ValueError(
+                    f"unknown precision {self.precision!r}; one of "
+                    f"{sorted(PRECISIONS)}")
 
     @property
     def enabled(self) -> bool:
@@ -79,7 +97,8 @@ class BucketConfig:
     def key(self) -> tuple:
         return (self.bucket_bytes if self.bucket_bytes is not None else -1,
                 int(self.pipeline), self.min_bucket_bytes,
-                self.max_bucket_bytes)
+                self.max_bucket_bytes, self.precision or "",
+                -1.0 if self.tolerance is None else float(self.tolerance))
 
 
 @dataclass(frozen=True)
@@ -293,7 +312,9 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
         from repro.planner.service import default_service
         service = default_service()
     bcfg = BucketConfig(bucket_bytes=cfg.bucket_bytes,
-                        pipeline=cfg.pipeline)
+                        pipeline=cfg.pipeline,
+                        precision=getattr(cfg, "precision", None),
+                        tolerance=getattr(cfg, "tolerance", None))
     # price in f32-equivalent units of the tree's total BYTES, so the
     # chosen byte budget does not depend on which dtype happens to
     # flatten first in a mixed-dtype pytree
@@ -308,6 +329,7 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
             "bucket_floats": bplan.bucket_floats,
             "bucket_bytes": bplan.bucket_bytes,
             "num_buckets": bplan.num_buckets,
+            "precision": bplan.precision,
             "predicted_pipelined": bplan.predicted_pipelined,
             "predicted_serial": bplan.predicted_serial,
         })

@@ -297,6 +297,8 @@ def allreduce_planned(x: jax.Array, axis_name: str, *,
                       service=None,
                       fused_reduce: Callable | None = None,
                       bucketing=None,
+                      precision: str | None = None,
+                      tolerance: float | None = None,
                       stats: dict | None = None) -> jax.Array:
     """AllReduce that executes the PlannerService's GenTree plan directly
     (cached, GenModel-priced — DESIGN.md §5/§8). The lookup + lowering
@@ -307,13 +309,20 @@ def allreduce_planned(x: jax.Array, axis_name: str, *,
 
     `bucketing` (a `core.bucketing.BucketConfig`) splits x into
     GenModel-sized buckets executed through the double-buffered RS/AG
-    pipeline (DESIGN.md §9). Falls back to the flat plan-type labels only
-    if the plan cannot be lowered (e.g. a legacy unannotated cache
-    entry); the fallback ignores any bucketing config, warns once per
-    process, and records its reason in `stats` (pass a dict to receive
-    `{"mode", "fallback_reason", "bucketing_ignored", ...}`). Like the
-    plan lookup itself, `stats` is written at TRACE time — a dict passed
-    into an already-jitted computation is never touched.
+    pipeline (DESIGN.md §9). `precision`/`tolerance` select the wire
+    format (DESIGN.md §13): a pinned precision is resolved against the
+    error budget (`cost_model.resolve_precision` — clamps to f32 when
+    the tolerance disallows it); a tolerance alone runs the planner's
+    priced precision argmin. On the bucketed path they override the
+    config's own fields; on the direct path the schedule is bound via
+    `with_wire`. Falls back to the flat plan-type labels only if the
+    plan cannot be lowered (e.g. a legacy unannotated cache entry); the
+    fallback ignores any bucketing config AND any compression (full
+    precision), warns once per process, and records its reason in
+    `stats` (pass a dict to receive `{"mode", "fallback_reason",
+    "bucketing_ignored", ...}`). Like the plan lookup itself, `stats` is
+    written at TRACE time — a dict passed into an already-jitted
+    computation is never touched.
     """
     from repro.planner.service import default_service
     svc = service or default_service()
@@ -325,6 +334,15 @@ def allreduce_planned(x: jax.Array, axis_name: str, *,
     if int(n) < 2:
         stats["mode"] = "noop"
         return x
+    if (precision is not None or tolerance is not None) \
+            and bucketing is not None:
+        import dataclasses as _dc
+        bucketing = _dc.replace(
+            bucketing,
+            precision=precision if precision is not None
+            else bucketing.precision,
+            tolerance=tolerance if tolerance is not None
+            else bucketing.tolerance)
     from repro.core.lower import LoweringError
     reason = None
     try:
@@ -352,7 +370,7 @@ def allreduce_planned(x: jax.Array, axis_name: str, *,
             halved = supports_halves(bplan.axis_plans)
             stats.update(mode="bucketed",
                          bucket_floats=bf, num_buckets=len(buckets),
-                         halves=halved,
+                         halves=halved, precision=bplan.precision,
                          pipeline=bool(bucketing.pipeline and halved
                                        and len(buckets) > 1))
             return (out[0] if len(out) == 1
@@ -362,9 +380,28 @@ def allreduce_planned(x: jax.Array, axis_name: str, *,
         reason = f"plan could not be lowered: {e}"
         resp = None
     if resp is not None and resp.schedule is not None:
-        stats.update(mode="plan", algo=resp.algo, source=resp.source)
-        return resp.schedule.allreduce(x, axis_name,
-                                       fused_reduce=fused_reduce)
+        from repro.core.cost_model import resolve_precision
+        prec = None
+        if precision is not None:
+            prec = resolve_precision(precision, tolerance)
+        elif tolerance is not None:
+            # tolerance without a pin: reuse the planner's priced
+            # precision argmin (monolithic single-bucket pin collapses
+            # the size sweep; the result is cached like any bucket plan)
+            from repro.core.bucketing import BucketConfig
+            from repro.core.cost_model import PRECISIONS
+            mono = BucketConfig(bucket_bytes=int(max(x.size, 1)) * 4,
+                                tolerance=tolerance)
+            sel = svc.get_bucket_plan([(axis_name, int(n))],
+                                      float(x.size), dtype=str(x.dtype),
+                                      config=mono)
+            prec = PRECISIONS[sel.precision]
+        sched = resp.schedule
+        if prec is not None and prec.name != "f32":
+            sched = sched.with_wire(prec)
+        stats.update(mode="plan", algo=resp.algo, source=resp.source,
+                     precision=prec.name if prec is not None else "f32")
+        return sched.allreduce(x, axis_name, fused_reduce=fused_reduce)
     # ---- flat-label fallback ----------------------------------------------
     reason = reason or "service returned no executable schedule"
     stats.update(mode="flat-label", fallback_reason=reason,

@@ -14,6 +14,108 @@ from dataclasses import dataclass, replace
 from .plans import Plan, factorizations
 
 
+# ---------------------------------------------------------------------------
+# Wire precision — compression priced honestly (DESIGN.md §13).
+#
+# The paper's own argument makes compression a first-class lever: β·S and
+# the incast term scale with the bytes actually on the wire, while the
+# quantize/dequantize passes are extra γ/δ work (§3.1's memory-access
+# accounting). A Precision describes one wire format; the evaluators below
+# accept it and reprice every term, so the planner can argmin over
+# {f32, bf16, fp8, int8} with the same model it uses for plan shape.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Precision:
+    """One wire format for collective payloads.
+
+    `bits` is the payload width per element; `scale_block` elements share
+    one f32 scale (0 = scale-free cast, e.g. bf16); `quant_passes` counts
+    the extra quantize/dequantize memory passes per hop that γ/δ must pick
+    up; `error_budget` is the relative error a sync through this format
+    may introduce (0.0 = lossless — bit-identical to the f32 path)."""
+    name: str
+    wire_dtype: str            # jnp dtype name of the payload
+    bits: int                  # wire bits per element
+    scale_block: int = 0       # elements per f32 scale (0: none)
+    quant_passes: int = 0      # extra quant/dequant memory passes per hop
+    error_budget: float = 0.0  # max relative error per sync (0: lossless)
+
+    @property
+    def lossless(self) -> bool:
+        return self.error_budget == 0.0
+
+    @property
+    def bytes_per_elem(self) -> float:
+        """Payload bytes per element, scales included."""
+        return self.bits / 8.0 + (4.0 / self.scale_block
+                                  if self.scale_block else 0.0)
+
+    def comm_scale(self) -> float:
+        """Multiplier on wire volume in f32 data units: β·S and the incast
+        receive both shrink (or hold) by this factor."""
+        return self.bytes_per_elem / 4.0
+
+    def wire_bytes(self, n_elems: int) -> int:
+        """Exact wire bytes for an n-element payload: packed values plus
+        one f32 scale per (partial) scale block."""
+        n_elems = int(n_elems)
+        payload = (n_elems * self.bits + 7) // 8
+        scales = (4 * ((n_elems + self.scale_block - 1) // self.scale_block)
+                  if self.scale_block and n_elems else 0)
+        return payload + scales
+
+    def extra_adds(self, size: float) -> float:
+        """γ ops of the quant passes (abs-max scan + scale multiply —
+        one pass-equivalent of adds per element per pass)."""
+        return self.quant_passes * size
+
+    def extra_mem_ops(self, size: float) -> float:
+        """δ ops of the quant passes: each pass reads the f32 copy and
+        writes the compressed one (or vice versa), so a pass touches
+        (1 + bits/32) f32-unit-equivalents per element."""
+        return self.quant_passes * size * (1.0 + self.bits / 32.0)
+
+
+# The four wire formats the planner sweeps. Budgets are per-sync relative
+# error bounds (validated by tests/test_quant.py and the 8-device
+# differential fuzz): quantization error per hop is ≲ half an ulp of the
+# per-tile amax, accumulated over the RS fold and the AG requant hop.
+PRECISIONS = {
+    "f32":  Precision("f32", "float32", 32),
+    "bf16": Precision("bf16", "bfloat16", 16, scale_block=0,
+                      quant_passes=1, error_budget=0.02),
+    "fp8":  Precision("fp8", "float8_e4m3fn", 8, scale_block=128,
+                      quant_passes=2, error_budget=0.25),
+    "int8": Precision("int8", "int8", 8, scale_block=128,
+                      quant_passes=2, error_budget=0.08),
+}
+
+
+def resolve_precision(precision: "Precision | str | None",
+                      tolerance: float | None = None) -> Precision:
+    """The error-budget guard (DESIGN.md §13): map a requested precision +
+    caller tolerance onto the wire format actually allowed to run.
+
+    `tolerance=None` means "trust the explicit request": a caller pinning
+    fp8 by name has opted into fp8's budget. A float tolerance is a hard
+    bound — a pinned precision whose budget exceeds it CLAMPS to full
+    precision (lossy sync disallowed), never errors. `precision=None`
+    returns f32."""
+    if precision is None:
+        return PRECISIONS["f32"]
+    prec = PRECISIONS[precision] if isinstance(precision, str) else precision
+    if tolerance is not None and prec.error_budget > float(tolerance):
+        return PRECISIONS["f32"]
+    return prec
+
+
+def allowed_precisions(tolerance: float | None) -> list[Precision]:
+    """Sweep candidates under a caller tolerance: every registered format
+    whose error budget fits. None (no lossy consent) → lossless only."""
+    tol = 0.0 if tolerance is None else float(tolerance)
+    return [p for p in PRECISIONS.values() if p.error_budget <= tol]
+
+
 @dataclass(frozen=True)
 class GenModelParams:
     """Defaults = the paper's CPU testbed (15 servers on a 10 Gbps ToR):
@@ -131,25 +233,54 @@ CLOSED_FORMS = {
 # Generic IR evaluator (single-switch assumption: every transfer shares the
 # per-server NIC; per-step time = α + max-per-server comm + max compute).
 # ---------------------------------------------------------------------------
-def evaluate_plan(plan: Plan, p: GenModelParams) -> float:
+def compressed_plan(plan: Plan, precision: Precision | None) -> Plan:
+    """The same plan repriced for a compressed wire: every transfer shrinks
+    to its wire volume (comm_scale × f32 units) and every reduce picks up
+    the quant/dequant passes as extra γ adds and δ mem_ops. Any pricer
+    (reference Simulator, FastEngine, the evaluators here) then charges
+    compression with zero changes to its own walk — the transform IS the
+    pricing model of DESIGN.md §13."""
+    if precision is None or precision.name == "f32":
+        return plan
+    from .plans import QuantReduceOp, Step
+    cs = precision.comm_scale()
+    steps = []
+    for st in plan.steps:
+        s = Step()
+        s.transfers = [replace(t, size=t.size * cs) for t in st.transfers]
+        s.reduces = [QuantReduceOp(
+            server=r.server, fan_in=r.fan_in, size=r.size, blocks=r.blocks,
+            extra_adds=precision.extra_adds(r.size),
+            extra_mem_ops=precision.extra_mem_ops(r.size))
+            for r in st.reduces]
+        steps.append(s)
+    return Plan(plan.name, plan.n, plan.size, steps=steps,
+                servers=plan.servers, num_blocks=plan.num_blocks)
+
+
+def evaluate_plan(plan: Plan, p: GenModelParams,
+                  precision: Precision | None = None) -> float:
+    cs = precision.comm_scale() if precision is not None else 1.0
     total = 0.0
     for st in plan.steps:
         send: dict[int, float] = {}
         for t in st.transfers:
-            send[t.src] = send.get(t.src, 0.0) + t.size
+            send[t.src] = send.get(t.src, 0.0) + t.size * cs
         recv = st.recv_bytes_by_dst()
         fi = st.fan_in_by_dst()
         comm = 0.0
         for srv in set(send) | set(recv):
-            b = max(send.get(srv, 0.0), recv.get(srv, 0.0))
+            b = max(send.get(srv, 0.0), recv.get(srv, 0.0) * cs)
             w = fi.get(srv, 0) + 1 if srv in fi else 0  # w counts self
-            c = b * p.beta + _incast(w, recv.get(srv, 0.0), p)
+            c = b * p.beta + _incast(w, recv.get(srv, 0.0) * cs, p)
             comm = max(comm, c)
         comp = 0.0
         by_srv: dict[int, tuple[float, float]] = {}
         for r in st.reduces:
             a, d = by_srv.get(r.server, (0.0, 0.0))
-            by_srv[r.server] = (a + r.adds, d + r.mem_ops)
+            qa = precision.extra_adds(r.size) if precision else 0.0
+            qd = precision.extra_mem_ops(r.size) if precision else 0.0
+            by_srv[r.server] = (a + r.adds + qa, d + r.mem_ops + qd)
         for a, d in by_srv.values():
             comp = max(comp, a * p.gamma + d * p.delta)
         total += p.alpha + comm + comp
@@ -200,30 +331,37 @@ class CostBreakdown:
                              self.delta * k, self.incast * k)
 
 
-def evaluate_plan_terms(plan: Plan, p: GenModelParams) -> CostBreakdown:
+def evaluate_plan_terms(plan: Plan, p: GenModelParams,
+                        precision: Precision | None = None) -> CostBreakdown:
     """``evaluate_plan`` with the ledger kept open: identical step walk and
     identical per-server maxes, but each step's winning comm/compute server
-    contributes its β/ε (resp. γ/δ) split instead of a fused scalar."""
+    contributes its β/ε (resp. γ/δ) split instead of a fused scalar. With a
+    `precision`, the quant passes land in the γ/δ entries and the shrunk
+    wire in β/ε — so PR 6's per-term drift attribution keeps working on
+    compressed syncs."""
+    cs = precision.comm_scale() if precision is not None else 1.0
     al = be = ga = de = inc = 0.0
     for st in plan.steps:
         send: dict[int, float] = {}
         for t in st.transfers:
-            send[t.src] = send.get(t.src, 0.0) + t.size
+            send[t.src] = send.get(t.src, 0.0) + t.size * cs
         recv = st.recv_bytes_by_dst()
         fi = st.fan_in_by_dst()
         comm = comm_b = comm_i = 0.0
         for srv in set(send) | set(recv):
-            b = max(send.get(srv, 0.0), recv.get(srv, 0.0))
+            b = max(send.get(srv, 0.0), recv.get(srv, 0.0) * cs)
             w = fi.get(srv, 0) + 1 if srv in fi else 0  # w counts self
             b_term = b * p.beta
-            i_term = _incast(w, recv.get(srv, 0.0), p)
+            i_term = _incast(w, recv.get(srv, 0.0) * cs, p)
             if b_term + i_term > comm:
                 comm, comm_b, comm_i = b_term + i_term, b_term, i_term
         comp = comp_g = comp_d = 0.0
         by_srv: dict[int, tuple[float, float]] = {}
         for r in st.reduces:
             a, d = by_srv.get(r.server, (0.0, 0.0))
-            by_srv[r.server] = (a + r.adds, d + r.mem_ops)
+            qa = precision.extra_adds(r.size) if precision else 0.0
+            qd = precision.extra_mem_ops(r.size) if precision else 0.0
+            by_srv[r.server] = (a + r.adds + qa, d + r.mem_ops + qd)
         for a, d in by_srv.values():
             g_term, d_term = a * p.gamma, d * p.delta
             if g_term + d_term > comp:

@@ -101,15 +101,43 @@ class CompiledSchedule:
     reorder: ExecStep | None            # post-RS: owner(b) → b // k
     unorder: ExecStep | None            # pre-AG inverse of `reorder`
     placement: tuple[int, ...]          # server id at each mesh index
+    # wire format (cost_model.Precision) for compressed execution: ppermute
+    # rounds move quantized payloads + per-tile f32 scales and folds run the
+    # fused dequant-reduce. None = full-precision (bit-identical legacy
+    # path). The numpy mirror always runs at full precision.
+    wire: object | None = None
+
+    def with_wire(self, precision) -> "CompiledSchedule":
+        """A copy of this schedule bound to a wire format (or None to
+        strip it). Variants are memoized per wire name: re-resolving the
+        same schedule at the same precision returns the SAME object, so
+        guard wrappers — memoized per schedule object — keep sticky
+        demotion across re-resolves while each wire variant (and the
+        full-precision original) still demotes independently."""
+        import dataclasses
+        if precision is not None and precision.name == "f32":
+            precision = None
+        if precision is None and self.wire is None:
+            return self
+        name = precision.name if precision is not None else ""
+        variants = self.__dict__.setdefault("_wire_variants", {})
+        v = variants.get(name)
+        if v is None:
+            # replace() copies declared fields only: the variant starts
+            # with a clean __dict__ (no inherited guard wrapper / memo)
+            v = dataclasses.replace(self, wire=precision)
+            variants[name] = v
+        return v
 
     # ---- stats -------------------------------------------------------------
     def total_rounds(self) -> int:
         return sum(len(st.rounds) for st in self.rs + self.ag)
 
     def describe(self) -> str:
+        w = f" wire={self.wire.name}" if self.wire is not None else ""
         return (f"{self.plan_name}: n={self.n} blocks={self.num_blocks} "
                 f"steps={len(self.rs)}+{len(self.ag)} "
-                f"ppermute_rounds={self.total_rounds()}")
+                f"ppermute_rounds={self.total_rounds()}{w}")
 
     # ---- jax execution (call inside shard_map) -----------------------------
     def _run_steps(self, steps: Sequence[ExecStep], buf, axis_name: str,
@@ -122,6 +150,9 @@ class CompiledSchedule:
         # numpy mirror below records real durations for the same spans.
         import jax.numpy as jnp
         from jax import lax
+
+        if self.wire is not None:
+            return self._run_steps_wire(steps, buf, axis_name, phase)
 
         tracer = default_tracer()
         idx = lax.axis_index(axis_name)
@@ -178,6 +209,123 @@ class CompiledSchedule:
                                 buf.dtype)
                         else:
                             folded = stacked.sum(axis=0)
+                        buf = lax.dynamic_update_index_in_dim(
+                            buf, jnp.where(blk >= 0, folded, own),
+                            safeb, 0)
+        return buf
+
+    def _run_steps_wire(self, steps: Sequence[ExecStep], buf,
+                        axis_name: str, phase: str = "steps"):
+        """Compressed mirror of `_run_steps` (DESIGN.md §13): each ppermute
+        round quantizes its payload stack to the wire dtype (per-tile f32
+        scales ride in a parallel ppermute), staging buffers hold wire
+        bytes, and each fold runs the fused dequant-reduce — operands
+        decompress in VMEM, accumulate in f32 with the resident partial,
+        and only the folded row lands back in `buf`. Masked rows are
+        neutralized by a zero *scale* (dequant of anything × 0 = 0), so
+        the pad trick of the full-precision path carries over for free.
+        bf16 (scale-free) wires skip the scale plumbing: plain casts."""
+        import jax.numpy as jnp
+        from jax import lax
+
+        from repro.kernels import ops as kops
+
+        tracer = default_tracer()
+        idx = lax.axis_index(axis_name)
+        chunk = buf.shape[1]
+        wire = self.wire
+        wdtype = jnp.dtype(wire.wire_dtype)
+        tile = int(wire.scale_block or 0)
+        scaled = tile > 0
+        if scaled:
+            nt = -(-chunk // tile)
+            lanes = nt * tile
+        else:
+            nt, lanes = 0, chunk
+        zero = jnp.zeros((chunk,), buf.dtype)
+        for si, st in enumerate(steps):
+            if not st.rounds and not st.folds:
+                continue
+            with tracer.span(f"exec/{phase}/step", step=si,
+                             rounds=len(st.rounds), folds=len(st.folds),
+                             plan=self.plan_name, wire=wire.name):
+                slots = max(st.n_slots, 1)
+                stage_q = jnp.zeros((slots, lanes), wdtype)
+                stage_s = (jnp.zeros((slots, nt), jnp.float32)
+                           if scaled else None)
+                for ri, rd in enumerate(st.rounds):
+                    with tracer.span("exec/round", round=ri,
+                                     width=int(rd.send_blks.shape[1]),
+                                     pairs=len(rd.perm), wire=wire.name):
+                        w = rd.send_blks.shape[1]
+                        sb = jnp.asarray(rd.send_blks)[idx]      # (W,)
+                        rows = [jnp.where(
+                            sb[j] >= 0,
+                            lax.dynamic_index_in_dim(
+                                buf, jnp.maximum(sb[j], 0), 0,
+                                keepdims=False),
+                            zero) for j in range(w)]
+                        payload = jnp.stack(rows).astype(jnp.float32)
+                        if scaled:
+                            q, s = kops.quantize(payload, wire.wire_dtype,
+                                                 tile)
+                            q = lax.ppermute(q, axis_name, list(rd.perm))
+                            s = lax.ppermute(s, axis_name, list(rd.perm))
+                        else:
+                            q = lax.ppermute(payload.astype(wdtype),
+                                             axis_name, list(rd.perm))
+                            s = None
+                        off = jnp.asarray(rd.recv_off)[idx]
+                        safe = jnp.maximum(off, 0)
+                        cur_q = lax.dynamic_slice(stage_q, (safe, 0),
+                                                  (w, lanes))
+                        stage_q = lax.dynamic_update_slice(
+                            stage_q, jnp.where(off >= 0, q, cur_q),
+                            (safe, 0))
+                        if scaled:
+                            cur_s = lax.dynamic_slice(stage_s, (safe, 0),
+                                                      (w, nt))
+                            stage_s = lax.dynamic_update_slice(
+                                stage_s, jnp.where(off >= 0, s, cur_s),
+                                (safe, 0))
+                for fi, fd in enumerate(st.folds):
+                    with tracer.span("exec/fold", fold=fi,
+                                     fan=int(fd.ops.shape[1]),
+                                     wire=wire.name):
+                        blk = jnp.asarray(fd.blk)[idx]
+                        safeb = jnp.maximum(blk, 0)
+                        own = lax.dynamic_index_in_dim(buf, safeb, 0,
+                                                       keepdims=False)
+                        own_in = jnp.where(
+                            jnp.asarray(fd.include_self)[idx], own, zero)
+                        qrows, srows = [], []
+                        for j in range(fd.ops.shape[1]):
+                            si_ = jnp.asarray(fd.ops[:, j])[idx]
+                            qr = lax.dynamic_index_in_dim(
+                                stage_q, jnp.maximum(si_, 0), 0,
+                                keepdims=False)
+                            if scaled:
+                                sr = lax.dynamic_index_in_dim(
+                                    stage_s, jnp.maximum(si_, 0), 0,
+                                    keepdims=False)
+                                # masked operand → zero scale → decodes 0
+                                srows.append(jnp.where(
+                                    si_ >= 0, sr,
+                                    jnp.zeros((nt,), jnp.float32)))
+                                qrows.append(qr)
+                            else:
+                                qrows.append(jnp.where(
+                                    si_ >= 0, qr.astype(jnp.float32),
+                                    zero.astype(jnp.float32)))
+                        if scaled:
+                            folded = kops.quant_reduce(
+                                jnp.stack(qrows), jnp.stack(srows),
+                                own_in.astype(jnp.float32), tile, chunk)
+                        else:
+                            folded = jnp.stack(
+                                qrows
+                                + [own_in.astype(jnp.float32)]).sum(axis=0)
+                        folded = folded.astype(buf.dtype)
                         buf = lax.dynamic_update_index_in_dim(
                             buf, jnp.where(blk >= 0, folded, own),
                             safeb, 0)
@@ -670,8 +818,11 @@ class GuardedSchedule:
         self.policy = policy or GuardPolicy()
         self.telemetry = telemetry
         self._demoted = False
+        self._wire_demoted = False
+        self._full = None               # lazy full-precision rung
         self.stats = {"launches": 0, "retries": 0, "fallbacks": 0,
-                      "timeouts": 0, "demoted_launches": 0}
+                      "timeouts": 0, "demoted_launches": 0,
+                      "wire_fallbacks": 0, "wire_demoted_launches": 0}
 
     def __getattr__(self, name):
         inner = self.__dict__.get("inner")
@@ -683,8 +834,13 @@ class GuardedSchedule:
     def demoted(self) -> bool:
         return self._demoted
 
+    @property
+    def wire_demoted(self) -> bool:
+        return self._wire_demoted
+
     def reset_guard(self) -> None:
         self._demoted = False
+        self._wire_demoted = False
 
     # -- internals ----------------------------------------------------------
     def _metrics(self):
@@ -710,6 +866,52 @@ class GuardedSchedule:
         self._remeasure("guard_fallback",
                         {"plan": self.inner.plan_name, "what": what,
                          "error": repr(err)})
+
+    def _full_rung(self):
+        """The full-precision planned rung of a compressed schedule: the
+        same CompiledSchedule with the wire stripped (lazy, cached)."""
+        if self._full is None:
+            self._full = self.inner.with_wire(None)
+        return self._full
+
+    def _note_wire_fallback(self, what: str, err) -> None:
+        self.stats["wire_fallbacks"] += 1
+        self._wire_demoted = True
+        self._metrics().counter(
+            "guarded_wire_fallbacks_total",
+            "compressed launches demoted to the full-precision rung").inc()
+        default_tracer().instant("guard/wire_fallback",
+                                 plan=self.inner.plan_name, what=what,
+                                 wire=self.inner.wire.name, error=repr(err))
+        self._remeasure("guard_wire_fallback",
+                        {"plan": self.inner.plan_name, "what": what,
+                         "wire": self.inner.wire.name, "error": repr(err)})
+
+    def _guarded_wire(self, what: str, attempt, mid, fallback):
+        """Top rung of the compressed ladder (DESIGN.md §13): one attempt
+        at the wire schedule — a failure demotes (sticky) to the full-
+        precision planned rung, which keeps `_guarded`'s own retry/flat
+        ladder below it. compressed → full-precision → flat psum."""
+        m = self._metrics()
+        if not self._wire_demoted:
+            self.stats["launches"] += 1
+            m.counter("guarded_launches_total",
+                      "collective launches through the schedule guard"
+                      ).inc()
+            try:
+                from repro.runtime.faults import active_injector
+                inj = active_injector()
+                if inj is not None:
+                    inj.check_launch(f"{self.inner.plan_name}/{what}")
+                return attempt()
+            except Exception as e:        # noqa: BLE001 — ladder rung
+                self._note_wire_fallback(what, e)
+                return self._guarded(what, mid, fallback)
+        self.stats["wire_demoted_launches"] += 1
+        m.counter("guarded_wire_demoted_launches_total",
+                  "launches served at full precision after wire demotion"
+                  ).inc()
+        return self._guarded(what, mid, fallback)
 
     def _guarded(self, what: str, attempt, fallback):
         import time as _time
@@ -765,11 +967,16 @@ class GuardedSchedule:
     def allreduce(self, x, axis_name: str, *,
                   fused_reduce: Callable | None = None):
         from jax import lax
-        return self._guarded(
-            "allreduce",
-            lambda: self.inner.allreduce(x, axis_name,
-                                         fused_reduce=fused_reduce),
-            lambda: lax.psum(x, axis_name))
+        attempt = lambda: self.inner.allreduce(  # noqa: E731
+            x, axis_name, fused_reduce=fused_reduce)
+        flat = lambda: lax.psum(x, axis_name)    # noqa: E731
+        if getattr(self.inner, "wire", None) is not None:
+            return self._guarded_wire(
+                "allreduce", attempt,
+                lambda: self._full_rung().allreduce(
+                    x, axis_name, fused_reduce=fused_reduce),
+                flat)
+        return self._guarded("allreduce", attempt, flat)
 
     def reduce_scatter(self, x, axis_name: str, *,
                        fused_reduce: Callable | None = None):
@@ -788,11 +995,15 @@ class GuardedSchedule:
             idx = lax.axis_index(axis_name)
             return lax.dynamic_slice_in_dim(full, idx * k, k)
 
-        return self._guarded(
-            "reduce_scatter",
-            lambda: self.inner.reduce_scatter(x, axis_name,
-                                              fused_reduce=fused_reduce),
-            flat_rs)
+        attempt = lambda: self.inner.reduce_scatter(  # noqa: E731
+            x, axis_name, fused_reduce=fused_reduce)
+        if getattr(self.inner, "wire", None) is not None:
+            return self._guarded_wire(
+                "reduce_scatter", attempt,
+                lambda: self._full_rung().reduce_scatter(
+                    x, axis_name, fused_reduce=fused_reduce),
+                flat_rs)
+        return self._guarded("reduce_scatter", attempt, flat_rs)
 
     def all_gather(self, shard, axis_name: str):
         def flat_ag():
@@ -800,10 +1011,14 @@ class GuardedSchedule:
             return lax.all_gather(shard.reshape(-1), axis_name, axis=0,
                                   tiled=True)
 
-        return self._guarded(
-            "all_gather",
-            lambda: self.inner.all_gather(shard, axis_name),
-            flat_ag)
+        attempt = lambda: self.inner.all_gather(  # noqa: E731
+            shard, axis_name)
+        if getattr(self.inner, "wire", None) is not None:
+            return self._guarded_wire(
+                "all_gather", attempt,
+                lambda: self._full_rung().all_gather(shard, axis_name),
+                flat_ag)
+        return self._guarded("all_gather", attempt, flat_ag)
 
     def run_numpy(self, X: np.ndarray) -> np.ndarray:
         # reference path: guard machinery applies (bench measures its

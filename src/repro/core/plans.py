@@ -58,6 +58,24 @@ class ReduceOp:
         return (self.fan_in + 1) * self.size
 
 
+@dataclass(frozen=True)
+class QuantReduceOp(ReduceOp):
+    """A fold on a compressed wire (`cost_model.compressed_plan`): the
+    quant/dequant passes ride as extra γ adds and δ mem_ops on top of the
+    fold's own (fan_in − 1)·S / (fan_in + 1)·S accounting, so every
+    pricer charges compression through the ops it already reads."""
+    extra_adds: float = 0.0
+    extra_mem_ops: float = 0.0
+
+    @property
+    def adds(self) -> float:
+        return (self.fan_in - 1) * self.size + self.extra_adds
+
+    @property
+    def mem_ops(self) -> float:
+        return (self.fan_in + 1) * self.size + self.extra_mem_ops
+
+
 @dataclass
 class Step:
     """One synchronized round.

@@ -79,12 +79,23 @@ class FastEngine:
 
     def __init__(self, topo: TopoNode,
                  params: dict[str, GenModelParams] | None = None,
-                 unit_bytes: int = 4):
+                 unit_bytes: int = 4, precision=None):
         self.topo = topo
         self.rx = topo.routing()
         self.params = params or PAPER_TABLE5
         self.unit = unit_bytes
         self.scale = unit_bytes / 4.0
+        # Wire-format compression: transfers shrink by bytes_per_elem/4,
+        # reduces pick up the quant/dequant memory passes (γ/δ). Applied at
+        # compile_step so `compile_arrays` (the batched GenTree search path)
+        # stays precision-agnostic. Same accounting as
+        # `cost_model.evaluate_plan(precision=...)`.
+        if precision is not None:
+            from .cost_model import resolve_precision
+            precision = resolve_precision(precision)
+            if precision.name == "f32":
+                precision = None
+        self.precision = precision
         self.pt = self._build_param_table()
 
     def _p(self, level: str) -> GenModelParams:
@@ -201,6 +212,13 @@ class FastEngine:
                            count=len(step.reduces))
         mem = np.fromiter((r.mem_ops for r in step.reduces), dtype=float,
                           count=len(step.reduces))
+        p = self.precision
+        if p is not None:
+            size = size * p.comm_scale()
+            rsize = np.fromiter((r.size for r in step.reduces), dtype=float,
+                                count=len(step.reduces))
+            adds = adds + p.extra_adds(rsize)
+            mem = mem + p.extra_mem_ops(rsize)
         return self.compile_arrays(src, dst, size, rsrv, adds, mem)
 
     def compile_plan(self, plan: Plan) -> list[CompiledStep]:

@@ -55,6 +55,15 @@ class SyncConfig:
     # Wrap executed schedules in core.lower.GuardedSchedule (retry +
     # flat-psum fallback ladder, DESIGN.md §12). Off ⇒ raw schedules.
     guard: bool = True
+    # Wire precision for the planned path (DESIGN.md §13). `precision`
+    # pins a PRECISIONS name ("f32"|"bf16"|"fp8"|"int8"); None lets the
+    # bucket-plan sweep argmin over precisions allowed by `tolerance`
+    # (max relative gradient error the caller accepts). tolerance=None
+    # means no lossy consent: the sweep stays lossless and a pinned
+    # lossy precision whose budget exceeds a float tolerance clamps to
+    # f32 (cost_model.resolve_precision).
+    precision: str | None = None
+    tolerance: float | None = None
 
 
 # Table-5 class per mesh-axis position: the leaf axis rides the pod fabric
@@ -156,6 +165,12 @@ def resolve_axis_plans(axes: Sequence[tuple[str, int]], cfg: "SyncConfig",
         # outer axes at "cross_dc", cfg.params honoured.
         from repro.planner.service import default_service
         svc = default_service()
+        wire = None
+        pname = getattr(cfg, "precision", None)
+        if pname is not None:
+            from .cost_model import resolve_precision
+            prec = resolve_precision(pname, getattr(cfg, "tolerance", None))
+            wire = prec if prec.name != "f32" else None
         out = []
         # level index counts the ORIGINAL axis position (n==1 axes are
         # skipped but still occupy their mesh level), exactly as
@@ -167,6 +182,11 @@ def resolve_axis_plans(axes: Sequence[tuple[str, int]], cfg: "SyncConfig",
                                            level=axis_level(i),
                                            params=cfg.params)
             sched = resp.schedule
+            if wire is not None:
+                # wire-bound copy (fresh object): its guard wrapper
+                # memoizes separately from the full-precision users of
+                # the same cached schedule (DESIGN.md §13)
+                sched = sched.with_wire(wire)
             if getattr(cfg, "guard", True):
                 from .lower import guard_schedule
                 sched = guard_schedule(

@@ -28,6 +28,20 @@ from jax.experimental import pallas as pl
 DEFAULT_TILE_L = 4096  # lanes per tile; 4096·x·4B ≤ VMEM budget for x ≤ ~256
 
 
+def pad_lanes(arr: jax.Array, multiple: int, axis: int = -1) -> jax.Array:
+    """Zero-pad `arr` along `axis` to a multiple — the ONE pad used by
+    every lane-tiled kernel here and in `kernels.quant`, applied exactly
+    once before the single `pallas_call` (never by re-entering the caller,
+    which would trace a second kernel per non-aligned size)."""
+    axis = axis % arr.ndim
+    pad = (-arr.shape[axis]) % multiple
+    if not pad:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths)
+
+
 def _fused_reduce_kernel(parts_ref, out_ref):
     # parts_ref: (x, TILE_L) in VMEM; single pass, f32 accumulation.
     acc = parts_ref[...].astype(jnp.float32).sum(axis=0)
@@ -39,13 +53,9 @@ def fused_reduce(parts: jax.Array, *, tile_l: int = DEFAULT_TILE_L,
     """Sum x blocks: (x, L) → (L,), one memory pass ((x+1)·L touches)."""
     x, L = parts.shape
     tile = min(tile_l, L)
-    if L % tile:  # pad L to tile multiple
-        pad = tile - L % tile
-        parts = jnp.pad(parts, ((0, 0), (0, pad)))
-        out = fused_reduce(parts, tile_l=tile, interpret=interpret)
-        return out[:L]
+    parts = pad_lanes(parts, tile)   # once; sliced back after the call
     grid = (parts.shape[1] // tile,)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _fused_reduce_kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((x, tile), lambda i: (0, i))],
@@ -53,6 +63,7 @@ def fused_reduce(parts: jax.Array, *, tile_l: int = DEFAULT_TILE_L,
         out_shape=jax.ShapeDtypeStruct((parts.shape[1],), parts.dtype),
         interpret=interpret,
     )(parts)
+    return out[:L] if out.shape[0] != L else out
 
 
 def _grouped_reduce_kernel(parts_ref, out_ref, *, fan_in: int):
@@ -79,13 +90,9 @@ def grouped_reduce(parts: jax.Array, fan_in: int, *,
     """
     x, L = parts.shape
     tile = min(tile_l, L)
-    if L % tile:
-        pad = tile - L % tile
-        parts = jnp.pad(parts, ((0, 0), (0, pad)))
-        return grouped_reduce(parts, fan_in, tile_l=tile,
-                              interpret=interpret)[:L]
+    parts = pad_lanes(parts, tile)
     grid = (parts.shape[1] // tile,)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_grouped_reduce_kernel, fan_in=fan_in),
         grid=grid,
         in_specs=[pl.BlockSpec((x, tile), lambda i: (0, i))],
@@ -93,3 +100,4 @@ def grouped_reduce(parts: jax.Array, fan_in: int, *,
         out_shape=jax.ShapeDtypeStruct((parts.shape[1],), parts.dtype),
         interpret=interpret,
     )(parts)
+    return out[:L] if out.shape[0] != L else out

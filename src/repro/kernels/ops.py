@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention as _flash
 from .fused_reduce import fused_reduce as _fused_reduce, grouped_reduce as _grouped
+from .quant import (dequantize as _dequantize, quant_reduce as _quant_reduce,
+                    quantize as _quantize)
 from .rmsnorm import rmsnorm as _rmsnorm
 from .wkv import wkv as _wkv
 
@@ -45,6 +47,38 @@ def grouped_reduce(parts: jax.Array, fan_in: int, impl: str = "auto"
     if mode == "ref":
         return ref.fused_reduce_ref(parts)
     return _grouped(parts, fan_in, interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("wire", "tile", "impl"))
+def quantize(x: jax.Array, wire: str = "float8_e4m3fn", tile: int = 128,
+             impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """(W, L) → (payload (W, Lp) wire, per-tile f32 scales (W, nt))."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.quantize_ref(x, wire, tile)
+    return _quantize(x, wire, tile=tile, interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "out_len", "impl"))
+def dequantize(q: jax.Array, scales: jax.Array, tile: int = 128,
+               out_len: int | None = None, impl: str = "auto") -> jax.Array:
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.dequantize_ref(q, scales, tile, out_len)
+    return _dequantize(q, scales, tile=tile, out_len=out_len,
+                       interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "out_len", "impl"))
+def quant_reduce(q: jax.Array, scales: jax.Array,
+                 own: jax.Array | None = None, tile: int = 128,
+                 out_len: int | None = None, impl: str = "auto") -> jax.Array:
+    """Fused compressed N-ary reduce: dequant in VMEM, accumulate f32."""
+    mode = _resolve(impl)
+    if mode == "ref":
+        return ref.quant_reduce_ref(q, scales, own, tile, out_len)
+    return _quant_reduce(q, scales, own, tile=tile, out_len=out_len,
+                         interpret=(mode == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=(

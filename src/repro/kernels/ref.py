@@ -19,6 +19,48 @@ def chained_reduce_ref(parts: jax.Array) -> jax.Array:
     return acc.astype(parts.dtype)
 
 
+def _quant_tiles(x: jax.Array, tile: int) -> jax.Array:
+    from .fused_reduce import pad_lanes
+    x = pad_lanes(x.astype(jnp.float32), tile)
+    return x.reshape(x.shape[0], x.shape[1] // tile, tile)
+
+
+def quantize_ref(x: jax.Array, wire: str = "float8_e4m3fn", tile: int = 128
+                 ) -> tuple[jax.Array, jax.Array]:
+    """(W, L) → (q (W, Lp) wire, scales (W, nt)); same math as the kernel."""
+    from .quant import WIRE_QMAX
+    t = _quant_tiles(x, tile)
+    qmax = WIRE_QMAX[wire]
+    amax = jnp.max(jnp.abs(t), axis=-1)
+    scale = amax / qmax
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    y = t / safe[..., None]
+    if wire == "int8":
+        y = jnp.clip(jnp.round(y), -qmax, qmax)
+    else:
+        y = jnp.clip(y, -qmax, qmax)
+    q = y.astype(jnp.dtype(wire)).reshape(t.shape[0], -1)
+    return q, jnp.where(amax > 0.0, scale, 0.0)
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array, tile: int = 128,
+                   out_len: int | None = None) -> jax.Array:
+    W, Lp = q.shape
+    t = q.reshape(W, Lp // tile, tile).astype(jnp.float32)
+    out = (t * scales[..., None]).reshape(W, Lp)
+    return out if out_len is None or out_len == Lp else out[:, :out_len]
+
+
+def quant_reduce_ref(q: jax.Array, scales: jax.Array,
+                     own: jax.Array | None = None, tile: int = 128,
+                     out_len: int | None = None) -> jax.Array:
+    out = dequantize_ref(q, scales, tile).sum(axis=0)
+    if own is not None:
+        from .fused_reduce import pad_lanes
+        out = out + pad_lanes(own.astype(jnp.float32), tile)
+    return out if out_len is None or out_len == out.shape[0] else out[:out_len]
+
+
 def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
     xf = x.astype(jnp.float32)
     rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)

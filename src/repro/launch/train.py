@@ -226,8 +226,11 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
         try:
             bp = svc.get_bucket_plan(
                 axes, total_f32_equiv or 1.0, params=sync.params,
-                config=BucketConfig(bucket_bytes=sync.bucket_bytes,
-                                    pipeline=sync.pipeline))
+                config=BucketConfig(
+                    bucket_bytes=sync.bucket_bytes,
+                    pipeline=sync.pipeline,
+                    precision=getattr(sync, "precision", None),
+                    tolerance=getattr(sync, "tolerance", None)))
         except LoweringError:
             return None
         cs = bp.axis_plans[0].schedule if bp.axis_plans else None

@@ -45,7 +45,8 @@ from .fingerprint import axis_key, plan_key
 from .skew import SkewModel, expected_time
 
 DTYPE_BYTES = {"float64": 8, "float32": 4, "int32": 4, "bfloat16": 2,
-               "bf16": 2, "float16": 2, "int8": 1}
+               "bf16": 2, "float16": 2, "int8": 1,
+               "float8_e4m3fn": 1, "fp8": 1}
 
 
 @dataclass
@@ -82,6 +83,7 @@ class BucketPlan:
     predicted_per_leaf: float | None = None   # per-leaf baseline (if sized)
     pipeline: bool = True
     sweep: dict = field(default_factory=dict)  # bucket_floats -> model row
+    precision: str = "f32"                # chosen wire format (DESIGN.md §13)
     source: str = "cold"
     key: str = ""
 
@@ -294,6 +296,7 @@ class PlannerService:
     def observe(self, level: str, n: int, size_floats: float,
                 measured: float, *, predicted: float | None = None,
                 key: str | None = None, dtype: str = "float32",
+                precision: str | None = None,
                 params: Mapping[str, GenModelParams] | None = None) -> dict:
         """Feed one measured collective back into the loop (DESIGN.md
         §10): an AllReduce of `size_floats` data units over a mesh axis
@@ -311,7 +314,11 @@ class PlannerService:
         never a stale execution.
 
         `predicted` defaults to the service's own price for that axis at
-        the exact size. A `params` override records timing rings but is
+        the exact size; pass `precision` (a PRECISIONS name) when the
+        measured sync ran a compressed wire, so the default prediction
+        and the per-term ledger shares price the same compressed plan
+        the devices executed (quant passes in γ/δ, shrunk β/incast —
+        DESIGN.md §13). A `params` override records timing rings but is
         excluded from refit — per-request overrides are not the
         service's pricing basis, so they must not steer it.
 
@@ -326,19 +333,25 @@ class PlannerService:
         n = int(n)
         size_floats = max(float(size_floats), 1.0)
         measured = float(measured)
+        prec = None
+        if precision is not None and precision != "f32":
+            from repro.core.cost_model import PRECISIONS
+            prec = PRECISIONS[precision]
+        pname = prec.name if prec is not None else "f32"
         if predicted is None:
             # exact-size default pricing, memoized per params version:
             # the probe/serve wiring observes the same shapes repeatedly
             # and the full halves pricing (plan lookup + rescale +
             # simulate) must stay off the hot path
-            pk = (level, n, round(size_floats, 6), dtype) \
+            pk = (level, n, round(size_floats, 6), dtype, pname) \
                 if not override else None
             cached = None if pk is None else self._pred_cache.get(pk)
             if cached is not None and cached[0] == ver:
                 predicted = cached[1]
             else:
                 t_rs, t_ag = self._axis_halves_time(n, level, size_floats,
-                                                    dtype, eff)
+                                                    dtype, eff,
+                                                    precision=prec)
                 predicted = t_rs + t_ag
                 if pk is not None:
                     self._pred_cache[pk] = (ver, predicted)
@@ -386,13 +399,14 @@ class PlannerService:
         # prediction exactly — filed next to the measured wall time. The
         # breakdown is memoized per shape under the same params-version
         # contract as the prediction itself.
-        sk = (level, n, round(size_floats, 6), dtype)
+        sk = (level, n, round(size_floats, 6), dtype, pname)
         sentry = self._shares_cache.get(sk)
         if sentry is not None and sentry[0] == ver:
             breakdown = sentry[1]
         else:
             breakdown = self._axis_term_shares(n, level, size_floats,
-                                               dtype, eff, merged)
+                                               dtype, eff, merged,
+                                               precision=prec)
             self._shares_cache[sk] = (ver, breakdown)
         self.telemetry.ledger.record(LedgerEntry(
             level=level, n=n, size_floats=size_floats,
@@ -767,7 +781,8 @@ class PlannerService:
                     servers=plan.servers, num_blocks=plan.num_blocks)
 
     def _axis_halves_time(self, n: int, level: str, size_floats: float,
-                          dtype: str, eff) -> tuple[float, float]:
+                          dtype: str, eff,
+                          precision=None) -> tuple[float, float]:
         """(T_RS, T_AG) of the axis's GenTree plan at `size_floats`: the
         per-step simulator costs split at the ReduceScatter boundary (the
         last folding step — the same boundary `core.lower` executes).
@@ -776,7 +791,11 @@ class PlannerService:
         rescaled to the exact requested size before simulation — so the
         per-leaf baseline is priced at true leaf sizes instead of being
         inflated by geometric-bucket snapping (the power-of-two sweep
-        candidates snap to themselves, factor 1)."""
+        candidates snap to themselves, factor 1).
+
+        `precision` (a `cost_model.Precision`) reprices the same plan for
+        a compressed wire via `compressed_plan`: β/ε shrink with the wire
+        bytes, γ/δ pick up the quant passes (DESIGN.md §13)."""
         from repro.core.sync import level_switch_topo
         topo = level_switch_topo(int(n), eff, level)
         dsize = DTYPE_BYTES.get(dtype, 4)
@@ -787,6 +806,9 @@ class PlannerService:
             else 1.0
         if abs(factor - 1.0) > 1e-12:
             plan = self._scaled_plan(plan, factor)
+        if precision is not None and precision.name != "f32":
+            from repro.core.cost_model import compressed_plan
+            plan = compressed_plan(plan, precision)
         res = Simulator(topo, eff, unit_bytes=dsize,
                         engine=self.engine).simulate(plan)
         folds = [i for i, st in enumerate(plan.steps) if st.reduces]
@@ -795,14 +817,17 @@ class PlannerService:
                 float(sum(res.per_step[split + 1:])))
 
     def _axis_term_shares(self, n: int, level: str, size_floats: float,
-                          dtype: str, eff, merged: GenModelParams):
+                          dtype: str, eff, merged: GenModelParams,
+                          precision=None):
         """GenModel per-term breakdown (`cost_model.CostBreakdown`) of the
         axis's plan at the exact size — the *proportions* side of the cost
         ledger. Same plan fetch + rescale as `_axis_halves_time`, but
         priced by the single-switch term walk (`evaluate_plan_terms`)
         under the merged (γ/δ-from-server) level params, so each term is
-        attributed the way the planner charges it. The caller rescales
-        the breakdown to the quoted prediction (`scaled_to`)."""
+        attributed the way the planner charges it. With a `precision` the
+        quant passes land in γ/δ and the shrunk wire in β/ε, keeping the
+        per-term drift attribution honest on compressed syncs. The caller
+        rescales the breakdown to the quoted prediction (`scaled_to`)."""
         from repro.core.cost_model import evaluate_plan_terms
         from repro.core.sync import level_switch_topo
         topo = level_switch_topo(int(n), eff, level)
@@ -814,7 +839,7 @@ class PlannerService:
             else 1.0
         if abs(factor - 1.0) > 1e-12:
             plan = self._scaled_plan(plan, factor)
-        return evaluate_plan_terms(plan, merged)
+        return evaluate_plan_terms(plan, merged, precision=precision)
 
     def get_bucket_plan(self, axes: Sequence[tuple[str, int]],
                         total_floats: float, dtype: str = "float32", *,
@@ -826,28 +851,43 @@ class PlannerService:
         one lowered `CompiledSchedule` per axis (DESIGN.md §9).
 
         Sweeps powers-of-two bucket sizes (plus the monolithic
-        single-bucket candidate), prices each candidate per axis with the
-        configured engine — per-bucket α, the γ/δ memory-access terms and
-        incast all come from GenModel itself — and models the
-        double-buffered pipeline (`core.bucketing.pipelined_time`:
-        bucket k's AllGather overlaps bucket k+1's ReduceScatter). The
-        schedules are resolved via `get_axis_executable` for the chosen
-        size only, so they live on that size class's plan entry — lowered
-        once, never re-lowered per step. Pass `leaf_sizes` to also model
-        the per-leaf (unbucketed) baseline for comparison.
+        single-bucket candidate) JOINTLY with the wire precision
+        (DESIGN.md §13): each (bucket, precision) candidate is priced per
+        axis with the configured engine — per-bucket α, the γ/δ
+        memory-access terms (including the quant/dequant passes), the
+        compressed β and incast all come from GenModel itself — and the
+        double-buffered pipeline is modeled
+        (`core.bucketing.pipelined_time`: bucket k's AllGather overlaps
+        bucket k+1's ReduceScatter). The schedules are resolved via
+        `get_axis_executable` for the chosen size only (bound to the
+        chosen wire via `CompiledSchedule.with_wire`), so they live on
+        that size class's plan entry — lowered once, never re-lowered per
+        step. Pass `leaf_sizes` to also model the per-leaf (unbucketed)
+        baseline for comparison.
 
         `config.bucket_bytes` pins the bucket size (the sweep collapses
-        to that single candidate, still priced); axes with n == 1 are
-        skipped but keep their mesh level, exactly as
+        to that single candidate, still priced); `config.precision` pins
+        the wire format and `config.tolerance` is the error-budget guard
+        — with no tolerance the sweep stays lossless, and a pinned
+        precision whose budget exceeds the tolerance clamps to f32
+        (`cost_model.resolve_precision`). Axes with n == 1 are skipped
+        but keep their mesh level, exactly as
         `core.sync.resolve_axis_plans` enumerates.
         """
         import math
 
         from repro.core.bucketing import (BucketConfig, pipelined_time,
                                           serial_time)
+        from repro.core.cost_model import (PRECISIONS, allowed_precisions,
+                                           resolve_precision)
         from repro.core.sync import AxisPlan, axis_level
 
         cfg = config or BucketConfig()
+        if cfg.precision is not None:
+            prec_cands = [resolve_precision(cfg.precision, cfg.tolerance)]
+        else:
+            prec_cands = allowed_precisions(cfg.tolerance) \
+                or [PRECISIONS["f32"]]
         axes = tuple((str(a), int(n)) for a, n in axes)
         live = [(i, a, n) for i, (a, n) in enumerate(axes) if n > 1]
         eff = dict(params) if params else self.params
@@ -864,18 +904,24 @@ class PlannerService:
                        + ("bucket_plan", cfg.key(), dtype, leaf_key,
                           self.skew.key() if self.skew else None))
 
-        def resolve_axis_plans(bucket_floats: int):
+        def resolve_axis_plans(bucket_floats: int, prec_name: str = "f32"):
             # hierarchical sizes: the RS chain runs the leaf axis first,
             # so axis k's schedule only ever sees bucket / prod(earlier
             # n) elements — resolve (and price) each axis at the size it
             # actually executes
+            wire = PRECISIONS[prec_name] if prec_name != "f32" else None
             out, shard = [], float(bucket_floats)
             for i, a, n in live:
-                out.append(AxisPlan(a, "plan",
-                                    schedule=self.get_axis_executable(
-                                        a, n, shard, dtype,
-                                        level=axis_level(i),
-                                        params=eff).schedule))
+                sched = self.get_axis_executable(
+                    a, n, shard, dtype, level=axis_level(i),
+                    params=eff).schedule
+                if wire is not None:
+                    # wire-bound copy lives on the returned BucketPlan (not
+                    # the shared size-class entry), so the guard ladder's
+                    # per-wire demotion state persists across steps without
+                    # leaking into full-precision users of the same plan
+                    sched = sched.with_wire(wire)
+                out.append(AxisPlan(a, "plan", schedule=sched))
                 shard /= n
             return out
 
@@ -889,18 +935,20 @@ class PlannerService:
                     return dataclasses.replace(obj, source="memory")
                 # disk-warm (or schedule-invalidated) entry: the choice is
                 # recorded; only the schedules need re-resolving
+                prec_name = str(entry.get("precision", "f32"))
                 obj = BucketPlan(
                     axes=tuple((a, n) for _, a, n in live),
                     bucket_floats=int(entry["bucket_floats"]),
                     bucket_bytes=int(entry["bucket_floats"]) * dsize,
                     num_buckets=int(entry["num_buckets"]),
-                    axis_plans=resolve_axis_plans(int(entry["bucket_floats"])),
+                    axis_plans=resolve_axis_plans(int(entry["bucket_floats"]),
+                                                  prec_name),
                     predicted_pipelined=entry["pipelined"],
                     predicted_serial=entry["serial"],
                     predicted_per_leaf=entry.get("per_leaf"),
                     pipeline=bool(entry.get("pipeline", True)),
                     sweep={int(b): row for b, row in entry["sweep"].items()},
-                    source="disk", key=key)
+                    precision=prec_name, source="disk", key=key)
                 entry["_obj"] = obj
                 return obj
 
@@ -920,12 +968,14 @@ class PlannerService:
             # ---- candidate sweep (all pricing through the plan cache) --------
             halves_memo: dict[tuple, tuple[float, float]] = {}
 
-            def halves(i: int, n: int, size_floats: float):
+            def halves(i: int, n: int, size_floats: float, prec=None):
                 lvl = axis_level(i)
-                mk = (lvl, n, round(max(float(size_floats), 1.0), 6))
+                pname = prec.name if prec is not None else "f32"
+                mk = (lvl, n, round(max(float(size_floats), 1.0), 6), pname)
                 if mk not in halves_memo:
                     halves_memo[mk] = self._axis_halves_time(
-                        n, lvl, float(size_floats), dtype, eff)
+                        n, lvl, float(size_floats), dtype, eff,
+                        precision=prec)
                 return halves_memo[mk]
 
             if cfg.bucket_bytes:
@@ -937,29 +987,40 @@ class PlannerService:
                     nbytes *= 2
                 cands.append(int(math.ceil(total)))    # monolithic: K = 1
 
+            rank = "pipelined" if cfg.pipeline else "serial"
             sweep: dict[int, dict] = {}
             with default_tracer().span("planner/bucket_sweep",
-                                       candidates=len(cands)):
+                                       candidates=len(cands)
+                                       * len(prec_cands)):
                 for bf in cands:
                     k = max(1, math.ceil(total / bf))
-                    t_rs = t_ag = 0.0
-                    shard = float(bf)
-                    for i, _a, n in live:
-                        rs, ag = halves(i, n, shard)
-                        t_rs += rs
-                        t_ag += ag
-                        shard /= n  # outer axes see the inner axes' shard
+                    best = None
+                    for prec in prec_cands:
+                        t_rs = t_ag = 0.0
+                        shard = float(bf)
+                        for i, _a, n in live:
+                            rs, ag = halves(i, n, shard, prec)
+                            t_rs += rs
+                            t_ag += ag
+                            shard /= n  # outer axes see inner axes' shard
+                        row = {
+                            "num_buckets": k, "t_rs": t_rs, "t_ag": t_ag,
+                            "pipelined": pipelined_time(t_rs, t_ag, k),
+                            "serial": serial_time(t_rs, t_ag, k),
+                            "precision": prec.name,
+                        }
+                        # ties break toward fewer bits dropped (f32 first
+                        # in allowed_precisions order)
+                        if best is None or row[rank] < best[rank]:
+                            best = row
                     # t_rs/t_ag ride along so consumers (bucket_bench's CI
                     # gate) can recompute the pipeline model independently
                     # instead of tautologically re-minimizing the stored
-                    # totals
-                    sweep[bf] = {
-                        "num_buckets": k, "t_rs": t_rs, "t_ag": t_ag,
-                        "pipelined": pipelined_time(t_rs, t_ag, k),
-                        "serial": serial_time(t_rs, t_ag, k),
-                    }
-            rank = "pipelined" if cfg.pipeline else "serial"
+                    # totals; rows stay keyed by bucket size, each holding
+                    # its own argmin over wire precisions
+                    sweep[bf] = best
             chosen = min(sweep, key=lambda b: (sweep[b][rank], b))
+            prec_name = str(sweep[chosen].get("precision", "f32"))
 
             per_leaf = None
             if leaf_sizes is not None:
@@ -977,17 +1038,17 @@ class PlannerService:
                 axes=tuple((a, n) for _, a, n in live),
                 bucket_floats=int(chosen), bucket_bytes=int(chosen) * dsize,
                 num_buckets=int(sweep[chosen]["num_buckets"]),
-                axis_plans=resolve_axis_plans(int(chosen)),
+                axis_plans=resolve_axis_plans(int(chosen), prec_name),
                 predicted_pipelined=sweep[chosen]["pipelined"],
                 predicted_serial=sweep[chosen]["serial"],
                 predicted_per_leaf=per_leaf, pipeline=cfg.pipeline,
-                sweep=sweep, source="cold", key=key)
+                sweep=sweep, precision=prec_name, source="cold", key=key)
             self.cache.put(key, {
                 "kind": "bucket_plan", "bucket_floats": int(chosen),
                 "num_buckets": int(sweep[chosen]["num_buckets"]),
                 "pipelined": sweep[chosen]["pipelined"],
                 "serial": sweep[chosen]["serial"], "per_leaf": per_leaf,
-                "pipeline": cfg.pipeline,
+                "pipeline": cfg.pipeline, "precision": prec_name,
                 "sweep": {str(b): row for b, row in sweep.items()},
                 "_obj": obj})
             return obj

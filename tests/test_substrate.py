@@ -203,6 +203,56 @@ def test_elastic_remesh_invalidates_bucket_schedules():
     assert bp4.axis_plans[0].schedule is not bp8.axis_plans[0].schedule
 
 
+def test_precision_change_never_serves_stale_compressed_plan():
+    """The PR 4 fingerprint-invalidation contract extended to the wire
+    precision (DESIGN.md §13): precision and tolerance live in
+    BucketConfig.key(), so changing either is a cold cache miss — a
+    caller that revokes lossy consent can never be handed a cached
+    compressed schedule, and vice versa."""
+    from repro.core.bucketing import BucketConfig
+    from repro.planner.service import PlannerService
+
+    svc = PlannerService()
+    lossy = svc.get_bucket_plan(
+        [("data", 8)], 65536.0,
+        config=BucketConfig(precision="fp8", tolerance=0.3))
+    assert lossy.source == "cold" and lossy.precision == "fp8"
+    assert lossy.axis_plans[0].schedule.wire.name == "fp8"
+
+    # tolerance revoked: cold miss, full-precision plan, no wire
+    strict = svc.get_bucket_plan(
+        [("data", 8)], 65536.0,
+        config=BucketConfig(precision="fp8", tolerance=None))
+    assert strict.source == "cold" and strict.precision == "fp8"
+    # precision=fp8 with tolerance=None is an explicit pin (trusted) —
+    # but a *float* tolerance below the budget clamps
+    clamped = svc.get_bucket_plan(
+        [("data", 8)], 65536.0,
+        config=BucketConfig(precision="fp8", tolerance=0.01))
+    assert clamped.source == "cold" and clamped.precision == "f32"
+    assert clamped.axis_plans[0].schedule.wire is None
+
+    # default (no consent at all) is lossless and its own entry
+    plain = svc.get_bucket_plan([("data", 8)], 65536.0)
+    assert plain.source == "cold" and plain.precision == "f32"
+    assert plain.axis_plans[0].schedule is not \
+        lossy.axis_plans[0].schedule
+
+    # warm hits for each key keep their own choice
+    assert svc.get_bucket_plan(
+        [("data", 8)], 65536.0,
+        config=BucketConfig(precision="fp8",
+                            tolerance=0.3)).precision == "fp8"
+    assert svc.get_bucket_plan([("data", 8)], 65536.0).precision == "f32"
+
+    # schedule invalidation rebuilds the wire binding, not just f32
+    svc.invalidate_executables()
+    re = svc.get_bucket_plan(
+        [("data", 8)], 65536.0,
+        config=BucketConfig(precision="fp8", tolerance=0.3))
+    assert re.axis_plans[0].schedule.wire.name == "fp8"
+
+
 def test_ft_resume_invalidates_and_rebuilds_bucket_schedules(tmp_path):
     """FaultTolerantLoop resume (restore from disk — possibly onto a
     different allocation) drops the derived schedules and reports it via

@@ -142,6 +142,55 @@ class TestGetBucketPlan:
         bp2 = svc.get_bucket_plan([("model", 1), ("data", 1)], 1e5)
         assert bp2.axes == () and bp2.axis_plans == []
 
+    def test_precision_sweep_and_tolerance_cache(self):
+        """Joint (bucket × precision) argmin (DESIGN.md §13): a tolerance
+        opens lossy wire candidates, the chosen precision rides the
+        sweep rows, and a tolerance change is a cold cache miss — a
+        compressed plan is never served to a caller whose error budget
+        changed."""
+        svc = PlannerService()
+        b1 = svc.get_bucket_plan(self.AXES, 1e7,
+                                 config=BucketConfig(tolerance=0.3))
+        assert b1.source == "cold"
+        assert all("precision" in row for row in b1.sweep.values())
+        # compression shrinks β·S: on the default params the sweep must
+        # pick a lossy wire, and it must price no worse than lossless
+        assert b1.precision in ("bf16", "fp8", "int8")
+        b_full = svc.get_bucket_plan(self.AXES, 1e7)
+        assert b_full.source == "cold" and b_full.precision == "f32"
+        assert b1.predicted_pipelined <= b_full.predicted_pipelined
+        # warm hit preserves the choice and the wire-bound schedules
+        b2 = svc.get_bucket_plan(self.AXES, 1e7,
+                                 config=BucketConfig(tolerance=0.3))
+        assert b2.source == "memory" and b2.precision == b1.precision
+        assert b2.axis_plans[0].schedule is b1.axis_plans[0].schedule
+        # tolerance below every lossy budget clamps to lossless — and is
+        # its own cache entry (cold), not a stale compressed plan
+        b3 = svc.get_bucket_plan(self.AXES, 1e7,
+                                 config=BucketConfig(tolerance=0.001))
+        assert b3.source == "cold" and b3.precision == "f32"
+
+    def test_precision_pinned_and_clamped(self):
+        svc = PlannerService()
+        bp = svc.get_bucket_plan(
+            self.AXES, 1e6,
+            config=BucketConfig(precision="fp8", tolerance=0.3))
+        assert bp.precision == "fp8"
+        for pl in bp.axis_plans:
+            assert pl.schedule.wire is not None
+            assert pl.schedule.wire.name == "fp8"
+        # a pinned precision whose budget exceeds the tolerance clamps
+        # to full precision (resolve_precision), wire stripped
+        clamped = svc.get_bucket_plan(
+            self.AXES, 1e6,
+            config=BucketConfig(precision="fp8", tolerance=0.001))
+        assert clamped.precision == "f32"
+        assert all(pl.schedule.wire is None for pl in clamped.axis_plans)
+        # the wire variant is a distinct object from the f32 user's
+        # schedule (guard demotion state must not cross wires)
+        assert bp.axis_plans[0].schedule is not \
+            clamped.axis_plans[0].schedule
+
     def test_invalidate_drops_schedules(self):
         svc = PlannerService()
         svc.get_bucket_plan(self.AXES, 1e6)
@@ -173,8 +222,8 @@ results = {}
 TOL = {"float32": 1e-6, "bfloat16": 0.05}
 
 
-def run_case(tree, axes, mesh_shape, cfg, seed=0):
-    '''Per-leaf max relative error of bucketed sync vs lax.psum.'''
+def sync_out(tree, axes, mesh_shape, cfg):
+    '''The synced tree (and the psum reference) on the sharded mesh.'''
     mesh = jax.make_mesh(mesh_shape, tuple(a for a, _ in reversed(axes)))
     names = tuple(a for a, n in axes if n > 1)
     spec = P(*(a for a, _ in reversed(axes)))
@@ -191,19 +240,24 @@ def run_case(tree, axes, mesh_shape, cfg, seed=0):
     p = shard_map(lambda g: lift(jax.tree.map(
         lambda v: jax.lax.psum(v, names), local(g))),
                   mesh=mesh, in_specs=spec, out_specs=spec)
-    got = jax.jit(f)(tree)
-    want = jax.jit(p)(tree)
+    return jax.jit(f)(tree), jax.jit(p)(tree)
 
+
+def run_case(tree, axes, mesh_shape, cfg, seed=0, wire_budget=0.0):
+    '''Per-leaf max relative error of bucketed sync vs lax.psum,
+    normalized to max(dtype tolerance, wire error budget).'''
+    got, want = sync_out(tree, axes, mesh_shape, cfg)
     worst = 0.0
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         if w.size == 0:
             assert g.size == 0
             continue
-        tol = TOL[str(w.dtype)]
+        assert g.dtype == w.dtype    # wire compression must not leak out
+        tol = max(TOL[str(w.dtype)], wire_budget)
         a = np.asarray(g, np.float64)
         b = np.asarray(w, np.float64)
         err = np.abs(a - b).max() / (np.abs(b).max() + 1e-30)
-        worst = max(worst, err / tol)   # normalized to the dtype tolerance
+        worst = max(worst, err / tol)   # normalized to the tolerance
     return worst
 
 
@@ -237,6 +291,38 @@ tree2 = jax.tree.map(lambda v: v.reshape((2, 4) + v.shape[1:]), tree)
 for name in ("auto", "small"):
     results[f"table6_{name}"] = bool(run_case(
         tree2, [("data", 4), ("pod", 2)], (2, 4), CONFIGS[name]) < 1.0)
+
+# ---- compressed wire (DESIGN.md §13): plan ≡ psum within the budget -------
+from repro.core.cost_model import PRECISIONS
+QCASES = {
+    "fp8_pin": (SyncConfig(strategy="plan", precision="fp8",
+                           tolerance=0.3),
+                PRECISIONS["fp8"].error_budget),
+    "int8_pin": (SyncConfig(strategy="plan", precision="int8",
+                            tolerance=0.3),
+                 PRECISIONS["int8"].error_budget),
+    "tol_sweep": (SyncConfig(strategy="plan", tolerance=0.3),
+                  PRECISIONS["fp8"].error_budget),
+    "int8_leaf": (SyncConfig(strategy="plan", bucket_bytes=0,
+                             precision="int8", tolerance=0.3),
+                  PRECISIONS["int8"].error_budget),
+}
+for name, (qcfg, budget) in QCASES.items():
+    results[f"quant_{name}"] = bool(run_case(
+        tree, [("x", 8)], (8,), qcfg, wire_budget=budget) < 1.0)
+results["quant_table6_fp8"] = bool(run_case(
+    tree2, [("data", 4), ("pod", 2)], (2, 4), QCASES["fp8_pin"][0],
+    wire_budget=QCASES["fp8_pin"][1]) < 1.0)
+
+# pinning precision="f32" must be BIT-IDENTICAL to the default planned
+# path — the wire machinery is stripped, not run at unit scale
+g_plain, _ = sync_out(tree, [("x", 8)], (8,), CONFIGS["auto"])
+g_f32, _ = sync_out(tree, [("x", 8)], (8,),
+                    SyncConfig(strategy="plan", precision="f32",
+                               tolerance=0.5))
+results["quant_f32_exact"] = bool(all(
+    np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    for a, b in zip(jax.tree.leaves(g_plain), jax.tree.leaves(g_f32))))
 
 # ---- allreduce_planned: chunked pipelined buckets + stats -----------------
 mesh = jax.make_mesh((8,), ("x",))
@@ -340,6 +426,8 @@ def results():
 @pytest.mark.parametrize("key", [
     "fixed_auto", "fixed_small", "fixed_serial", "fixed_off",
     "table6_auto", "table6_small",
+    "quant_fp8_pin", "quant_int8_pin", "quant_tol_sweep",
+    "quant_int8_leaf", "quant_table6_fp8", "quant_f32_exact",
     "planned_bucketed",
     "fallback_correct", "fallback_stats", "fallback_warns_once"])
 def test_bucketed_sync(results, key):

@@ -1,0 +1,89 @@
+"""Whole-step co-planning vs naïve per-call planning (DESIGN.md §14).
+
+A MoE training step issues every collective family at once: gradient
+AllReduces per bucket, ZeRO ReduceScatter/AllGather halves, the
+expert-parallel AllToAll pair per MoE layer, and a pipeline-boundary P2P
+shift. `PlannerService.get_step_plan` prices that whole census jointly
+under one GenModel basis — per family an argmin over per-call /
+coalesced / pipelined regimes across the allowed wire precisions.
+
+Gate: the jointly-planned step must never lose to pricing each call
+independently — per-call is itself a candidate regime, so
+`ratio = total_best / total_per_call <= 1` by construction, and on the
+MoE-style mix below the coalesced α-amortisation must make it strictly
+< 1. `benchmarks.run --json` records `step_plan_vs_per_call_ratio` (and
+the joint/per-call totals) in BENCH_core.json so the trajectory is
+tracked across PRs. Model-only: no devices needed.
+
+    PYTHONPATH=src python -m benchmarks.run --only step
+"""
+from __future__ import annotations
+
+from repro.planner.service import PlannerService
+
+from .common import fmt_table
+
+MESH = [("data", 32), ("pod", 16)]              # SYM512-style DP view
+
+# deepseek_moe_16b-flavoured census: 24 gradient-bucket AllReduces,
+# ZeRO-3 RS/AG halves per bucket, dispatch+combine AllToAll per MoE
+# layer (26 layers x 2), one pipeline-boundary permute
+MOE_MIX = {
+    "allreduce": {"count": 24, "size_floats": 2_500_000},
+    "reduce_scatter": {"count": 24, "size_floats": 2_500_000},
+    "allgather": {"count": 24, "size_floats": 2_500_000},
+    "all_to_all": {"count": 52, "size_floats": 131_072},
+    "p2p": {"count": 1, "size_floats": 1_048_576},
+}
+
+
+def run() -> dict:
+    svc = PlannerService()
+    sp = svc.get_step_plan(MESH, MOE_MIX)
+
+    rows = []
+    for fam, q in sp.quotes.items():
+        rows.append({
+            "family": fam,
+            "count": q["count"],
+            "per-call ms": f"{q['count'] * q['per_call_total'] * 1e3:.3f}",
+            "joint ms": f"{q['joint_total'] * 1e3:.3f}",
+            "pipelined ms": f"{q['pipelined'] * 1e3:.3f}",
+            "mode": q["mode"],
+            "wire": q["precision"],
+        })
+    print(fmt_table(rows, ["family", "count", "per-call ms", "joint ms",
+                           "pipelined ms", "mode", "wire"],
+                    "whole-step family argmin (MoE-style mix, SYM512 DP "
+                    "view)"))
+    print(f"step totals: per-call {sp.total_per_call * 1e3:.3f} ms, "
+          f"joint {sp.total_joint * 1e3:.3f} ms, best "
+          f"{sp.total_best * 1e3:.3f} ms  ->  ratio {sp.ratio:.4f}")
+
+    # consistency invariant: the stored per-family term breakdowns must
+    # sum to the joint total exactly (same walk, same basis)
+    terms_total = sum(sum(q["joint"].values()) for q in sp.quotes.values())
+    assert abs(terms_total - sp.total_joint) <= 1e-9 * sp.total_joint, (
+        terms_total, sp.total_joint)
+
+    # the gate: joint planning beats naïve per-call planning on a
+    # multi-call MoE step (<= 1 by construction; strictly < 1 here
+    # because coalescing amortises α across every repeated family)
+    assert sp.ratio <= 1.0 + 1e-12, sp.ratio
+    assert sp.ratio < 1.0, (
+        f"jointly-planned MoE step must beat per-call planning, got "
+        f"ratio {sp.ratio:.6f}")
+
+    # every family in the mix came back with a leaf-axis executable
+    missing = [f for f in MOE_MIX if f not in sp.schedules]
+    assert not missing, missing
+
+    return {"ok": True,
+            "step_plan_vs_per_call_ratio": round(sp.ratio, 6),
+            "step_plan_per_call_ms": round(sp.total_per_call * 1e3, 4),
+            "step_plan_best_ms": round(sp.total_best * 1e3, 4),
+            "step_plan_precision": sp.precision}
+
+
+if __name__ == "__main__":
+    run()

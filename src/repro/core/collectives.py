@@ -465,3 +465,54 @@ def reduce_scatter(x: jax.Array, axis_name: str, strategy: str = "psum",
         return reduce_scatter_hcps(flat, axis_name, factors, fused_reduce,
                                    reorder=True)
     raise ValueError(strategy)
+
+
+def all_gather(x: jax.Array, axis_name: str, strategy: str = "psum",
+               factors: Sequence[int] | None = None,
+               schedule=None) -> jax.Array:
+    """Inverse of `reduce_scatter` for the same strategy: gathers the
+    per-device shard back into the full (padded) vector on every device.
+
+    Shard-order contract: `reduce_scatter` returns NATURAL order (device
+    i ↔ slice i) for every strategy — hcps re-orders its digit-reversed
+    native holders on the way out (`reorder=True`). This dispatch
+    therefore UN-reorders back to native holders before running the hcps
+    doubling phase; calling `all_gather_hcps` directly on a
+    `reduce_scatter(..., "hcps")` shard yields a block-permuted vector
+    (the ZeRO-3 round-trip bug this dispatch exists to prevent).
+    Non-power-of-two rhd composes through its own pow2-core convention
+    (the fold-out overwrites the extras' placeholder shards)."""
+    if strategy == "plan":
+        assert schedule is not None, "strategy='plan' needs a schedule"
+        return schedule.all_gather(x, axis_name)
+    if strategy in ("psum", "auto"):
+        return lax.all_gather(x.reshape(-1), axis_name, axis=0, tiled=True)
+    if strategy == "ring":
+        return all_gather_ring(x.reshape(-1), axis_name)
+    if strategy == "rhd":
+        return all_gather_rhd(x, axis_name)
+    if strategy == "cps":
+        return all_gather_cps(x.reshape(-1), axis_name)
+    if strategy == "hcps":
+        assert factors is not None, "hcps needs fan-in factors"
+        n = int(lax.psum(1, axis_name))
+        sidx = hcps_shard_index(factors)
+        native = lax.ppermute(x.reshape(-1), axis_name,
+                              [(sidx[i], i) for i in range(n)])
+        return all_gather_hcps(native, axis_name, factors)
+    raise ValueError(strategy)
+
+
+def all_to_all(x: jax.Array, axis_name: str, schedule=None) -> jax.Array:
+    """AllToAll over leading-dim chunks: device d's chunk j goes to device
+    j as chunk d (the expert-parallel dispatch/combine primitive). x.size
+    must divide by the axis size. With `schedule` (a lowered
+    `core.lower.CompiledSchedule` of family "all_to_all") the exchange
+    executes the plan's coalesced ppermute rounds; otherwise it is
+    `lax.all_to_all`. Both paths return x's shape."""
+    if schedule is not None:
+        return schedule.all_to_all(x, axis_name)
+    n = lax.psum(1, axis_name)
+    parts = lax.all_to_all(x.reshape((n, -1)), axis_name,
+                           split_axis=0, concat_axis=0)
+    return parts.reshape(x.shape)

@@ -255,7 +255,32 @@ def compressed_plan(plan: Plan, precision: Precision | None) -> Plan:
             for r in st.reduces]
         steps.append(s)
     return Plan(plan.name, plan.n, plan.size, steps=steps,
-                servers=plan.servers, num_blocks=plan.num_blocks)
+                servers=plan.servers, num_blocks=plan.num_blocks,
+                family=plan.family)
+
+
+# Per-device wire volume of each collective family, as a multiple of the
+# payload M (DESIGN.md §14). THE wire-byte convention: the planner's
+# per-family plans move exactly these bytes, and `launch.hlo_analysis`
+# books the same so an HLO-extracted mix is not systematically
+# overpriced vs the plans quoted for it. Payload M per family:
+#   all-reduce / reduce-scatter / all-to-all — the per-device operand;
+#   all-gather                              — the full result;
+#   collective-permute (p2p)                — the buffer moved per edge.
+def family_wire_bytes(family: str, n: int, payload: float) -> float:
+    """Wire units each device moves for `payload` units of family
+    `family` over an n-member group (n ≤ 1 ⇒ nothing moves)."""
+    if n <= 1:
+        return 0.0
+    if family in ("all-reduce", "allreduce"):
+        return 2.0 * (n - 1) / n * payload      # RS + AG halves
+    if family in ("reduce-scatter", "reduce_scatter",
+                  "all-gather", "allgather",
+                  "all-to-all", "all_to_all", "alltoall"):
+        return (n - 1) / n * payload
+    if family in ("collective-permute", "p2p"):
+        return float(payload)
+    raise ValueError(f"unknown collective family {family!r}")
 
 
 def evaluate_plan(plan: Plan, p: GenModelParams,

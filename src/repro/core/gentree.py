@@ -669,3 +669,30 @@ def baseline_plan(kind: str, topo: TopoNode, size: float) -> Plan:
         fac = [int(x) for x in kind.split(":", 1)[1].split("x")]
         return hcps_plan(fac, size, servers=ids)
     raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Standalone per-family plans over a tree (ISSUE 9): the folding families
+# are the Kolmakov–Zhang halves of the co-planned GenTree AllReduce —
+# executing RS or AG alone runs exactly the half the AllReduce would —
+# while the pure-movement families are flat single-step exchanges over
+# the tree's server ids.
+# ---------------------------------------------------------------------------
+def family_plan(family: str, topo: TopoNode, size: float,
+                params: dict[str, GenModelParams] | None = None,
+                engine: str | None = None, **gentree_kwargs) -> Plan:
+    from .plans import alltoall_plan, family_halves, p2p_plan
+    topo.finalize()
+    if family == "allreduce":
+        return gentree(topo, size, params, engine=engine,
+                       **gentree_kwargs).plan
+    if family in ("reduce_scatter", "allgather"):
+        res = gentree(topo, size, params, engine=engine, **gentree_kwargs)
+        rs_half, ag_half = family_halves(res.plan)
+        return rs_half if family == "reduce_scatter" else ag_half
+    ids = topo.server_ids()
+    if family == "all_to_all":
+        return alltoall_plan(len(ids), size, servers=ids)
+    if family == "p2p":
+        return p2p_plan(len(ids), size, servers=ids)
+    raise ValueError(f"unknown collective family {family!r}")

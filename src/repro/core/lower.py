@@ -41,6 +41,7 @@ the no-JAX reference used by the hypothesis equivalence suite.
 """
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass, field
 from typing import Callable, Mapping, Sequence
 
@@ -106,6 +107,13 @@ class CompiledSchedule:
     # fused dequant-reduce. None = full-precision (bit-identical legacy
     # path). The numpy mirror always runs at full precision.
     wire: object | None = None
+    # Collective family this schedule computes (plans.FAMILIES). The entry
+    # points enforce it: an allgather-family schedule only answers
+    # all_gather(), an all_to_all-family one only all_to_all(), etc.
+    family: str = "allreduce"
+    # p2p family only: the (src_mesh, dst_mesh) edges, for the guard's
+    # flat ppermute rung and for introspection.
+    perm_pairs: tuple[tuple[int, int], ...] | None = None
 
     def with_wire(self, precision) -> "CompiledSchedule":
         """A copy of this schedule bound to a wire format (or None to
@@ -135,9 +143,17 @@ class CompiledSchedule:
 
     def describe(self) -> str:
         w = f" wire={self.wire.name}" if self.wire is not None else ""
+        f = f" family={self.family}" if self.family != "allreduce" else ""
         return (f"{self.plan_name}: n={self.n} blocks={self.num_blocks} "
                 f"steps={len(self.rs)}+{len(self.ag)} "
-                f"ppermute_rounds={self.total_rounds()}{w}")
+                f"ppermute_rounds={self.total_rounds()}{w}{f}")
+
+    def _check_family(self, entry: str, allowed: tuple[str, ...]) -> None:
+        if self.family not in allowed:
+            raise LoweringError(
+                f"schedule {self.plan_name!r} compiles a "
+                f"{self.family!r}-family plan — {entry}() only runs "
+                f"{'/'.join(allowed)} schedules")
 
     # ---- jax execution (call inside shard_map) -----------------------------
     def _run_steps(self, steps: Sequence[ExecStep], buf, axis_name: str,
@@ -343,6 +359,7 @@ class CompiledSchedule:
                   fused_reduce: Callable | None = None):
         """Full AllReduce of a per-device array; same shape out."""
         import jax.numpy as jnp
+        self._check_family("allreduce", ("allreduce",))
         self._check_axis(axis_name)
         shape = x.shape
         flat = x.reshape(-1)
@@ -366,6 +383,7 @@ class CompiledSchedule:
         """RS half: flat per-device x → canonical shard i on device i."""
         import jax.numpy as jnp
         from jax import lax
+        self._check_family("reduce_scatter", ("allreduce", "reduce_scatter"))
         if self.blocks_per_shard is None:
             raise LoweringError(
                 f"plan {self.plan_name!r} shards {self.num_blocks} blocks "
@@ -392,6 +410,7 @@ class CompiledSchedule:
         """AG half: canonical shard i on device i → full flat vector."""
         import jax.numpy as jnp
         from jax import lax
+        self._check_family("all_gather", ("allreduce", "allgather"))
         if self.blocks_per_shard is None:
             raise LoweringError(
                 f"plan {self.plan_name!r} has no canonical shard layout; "
@@ -411,6 +430,43 @@ class CompiledSchedule:
             buf = self._run_steps(self.ag, buf, axis_name, None,
                                   phase="ag")
         return buf.reshape(-1)
+
+    def all_to_all(self, x, axis_name: str):
+        """AllToAll of a per-device operand; same shape out. Semantics
+        ≡ `lax.all_to_all(x.reshape(num_blocks, -1), axis, 0, 0)` reshaped
+        back: with k = num_blocks / n, device d's output rows
+        [s·k, (s+1)·k) are device s's input rows [d·k, (d+1)·k) — the
+        standard split-axis-0/concat-axis-0 exchange. Diagonal chunks
+        never hit the wire (the lowered plan only ships off-diagonal
+        blocks; untouched rows keep the operand value, which IS the
+        diagonal). x.size must split into num_blocks equal chunks."""
+        if x.size % self.num_blocks:
+            raise LoweringError(
+                f"all_to_all operand of {x.size} elements does not split "
+                f"into {self.num_blocks} equal chunks")
+        self._check_family("all_to_all", ("all_to_all",))
+        self._check_axis(axis_name)
+        shape = x.shape
+        buf = x.reshape(self.num_blocks, -1)
+        with default_tracer().span("exec/all_to_all", plan=self.plan_name,
+                                   n=self.n, blocks=self.num_blocks):
+            buf = self._run_steps(self.ag, buf, axis_name, None,
+                                  phase="a2a")
+        return buf.reshape(shape)
+
+    def p2p(self, x, axis_name: str):
+        """Point-to-point exchange: each compiled (src, dst) edge replaces
+        dst's buffer with src's payload; devices with no incoming edge
+        keep x. Same shape out."""
+        self._check_family("p2p", ("p2p",))
+        self._check_axis(axis_name)
+        shape = x.shape
+        buf = x.reshape(1, -1)
+        with default_tracer().span("exec/p2p", plan=self.plan_name,
+                                   n=self.n):
+            buf = self._run_steps(self.ag, buf, axis_name, None,
+                                  phase="p2p")
+        return buf.reshape(shape)
 
     # ---- numpy execution (reference; tests) --------------------------------
     def _run_steps_numpy(self, steps: Sequence[ExecStep],
@@ -463,6 +519,7 @@ class CompiledSchedule:
         """Execute on a (n, size) matrix of per-device contributions;
         returns the (n, size) per-device results (all rows == column sums
         for a valid plan). Pure numpy mirror of the jax path."""
+        self._check_family("run_numpy", ("allreduce",))
         X = np.asarray(X)
         if X.shape[0] != self.n:
             raise LoweringError(f"expected {self.n} device rows")
@@ -576,8 +633,44 @@ def _movement_step(moves: list[tuple[int, int, int]], n: int) -> ExecStep:
                     folds=_build_folds(groups, inc, n))
 
 
+def _movement_step_remap(moves: list[tuple[int, int, int, int]],
+                         n: int) -> ExecStep:
+    """Movement step whose writes land at a DIFFERENT block row than the
+    one sent: `moves` carries (src, dst, src_block, dst_block). The
+    AllToAll lowering uses this — src ships its operand chunk for dst
+    (blocks in dst's range), and the copy lands in dst's buffer at src's
+    row (the split/concat transpose)."""
+    rounds, n_slots, slot_of = _color_rounds(
+        [(s, d, sb) for s, d, sb, _ in moves], n)
+    groups: dict[tuple[int, int], list[int]] = {}
+    inc: dict[tuple[int, int], bool] = {}
+    for mi, (s, d, _sb, db) in enumerate(moves):
+        groups[(d, db)] = [slot_of[mi]]
+        inc[(d, db)] = False
+    return ExecStep(rounds=rounds, n_slots=n_slots,
+                    folds=_build_folds(groups, inc, n))
+
+
 def _srv_names(mask: int, inv: Mapping[int, int]) -> list[int]:
     return [inv[m] for m in range(mask.bit_length()) if mask >> m & 1]
+
+
+def _op_blocks(op, si: int, what: str, nb: int,
+               unit: float) -> tuple[int, ...]:
+    if op.blocks is None:
+        raise LoweringError(
+            f"step {si}: {what} {op} is not block-annotated")
+    want = len(op.blocks) * unit
+    if abs(op.size - want) > 1e-6 * max(1.0, abs(want)):
+        raise LoweringError(
+            f"step {si}: {what} size {op.size} inconsistent with "
+            f"{len(op.blocks)} block(s) of {unit} units")
+    for b in op.blocks:
+        if not 0 <= b < nb:
+            raise LoweringError(
+                f"step {si}: {what} names block {b} outside "
+                f"0..{nb - 1}")
+    return op.blocks
 
 
 # ---------------------------------------------------------------------------
@@ -621,6 +714,11 @@ def _lower_plan_inner(plan: Plan,
             f"mesh indices 0..{n - 1}; got {mesh_of}")
     inv = {m: sid for sid, m in mesh_of.items()}
 
+    if plan.family in ("allgather", "all_to_all", "p2p"):
+        return _lower_movement_family(plan, mesh_of, inv)
+    if plan.family not in ("allreduce", "reduce_scatter"):
+        raise LoweringError(f"unknown plan family {plan.family!r}")
+
     nb = plan.num_blocks
     unit = plan.size / nb
     full = (1 << n) - 1
@@ -629,20 +727,7 @@ def _lower_plan_inner(plan: Plan,
     contrib = [[1 << m for _ in range(nb)] for m in range(n)]
 
     def _blocks_of(op, si: int, what: str) -> tuple[int, ...]:
-        if op.blocks is None:
-            raise LoweringError(
-                f"step {si}: {what} {op} is not block-annotated")
-        want = len(op.blocks) * unit
-        if abs(op.size - want) > 1e-6 * max(1.0, abs(want)):
-            raise LoweringError(
-                f"step {si}: {what} size {op.size} inconsistent with "
-                f"{len(op.blocks)} block(s) of {unit} units")
-        for b in op.blocks:
-            if not 0 <= b < nb:
-                raise LoweringError(
-                    f"step {si}: {what} names block {b} outside "
-                    f"0..{nb - 1}")
-        return op.blocks
+        return _op_blocks(op, si, what, nb, unit)
 
     exec_steps: list[ExecStep] = []
     last_fold_step = -1
@@ -727,15 +812,21 @@ def _lower_plan_inner(plan: Plan,
     # ---- completeness ------------------------------------------------------
     if last_fold_step < 0:
         raise LoweringError(
-            f"plan {plan.name!r} contains no reduces — not an AllReduce")
-    for m in range(n):
-        for b in range(nb):
-            if contrib[m][b] != full:
-                missing = _srv_names(full & ~contrib[m][b], inv)
-                raise LoweringError(
-                    f"incomplete gather: server {inv[m]} ends without the "
-                    f"contribution(s) of server(s) {missing} for block "
-                    f"{b}")
+            f"plan {plan.name!r} contains no reduces — not "
+            f"{'an AllReduce' if plan.family == 'allreduce' else 'a ReduceScatter'}")
+    if plan.family == "allreduce":
+        for m in range(n):
+            for b in range(nb):
+                if contrib[m][b] != full:
+                    missing = _srv_names(full & ~contrib[m][b], inv)
+                    raise LoweringError(
+                        f"incomplete gather: server {inv[m]} ends without "
+                        f"the contribution(s) of server(s) {missing} for "
+                        f"block {b}")
+    else:
+        # reduce_scatter family: the ownership layout is the END state —
+        # trailing movement steps (a builder's own reorder) count.
+        rs_contrib = [row[:] for row in contrib]
 
     # ---- ReduceScatter boundary + canonical shard layout -------------------
     owner = np.full(nb, -1, dtype=np.int64)
@@ -760,13 +851,176 @@ def _lower_plan_inner(plan: Plan,
             reorder = _movement_step(fwd, n)
             unorder = _movement_step([(d, s, b) for s, d, b in fwd], n)
 
+    if plan.family == "reduce_scatter":
+        # every step belongs to the RS half; nothing gathers afterwards
+        rs_steps, ag_steps = exec_steps, []
+    else:
+        rs_steps = exec_steps[:last_fold_step + 1]
+        ag_steps = exec_steps[last_fold_step + 1:]
     return CompiledSchedule(
         plan_name=plan.name, n=n, num_blocks=nb,
-        rs=exec_steps[:last_fold_step + 1],
-        ag=exec_steps[last_fold_step + 1:],
+        rs=rs_steps, ag=ag_steps,
         owner_of_block=owner, blocks_per_shard=blocks_per_shard,
         reorder=reorder, unorder=unorder,
-        placement=tuple(inv[m] for m in range(n)))
+        placement=tuple(inv[m] for m in range(n)),
+        family=plan.family)
+
+
+def _lower_movement_family(plan: Plan, mesh_of: Mapping[int, int],
+                           inv: Mapping[int, int]) -> CompiledSchedule:
+    """Lower a fold-free family (allgather / all_to_all / p2p).
+
+    allgather: each block's initial holder is INFERRED from the steps — a
+    server that sends a block before ever receiving it must have started
+    with it. Exactly one initial holder per block is required (the
+    `all_gather()` entry seeds the canonical shard and `unorder` ships
+    each block to that holder, so a second presumed holder would forward
+    garbage), and every server must end holding every block.
+
+    all_to_all: every transfer must ship blocks from the sender's operand
+    chunk for the destination (block b of src→dst needs dst·k ≤ b <
+    (dst+1)·k, k = num_blocks/n); the copy lands at dst row
+    src·k + (b − dst·k) — the split-0/concat-0 transpose. Completeness:
+    every off-diagonal row received exactly once. Only direct (single-hop)
+    plans lower; a hierarchical AllToAll prices fine but fails the chunk
+    check here by construction.
+
+    p2p: arbitrary edges, full buffer each; at most one incoming edge per
+    receiver per step. The edge list is kept on the schedule
+    (`perm_pairs`) for the guard's flat rung."""
+    n, nb, family = plan.n, plan.num_blocks, plan.family
+    unit = plan.size / nb
+    exec_steps: list[ExecStep] = []
+
+    def _expand(st, si):
+        moves: list[tuple[int, int, int]] = []
+        if st.reduces:
+            raise LoweringError(
+                f"step {si}: a {family!r}-family plan cannot fold "
+                f"(found {len(st.reduces)} reduce op(s))")
+        for t in st.transfers:
+            if t.src not in mesh_of or t.dst not in mesh_of:
+                raise LoweringError(
+                    f"step {si}: transfer {t.src}->{t.dst} uses a server "
+                    "id missing from the placement map")
+            for b in _op_blocks(t, si, "transfer", nb, unit):
+                moves.append((mesh_of[t.src], mesh_of[t.dst], b))
+        return moves
+
+    if family == "allgather":
+        holds = [[False] * nb for _ in range(n)]
+        initial = [[False] * nb for _ in range(n)]
+        for si, st in enumerate(plan.steps):
+            moves = _expand(st, si)
+            seen_writes: set[tuple[int, int]] = set()
+            for s, d, b in moves:
+                if not holds[s][b]:
+                    for m in range(n):
+                        if initial[m][b]:
+                            raise LoweringError(
+                                f"step {si}: block {b} would need to start "
+                                f"at both server {inv[m]} and server "
+                                f"{inv[s]} — ambiguous initial holder")
+                    holds[s][b] = True
+                    initial[s][b] = True
+                if (d, b) in seen_writes:
+                    raise LoweringError(
+                        f"step {si}: server {inv[d]} receives block {b} "
+                        "twice — ambiguous write")
+                seen_writes.add((d, b))
+            exec_steps.append(_movement_step(moves, n))
+            for _s, d, b in moves:
+                holds[d][b] = True
+        owner = np.full(nb, -1, dtype=np.int64)
+        for b in range(nb):
+            src = [m for m in range(n) if initial[m][b]]
+            if not src:
+                if n == 1:
+                    owner[b] = 0
+                    continue
+                raise LoweringError(
+                    f"block {b} is never transferred — no initial holder "
+                    "to gather it from")
+            owner[b] = src[0]
+            for m in range(n):
+                if not holds[m][b]:
+                    raise LoweringError(
+                        f"incomplete gather: server {inv[m]} ends without "
+                        f"block {b}")
+        blocks_per_shard = nb // n if nb % n == 0 else None
+        reorder = unorder = None
+        if blocks_per_shard:
+            k = blocks_per_shard
+            fwd = [(int(owner[b]), b // k, b) for b in range(nb)
+                   if int(owner[b]) != b // k]
+            if fwd:
+                reorder = _movement_step(fwd, n)
+                unorder = _movement_step([(d, s, b) for s, d, b in fwd], n)
+        return CompiledSchedule(
+            plan_name=plan.name, n=n, num_blocks=nb, rs=[], ag=exec_steps,
+            owner_of_block=owner, blocks_per_shard=blocks_per_shard,
+            reorder=reorder, unorder=unorder,
+            placement=tuple(inv[m] for m in range(n)), family=family)
+
+    if family == "all_to_all":
+        if nb % n:
+            raise LoweringError(
+                f"all_to_all plan {plan.name!r} needs num_blocks ({nb}) "
+                f"divisible by n ({n})")
+        k = nb // n
+        received: set[tuple[int, int]] = set()
+        for si, st in enumerate(plan.steps):
+            moves4: list[tuple[int, int, int, int]] = []
+            for s, d, b in _expand(st, si):
+                if not d * k <= b < (d + 1) * k:
+                    raise LoweringError(
+                        f"step {si}: transfer {inv[s]}->{inv[d]} ships "
+                        f"block {b} outside the destination chunk "
+                        f"[{d * k}, {(d + 1) * k}) — only direct "
+                        "(single-hop) all_to_all plans lower")
+                row = s * k + (b - d * k)
+                if (d, row) in received:
+                    raise LoweringError(
+                        f"step {si}: server {inv[d]} receives output row "
+                        f"{row} twice — ambiguous write")
+                received.add((d, row))
+                moves4.append((s, d, b, row))
+            exec_steps.append(_movement_step_remap(moves4, n))
+        for d in range(n):
+            for s in range(n):
+                if s == d:
+                    continue    # diagonal chunk never hits the wire
+                for j in range(k):
+                    if (d, s * k + j) not in received:
+                        raise LoweringError(
+                            f"incomplete all_to_all: server {inv[d]} never "
+                            f"receives row {s * k + j} (chunk of server "
+                            f"{inv[s]})")
+        return CompiledSchedule(
+            plan_name=plan.name, n=n, num_blocks=nb, rs=[], ag=exec_steps,
+            owner_of_block=np.arange(nb, dtype=np.int64) // k,
+            blocks_per_shard=None, reorder=None, unorder=None,
+            placement=tuple(inv[m] for m in range(n)), family=family)
+
+    # p2p
+    pairs: list[tuple[int, int]] = []
+    for si, st in enumerate(plan.steps):
+        moves = _expand(st, si)
+        dsts: set[int] = set()
+        for s, d, _b in moves:
+            if d in dsts:
+                raise LoweringError(
+                    f"step {si}: server {inv[d]} receives two p2p "
+                    "payloads — ambiguous write")
+            dsts.add(d)
+            pairs.append((s, d))
+        exec_steps.append(_movement_step(moves, n))
+    return CompiledSchedule(
+        plan_name=plan.name, n=n, num_blocks=nb, rs=[], ag=exec_steps,
+        owner_of_block=np.zeros(nb, dtype=np.int64),
+        blocks_per_shard=None, reorder=None, unorder=None,
+        placement=tuple(inv[m] for m in range(n)), family=family,
+        perm_pairs=tuple(pairs))
 
 
 # ---------------------------------------------------------------------------
@@ -822,7 +1076,9 @@ class GuardedSchedule:
         self._full = None               # lazy full-precision rung
         self.stats = {"launches": 0, "retries": 0, "fallbacks": 0,
                       "timeouts": 0, "demoted_launches": 0,
-                      "wire_fallbacks": 0, "wire_demoted_launches": 0}
+                      "wire_fallbacks": 0, "wire_demoted_launches": 0,
+                      "reprobes": 0}
+        _GUARD_REGISTRY.add(self)
 
     def __getattr__(self, name):
         inner = self.__dict__.get("inner")
@@ -1020,11 +1276,82 @@ class GuardedSchedule:
                 flat_ag)
         return self._guarded("all_gather", attempt, flat_ag)
 
+    def all_to_all(self, x, axis_name: str):
+        def flat_a2a():
+            from jax import lax
+            nb = self.inner.num_blocks
+            return lax.all_to_all(x.reshape(nb, -1), axis_name, 0,
+                                  0).reshape(x.shape)
+
+        attempt = lambda: self.inner.all_to_all(x, axis_name)  # noqa: E731
+        if getattr(self.inner, "wire", None) is not None:
+            return self._guarded_wire(
+                "all_to_all", attempt,
+                lambda: self._full_rung().all_to_all(x, axis_name),
+                flat_a2a)
+        return self._guarded("all_to_all", attempt, flat_a2a)
+
+    def p2p(self, x, axis_name: str):
+        def flat_p2p():
+            import jax.numpy as jnp
+            from jax import lax
+            pairs = list(self.inner.perm_pairs or ())
+            if not pairs:
+                return x
+            recv = lax.ppermute(x, axis_name, pairs)
+            has_in = np.zeros(self.inner.n, dtype=bool)
+            for _s, d in pairs:
+                has_in[d] = True
+            idx = lax.axis_index(axis_name)
+            return jnp.where(jnp.asarray(has_in)[idx], recv, x)
+
+        attempt = lambda: self.inner.p2p(x, axis_name)  # noqa: E731
+        if getattr(self.inner, "wire", None) is not None:
+            return self._guarded_wire(
+                "p2p", attempt,
+                lambda: self._full_rung().p2p(x, axis_name),
+                flat_p2p)
+        return self._guarded("p2p", attempt, flat_p2p)
+
     def run_numpy(self, X: np.ndarray) -> np.ndarray:
         # reference path: guard machinery applies (bench measures its
         # overhead here) but there is no flat numpy rung — errors raise
         return self._guarded("run_numpy",
                              lambda: self.inner.run_numpy(X), None)
+
+
+# Every live guard, for health-restoration re-probes. Guards stay alive
+# exactly as long as their schedule (guard_schedule memoizes the wrapper
+# on the schedule object), so a WeakSet tracks precisely the schedules
+# still cached somewhere.
+_GUARD_REGISTRY: "weakref.WeakSet[GuardedSchedule]" = weakref.WeakSet()
+
+
+def reprobe_guards(reason: str = "health_restore") -> int:
+    """Re-arm every live demoted guard (DESIGN.md §12): sticky demotion
+    exists so a *persistently* failing schedule costs one failed attempt
+    instead of one per step — but after a `link_restore` / remesh the
+    fault that caused the demotion is gone, and staying pinned to the
+    flat rung forever forfeits the planned schedule's speedup.
+    `PlannerService.mark_degraded(level, factor >= 1)` (the restore path
+    `runtime.ft` drives on link_restore events) and `clear_degraded` call
+    this, so the next launch re-probes the planned (and compressed) rung.
+    Returns the number of guards re-armed."""
+    cleared = 0
+    for g in list(_GUARD_REGISTRY):
+        if g._demoted or g._wire_demoted:
+            g.reset_guard()
+            g.stats["reprobes"] += 1
+            cleared += 1
+    if cleared:
+        from repro.runtime.metrics import default_metrics
+        default_metrics().counter(
+            "guarded_reprobes_total",
+            "demoted guards re-armed by health-restoration events"
+        ).inc(cleared)
+        default_tracer().instant("guard/reprobe", reason=reason,
+                                 cleared=cleared)
+    return cleared
 
 
 def guard_schedule(schedule, *, telemetry=None, policy=None):

@@ -26,6 +26,22 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+# Collective families a Plan can describe (DESIGN.md §14). The cost
+# engines are family-agnostic — they price whatever steps the plan
+# contains — but `core.lower` validates and compiles each family against
+# its own dataflow contract:
+#   allreduce      — every contribution of every block reduced once, then
+#                    every server holds every block (the PR-3 contract);
+#   reduce_scatter — the RS half alone: each block fully reduced at ≥1
+#                    holder; output is the canonical shard per server;
+#   allgather      — movement only: initial holders are inferred from the
+#                    steps, and every server must end holding every block;
+#   all_to_all     — movement only: block b of src's operand row for dst
+#                    lands at dst as src's row (lax.all_to_all semantics);
+#   p2p            — movement only: each (src, dst) edge replaces dst's
+#                    buffer with src's payload (pipeline boundary shift).
+FAMILIES = ("allreduce", "reduce_scatter", "allgather", "all_to_all", "p2p")
+
 
 @dataclass(frozen=True)
 class Transfer:
@@ -129,6 +145,10 @@ class Plan:
     # into num_blocks equal shards, indexed 0..num_blocks-1. None marks a
     # legacy/unannotated plan (prices fine, cannot be lowered).
     num_blocks: int | None = None
+    # Which collective this plan computes (one of FAMILIES). Pricing walks
+    # the steps either way; lowering and the execution entry points key off
+    # this to pick the right validation contract and runtime surface.
+    family: str = "allreduce"
 
     def ids(self) -> list[int]:
         return self.servers if self.servers is not None else list(range(self.n))
@@ -390,6 +410,164 @@ def hcps(factors: list[int], size: float,
         p.steps.append(st)
         shard = shard * f
     return p
+
+
+# ---------------------------------------------------------------------------
+# Per-family builders (DESIGN.md §14). `size` follows each family's natural
+# operand convention:
+#   allgather_plan      — size = the FULL result vector (each server starts
+#                         with its 1/n shard and ends with all of it);
+#   reduce_scatter_plan — size = the full per-server input vector (each
+#                         server ends with its reduced 1/n shard);
+#   alltoall_plan       — size = the per-server operand (each server ships
+#                         (n-1)/n of it and keeps its diagonal chunk);
+#   p2p_plan            — size = the full buffer each edge moves.
+# The evaluators need no changes: wire bytes, incast fan-in and memory
+# passes fall out of the steps themselves (AG moves (n-1)/n of the result,
+# AllToAll (n-1)/n of the operand, and neither folds anything).
+# ---------------------------------------------------------------------------
+def allgather_plan(n: int, size: float, servers: list[int] | None = None,
+                   strategy: str = "ring") -> Plan:
+    """Standalone AllGather: server i starts holding block i of the
+    `size`-unit result; after the plan every server holds every block.
+
+    strategy="ring": n-1 rounds of neighbor forwarding (block (i - a) mod n
+    moves i → i+1 at round a — the AG half of the ring walk). "mesh": one
+    full-mesh round (the CPS AG half: fan-in n-1, one α)."""
+    ids = servers if servers is not None else list(range(n))
+    blk = size / n
+    p = Plan(f"allgather_{strategy}", n, size, servers=servers,
+             num_blocks=n, family="allgather")
+    if n == 1:
+        return p
+    if strategy == "mesh":
+        st = Step()
+        for i in range(n):
+            for j in range(n):
+                if i != j:
+                    st.transfers.append(Transfer(ids[i], ids[j], blk,
+                                                 blocks=(i,)))
+        p.steps.append(st)
+    elif strategy == "ring":
+        for a in range(n - 1):
+            st = Step()
+            for i in range(n):
+                b = (i - a) % n
+                st.transfers.append(Transfer(ids[i], ids[(i + 1) % n], blk,
+                                             blocks=(b,)))
+            p.steps.append(st)
+    else:
+        raise ValueError(f"unknown allgather strategy: {strategy!r}")
+    return p
+
+
+def reduce_scatter_plan(n: int, size: float,
+                        servers: list[int] | None = None,
+                        strategy: str = "ring") -> Plan:
+    """Standalone ReduceScatter: every server contributes a `size`-unit
+    vector; server i ends owning the fully-reduced block i (canonical
+    shard — `core.lower` appends the reorder movement when the walk's
+    natural owner differs).
+
+    strategy="ring": the n-1 fold rounds of the ring walk. "mesh": one
+    full-mesh round (the CPS RS half, fan-in n)."""
+    ids = servers if servers is not None else list(range(n))
+    blk = size / n
+    p = Plan(f"reduce_scatter_{strategy}", n, size, servers=servers,
+             num_blocks=n, family="reduce_scatter")
+    if n == 1:
+        return p
+    if strategy == "mesh":
+        st = Step()
+        for i in range(n):
+            for j in range(n):
+                if i != j:
+                    st.transfers.append(Transfer(ids[i], ids[j], blk,
+                                                 blocks=(j,)))
+            st.reduces.append(ReduceOp(ids[i], n, blk, blocks=(i,)))
+        p.steps.append(st)
+    elif strategy == "ring":
+        for s in range(n - 1):
+            st = Step()
+            for i in range(n):
+                b = (i - s) % n
+                st.transfers.append(Transfer(ids[i], ids[(i + 1) % n], blk,
+                                             blocks=(b,)))
+                st.reduces.append(ReduceOp(ids[(i + 1) % n], 2, blk,
+                                           blocks=(b,)))
+            p.steps.append(st)
+    else:
+        raise ValueError(f"unknown reduce_scatter strategy: {strategy!r}")
+    return p
+
+
+def alltoall_plan(n: int, size: float,
+                  servers: list[int] | None = None) -> Plan:
+    """Single-switch AllToAll: each server's `size`-unit operand is split
+    into n destination chunks (block j = the chunk bound for server j);
+    one full-mesh round ships the n-1 off-diagonal chunks — (n-1)/n·size
+    wire units per server, fan-in n-1, zero reduces. Matches
+    `lax.all_to_all(x.reshape(n, -1), axis, 0, 0)` up to the row→chunk
+    transpose the lowered schedule performs."""
+    ids = servers if servers is not None else list(range(n))
+    blk = size / n
+    p = Plan("alltoall", n, size, servers=servers, num_blocks=n,
+             family="all_to_all")
+    if n == 1:
+        return p
+    st = Step()
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                st.transfers.append(Transfer(ids[i], ids[j], blk,
+                                             blocks=(j,)))
+    p.steps.append(st)
+    return p
+
+
+def p2p_plan(n: int, size: float, servers: list[int] | None = None,
+             pairs: list[tuple[int, int]] | None = None) -> Plan:
+    """Point-to-point exchange: each (src, dst) pair moves the full
+    `size`-unit buffer in one round — the pipeline-parallel boundary
+    shift. Default pairs: the ring shift i → (i+1) mod n. Indices in
+    `pairs` are positions (0..n-1), mapped through `servers`."""
+    ids = servers if servers is not None else list(range(n))
+    if pairs is None:
+        pairs = [(i, (i + 1) % n) for i in range(n)] if n > 1 else []
+    p = Plan("p2p", n, size, servers=servers, num_blocks=1, family="p2p")
+    if not pairs:
+        return p
+    st = Step()
+    for s, d in pairs:
+        if s == d:
+            raise ValueError(f"p2p pair with src == dst: {s}")
+        st.transfers.append(Transfer(ids[s], ids[d], size, blocks=(0,)))
+    p.steps.append(st)
+    return p
+
+
+def family_halves(plan: Plan) -> tuple[Plan, Plan]:
+    """Kolmakov–Zhang decomposition (arXiv 2004.09362): split a
+    block-annotated AllReduce plan at its last folding step into the
+    standalone ReduceScatter-family prefix and the AllGather-family
+    suffix. The AG half starts from the RS half's ownership layout —
+    `core.lower` infers each block's initial holder from the steps, so
+    any GenTree/builder AllReduce yields a lowerable RS and AG plan for
+    free. Steps are shared by reference (treat them as read-only)."""
+    if plan.family != "allreduce":
+        raise ValueError(f"family_halves needs an allreduce plan, "
+                         f"got family={plan.family!r}")
+    folds = [i for i, st in enumerate(plan.steps) if st.reduces]
+    if not folds:
+        raise ValueError(f"plan {plan.name} has no reduces — cannot split")
+    cut = folds[-1] + 1
+    rs = Plan(plan.name + ":rs", plan.n, plan.size, steps=plan.steps[:cut],
+              servers=plan.servers, num_blocks=plan.num_blocks,
+              family="reduce_scatter")
+    ag = Plan(plan.name + ":ag", plan.n, plan.size, steps=plan.steps[cut:],
+              servers=plan.servers, num_blocks=plan.num_blocks,
+              family="allgather")
+    return rs, ag
 
 
 def factorizations(n: int, max_factor: int | None = None,

@@ -267,6 +267,24 @@ class FastEngine:
         compiled step list (the GenTree per-switch search path)."""
         return [self.total(compiled) for compiled in batch]
 
+    def halves_totals(self, plan: Plan) -> tuple[float, float]:
+        """(t_rs, t_ag): the plan priced as its two pipeline stages.
+
+        An allreduce plan splits at its Kolmakov–Zhang cut (the last
+        fold step — `plans.family_halves`), the stages `bucketing.
+        pipelined_time` and `get_step_plan` overlap. A standalone
+        family plan prices entirely on its own side; pure-movement
+        families (allgather/all_to_all/p2p) count as AG-stage work."""
+        from .plans import family_halves
+        if plan.family == "allreduce":
+            rs, ag = family_halves(plan)
+            return (self.total(self.compile_plan(rs)),
+                    self.total(self.compile_plan(ag)))
+        t = self.total(self.compile_plan(plan))
+        if plan.family == "reduce_scatter":
+            return t, 0.0
+        return 0.0, t
+
     def simulate(self, plan: Plan):
         """Full SimResult, field-for-field compatible with the reference."""
         from .simulator import SimResult

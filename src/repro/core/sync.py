@@ -208,6 +208,56 @@ def resolve_axis_plans(axes: Sequence[tuple[str, int]], cfg: "SyncConfig",
     return [axis_plan(a, n) for a, n in axes if n > 1]
 
 
+# ---------------------------------------------------------------------------
+# Expert-parallel AllToAll context (ISSUE 9 tentpole): the trainer opens
+# `expert_parallel(...)` around loss tracing so the MoE layer's dispatch/
+# combine exchanges run over the right mesh axis — and, under
+# strategy="plan", from the lowered all_to_all plan instead of
+# lax.all_to_all. Trace-time state, like the plan lookups themselves.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class EPContext:
+    axis: str                       # mesh axis the experts shard over
+    size: int                       # axis size (number of expert groups)
+    # lowered family="all_to_all" CompiledSchedule (possibly guarded);
+    # None ⇒ lax.all_to_all
+    schedule: object | None = None
+
+
+_EP_CONTEXT: list = [None]
+
+
+def ep_context() -> EPContext | None:
+    """The active expert-parallel context, if any (trace-time)."""
+    return _EP_CONTEXT[0]
+
+
+class expert_parallel:
+    """Context manager installing an EPContext for the enclosed trace."""
+
+    def __init__(self, axis: str, size: int, schedule=None):
+        self._ctx = EPContext(axis, int(size), schedule)
+        self._prev = None
+
+    def __enter__(self) -> EPContext:
+        self._prev = _EP_CONTEXT[0]
+        _EP_CONTEXT[0] = self._ctx
+        return self._ctx
+
+    def __exit__(self, *exc):
+        _EP_CONTEXT[0] = self._prev
+        return False
+
+
+def ep_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """AllToAll for the MoE dispatch/combine: the active EPContext's
+    planned schedule when it matches `axis_name`, lax otherwise."""
+    ctx = _EP_CONTEXT[0]
+    sched = ctx.schedule if ctx is not None and ctx.axis == axis_name \
+        else None
+    return collectives.all_to_all(x, axis_name, schedule=sched)
+
+
 def _quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)

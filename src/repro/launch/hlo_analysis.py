@@ -13,9 +13,17 @@ Per-module accounting (per device, SPMD):
   * HBM bytes  — Σ (operand + result bytes) over top-level compute ops;
     fusions count once at the call site (a fusion is one HBM pass), their
     internals contribute FLOPs only;
-  * collective bytes — operand bytes of all-reduce / reduce-scatter /
-    all-to-all / collective-permute, result bytes of all-gather (the wire
-    cost of gathering is the gathered size), × trip counts.
+  * collective bytes — actual WIRE bytes per device, matching the
+    GenModel planner's convention (core.cost_model.family_wire_bytes):
+    all-reduce moves 2(n-1)/n·M, reduce-scatter / all-gather /
+    all-to-all move (n-1)/n·M, collective-permute moves M — where M is
+    the payload (operand bytes; the gathered RESULT bytes for
+    all-gather) and n the replica-group size parsed from the
+    instruction's `replica_groups`. When the group size cannot be
+    determined (`replica_groups={}` = all devices) the asymptotic
+    (n-1)/n → 1 factors apply. Raw payloads are kept alongside in
+    `ModuleStats.coll_payload_by_kind` so `mix_from_stats` can hand the
+    whole-step planner per-family payload sizes, × trip counts.
 
 Roofline terms (TPU v5e-class constants):
   compute   = FLOPs_total / (chips × 197 TFLOP/s)
@@ -28,6 +36,8 @@ import dataclasses
 import json
 import re
 from typing import Any
+
+from repro.core.cost_model import family_wire_bytes
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
@@ -233,6 +243,36 @@ def parse_module(hlo: str) -> tuple[dict[str, Computation], str]:
 
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
 
+# replica_groups={{0,1,2,3},{4,5,6,7}} — explicit list-of-lists form
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+# replica_groups=[2,4]<=[8] — iota form, shape (num_groups, group_size)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([\d,]+)\]<=")
+
+
+def _group_size(line: str) -> int:
+    """Replica-group size of a collective instruction, 0 if unknown
+    (`replica_groups={}` means one group spanning every device)."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([d for d in m.group(1).split(",") if d])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(d) for d in m.group(1).split(",") if d]
+        if dims:
+            return dims[-1]
+    return 0
+
+
+def _wire_bytes(kind: str, n: int, payload: float) -> float:
+    """Per-device wire bytes for `payload` bytes of collective `kind`
+    over an n-member group; n == 0 (unknown size) uses the asymptotic
+    (n-1)/n → 1 factors so the estimate stays an upper bound."""
+    if n > 0:
+        return family_wire_bytes(kind, n, payload)
+    if kind == "all-reduce":
+        return 2.0 * payload
+    return float(payload)
+
 
 def _trip_count(ins: Instr, comps: dict[str, Computation]) -> int:
     m = _TRIP_RE.search(ins.line)
@@ -274,11 +314,18 @@ class ModuleStats:
     coll_bytes: float = 0.0
     coll_by_kind: dict[str, float] = dataclasses.field(default_factory=dict)
     coll_counts: dict[str, int] = dataclasses.field(default_factory=dict)
+    # raw payload bytes (the planner's M) — wire bytes live in coll_by_kind
+    coll_payload_by_kind: dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
-    def add_coll(self, kind: str, b: float, n: int = 1) -> None:
+    def add_coll(self, kind: str, b: float, n: int = 1,
+                 payload: float | None = None) -> None:
         self.coll_bytes += b
         self.coll_by_kind[kind] = self.coll_by_kind.get(kind, 0.0) + b
         self.coll_counts[kind] = self.coll_counts.get(kind, 0) + n
+        self.coll_payload_by_kind[kind] = \
+            self.coll_payload_by_kind.get(kind, 0.0) \
+            + (b if payload is None else payload)
 
 
 def analyze_hlo(hlo: str, breakdown: dict | None = None) -> ModuleStats:
@@ -316,6 +363,9 @@ def analyze_hlo(hlo: str, breakdown: dict | None = None) -> ModuleStats:
                     for k, v in sub.coll_counts.items():
                         s.coll_counts[k] = s.coll_counts.get(k, 0) \
                             + v * trips
+                    for k, v in sub.coll_payload_by_kind.items():
+                        s.coll_payload_by_kind[k] = \
+                            s.coll_payload_by_kind.get(k, 0.0) + v * trips
                 continue
             if op == "fusion":
                 fm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
@@ -336,16 +386,29 @@ def analyze_hlo(hlo: str, breakdown: dict | None = None) -> ModuleStats:
                             s.flops += sub.flops
                             s.hbm_bytes += sub.hbm_bytes
                             s.coll_bytes += sub.coll_bytes
+                            for k, v in sub.coll_by_kind.items():
+                                s.coll_by_kind[k] = \
+                                    s.coll_by_kind.get(k, 0.0) + v
+                            for k, v in sub.coll_counts.items():
+                                s.coll_counts[k] = \
+                                    s.coll_counts.get(k, 0) + v
+                            for k, v in sub.coll_payload_by_kind.items():
+                                s.coll_payload_by_kind[k] = \
+                                    s.coll_payload_by_kind.get(k, 0.0) + v
                 continue
             base = op.replace("-start", "")
             if base in _COLLECTIVES:
                 if op.endswith("-done"):
                     continue
+                # payload M: full operand bytes, except all-gather whose
+                # natural payload is the gathered RESULT
                 if base == "all-gather":
-                    b = _shape_bytes(ins.result_type)
+                    payload = float(_shape_bytes(ins.result_type))
                 else:
-                    b = comp.operand_bytes(ins)
-                s.add_coll(base, float(b))
+                    payload = float(comp.operand_bytes(ins))
+                ng = _group_size(ins.line)
+                s.add_coll(base, _wire_bytes(base, ng, payload),
+                           payload=payload)
                 if not in_fusion:
                     s.hbm_bytes += comp.operand_bytes(ins) \
                         + _shape_bytes(ins.result_type)
@@ -368,6 +431,34 @@ def analyze_hlo(hlo: str, breakdown: dict | None = None) -> ModuleStats:
 
     top = visit(entry, False)
     return top
+
+
+# HLO op spelling → plan-IR family name (core.plans.FAMILIES)
+_KIND_TO_FAMILY = {
+    "all-reduce": "allreduce",
+    "reduce-scatter": "reduce_scatter",
+    "all-gather": "allgather",
+    "all-to-all": "all_to_all",
+    "collective-permute": "p2p",
+}
+
+
+def mix_from_stats(stats: ModuleStats, dsize: int = 4) -> dict:
+    """Collective mix for `PlannerService.get_step_plan`: per family, the
+    call count and the MEAN per-call payload in element units (raw
+    payload bytes / count / dsize) — the planner re-prices wire bytes
+    itself from the payload, so the wire-convention fix never double
+    applies."""
+    mix: dict[str, dict[str, float]] = {}
+    for kind, cnt in stats.coll_counts.items():
+        fam = _KIND_TO_FAMILY.get(kind)
+        if fam is None or cnt <= 0:
+            continue
+        payload = stats.coll_payload_by_kind.get(
+            kind, stats.coll_by_kind.get(kind, 0.0))
+        mix[fam] = {"count": int(cnt),
+                    "size_floats": float(payload) / cnt / dsize}
+    return mix
 
 
 @dataclasses.dataclass

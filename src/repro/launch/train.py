@@ -114,21 +114,13 @@ def shard_params_zero3(params: Any, mesh: Mesh) -> Any:
 def _gather_leaf(shard: jax.Array, shape, dtype, plans: Sequence[AxisPlan]):
     flat = shard
     for pl in plans:
-        if pl.strategy in ("psum", "auto"):
-            flat = jax.lax.all_gather(flat, pl.axis, axis=0, tiled=True)
-        elif pl.strategy == "ring":
-            flat = collectives.all_gather_ring(flat, pl.axis)
-        elif pl.strategy == "rhd":
-            flat = collectives.all_gather_rhd(flat, pl.axis)
-        elif pl.strategy == "cps":
-            flat = collectives.all_gather_cps(flat, pl.axis)
-        elif pl.strategy == "hcps":
-            flat = collectives.all_gather_hcps(flat, pl.axis, pl.factors)
-        elif pl.strategy == "plan":
-            # executed GenTree plan: the lowered schedule's AllGather half
-            flat = pl.schedule.all_gather(flat, pl.axis)
-        else:
-            raise ValueError(pl.strategy)
+        # collectives.all_gather inverts _scatter_leaf's reduce_scatter
+        # per strategy — including the hcps un-reorder back to native
+        # holder order (gathering with all_gather_hcps directly permutes
+        # the result, since reduce_scatter hands back natural shards)
+        flat = collectives.all_gather(flat, pl.axis, pl.strategy,
+                                      factors=pl.factors,
+                                      schedule=pl.schedule)
     n = 1
     for s in shape:
         n *= s
@@ -250,6 +242,33 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
                 for pl in bp.axis_plans])
         return bp
 
+    # Expert-parallel MoE (ISSUE 9 tentpole): when the model routes
+    # experts and they shard evenly over the leaf DP axis, the MoE layer
+    # dispatches with AllToAll inside this engine's shard_map — executed
+    # from a lowered family="all_to_all" plan under strategy="plan"
+    # (guarded like every other planned collective), lax.all_to_all
+    # otherwise.
+    ep_axis, ep_n = (axes[0] if axes else (None, 1))
+    use_ep = (getattr(api.cfg, "n_experts", 0) > 1 and ep_axis is not None
+              and ep_n > 1 and api.cfg.n_experts % ep_n == 0)
+    ep_sched = None
+    if use_ep and sync.strategy == "plan":
+        svc = planner
+        if svc is None:
+            from repro.planner.service import default_service
+            svc = default_service()
+        try:
+            resp = svc.get_family_executable(
+                "all_to_all", ep_axis, ep_n, total_f32_equiv or 1.0,
+                params=sync.params)
+            ep_sched = resp.schedule
+            if ep_sched is not None and getattr(sync, "guard", True):
+                from repro.core.lower import guard_schedule
+                ep_sched = guard_schedule(
+                    ep_sched, telemetry=getattr(svc, "telemetry", None))
+        except Exception:
+            ep_sched = None           # lax.all_to_all fallback
+
     def step(state, batch):
         from repro.models import actsharding
         actsharding.set_hook(None)    # shard_map bodies are fully manual
@@ -272,8 +291,16 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
                     for s, sd in zip(flat_shards, flat_sd)]
             params = jax.tree.unflatten(jax.tree.structure(p_shards),
                                         gathered)
-            loss, grads = jax.value_and_grad(
-                lambda p: api.loss_fn(p, batch_local, remat=True))(params)
+            if use_ep:
+                from repro.core import sync as sync_mod
+                with sync_mod.expert_parallel(ep_axis, ep_n, ep_sched):
+                    loss, grads = jax.value_and_grad(
+                        lambda p: api.loss_fn(p, batch_local, remat=True,
+                                              moe_dispatch="ep"))(params)
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: api.loss_fn(p, batch_local,
+                                          remat=True))(params)
             # mean over DP shards happens inside the reduce; rescale
             if bplan is not None:
                 rows = bucketing.zero3_scatter_bucketed(

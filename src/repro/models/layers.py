@@ -477,13 +477,123 @@ def _moe_local_shardmap(p, xt, topi, topv, cfg, E, k, D,
     )(p, xt, topi, topv)
 
 
+def _moe_ep_block(xt, topi, topv, wi, wg, wo, ndev: int, E: int, k: int,
+                  D: int, capacity_factor: float, a2a) -> jax.Array:
+    """One device's expert-parallel dispatch (runs inside shard_map).
+
+    Local tokens pack into the per-GLOBAL-expert capacity buffer (same
+    sort-based pack as `_moe_sorted_block`), the buffer's per-owner
+    chunks AllToAll to the expert owners, each owner runs its E/ndev
+    local experts (weights `wi`/`wg`/`wo` are the LOCAL slices), and the
+    outputs AllToAll back into the original buffer layout for the
+    gather-based combine. `a2a` is the exchange callable — planned
+    schedule or lax.all_to_all via `core.sync.ep_all_to_all`."""
+    n = xt.shape[0]
+    e_local = E // ndev
+    cap = int(n * k * capacity_factor / E) + 1
+    cap = max(8, -(-cap // 8) * 8)                       # round up to 8
+    e_flat = topi.reshape(-1)                            # (n·k,)
+    order = jnp.argsort(e_flat)
+    sorted_e = e_flat[order]
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(n * k) - starts[sorted_e]
+    keep = rank < cap
+    buf_idx = jnp.where(keep, sorted_e * cap + rank, E * cap)  # spill row
+    tok_idx = order // k
+    buf = jnp.zeros((E * cap + 1, D), xt.dtype)
+    buf = buf.at[buf_idx].set(xt[tok_idx], mode="drop")
+    # owner-major: row j = my capacity rows for owner j's expert group
+    send = buf[: E * cap].reshape(ndev, e_local * cap * D)
+    recv = a2a(send)                  # row s = device s's rows for ME
+    eb = recv.reshape(ndev, e_local, cap, D).transpose(1, 0, 2, 3) \
+             .reshape(e_local, ndev * cap, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, wg)) * \
+        jnp.einsum("ecd,edf->ecf", eb, wi)
+    y = jnp.einsum("ecf,efd->ecd", h, wo)                # (e_local, n·cap, D)
+    back = y.reshape(e_local, ndev, cap, D).transpose(1, 0, 2, 3) \
+            .reshape(ndev, e_local * cap * D)
+    got = a2a(back).reshape(E * cap, D)   # my buffer layout, expert outputs
+    inv = jnp.argsort(order)
+    slot_buf = jnp.take(buf_idx, inv)
+    slot_keep = jnp.take(keep, inv)
+    rows = jnp.take(got, jnp.minimum(slot_buf, E * cap - 1), axis=0)
+    rows = jnp.where(slot_keep[:, None], rows.astype(jnp.float32), 0.0)
+    return jnp.einsum("nkd,nk->nd", rows.reshape(n, k, D),
+                      topv.astype(jnp.float32))
+
+
+def _moe_ep(p, xt, topi, topv, cfg, E, k, D, capacity_factor) -> jax.Array:
+    """Expert-parallel MoE dispatch (the planned-AllToAll path, ISSUE 9).
+
+    Two entry contexts:
+      * inside the manual trainer's shard_map — `core.sync.ep_context()`
+        is set: params are the ZeRO-gathered FULL weights, so each device
+        slices its expert group by axis index and exchanges over the
+        context's axis (planned schedule when the context carries one);
+      * under GSPMD jit — wraps a shard_map over the single live DP axis
+        with the expert dim sharded in-spec.
+    Falls back to the sorted/local paths when the expert count doesn't
+    shard evenly or the mesh shape doesn't fit."""
+    from repro.core import sync as _sync
+    ep = _sync.ep_context()
+    if ep is not None:
+        if ep.size <= 1 or E % ep.size:
+            return _moe_sorted_block(xt, topi, topv, p, E, k, D,
+                                     capacity_factor)
+        e_local = E // ep.size
+        idx = lax.axis_index(ep.axis)
+
+        def sl(w):
+            return lax.dynamic_slice_in_dim(w, idx * e_local, e_local, 0)
+
+        return _moe_ep_block(xt, topi, topv, sl(p["wi"]), sl(p["wg"]),
+                             sl(p["wo"]), ep.size, E, k, D,
+                             capacity_factor,
+                             lambda v: _sync.ep_all_to_all(v, ep.axis))
+    from jax.sharding import PartitionSpec as P
+    from . import actsharding
+    ctx = actsharding.mesh_ctx()
+    n = xt.shape[0]
+    if ctx is None:
+        return _moe_sorted_block(xt, topi, topv, p, E, k, D,
+                                 capacity_factor)
+    mesh, dp = ctx
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    live = [a for a in dp if sizes[a] > 1]
+    if len(live) != 1 or E % sizes[live[0]] or n % sizes[live[0]] \
+            or n == sizes[live[0]]:
+        return _moe_local_shardmap(p, xt, topi, topv, cfg, E, k, D,
+                                   capacity_factor)
+    axis, ndev = live[0], sizes[live[0]]
+
+    def local(wi, wg, wo, xt_l, ti_l, tv_l):
+        from repro.core import sync as _s
+        return _moe_ep_block(xt_l, ti_l, tv_l, wi, wg, wo, ndev, E, k, D,
+                             capacity_factor,
+                             lambda v: _s.ep_all_to_all(v, axis))
+
+    from repro.core.compat import shard_map
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis),
+                  P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=P(axis, None),
+        axis_names={axis},
+        check_vma=False,
+    )(p["wi"], p["wg"], p["wo"], xt, topi, topv)
+
+
 def moe(p: Params, x: jax.Array, cfg: ModelConfig, *,
         dispatch: str = "sorted", capacity_factor: float = 1.25
         ) -> jax.Array:
     """x: (B, T, D). dispatch: "sorted" (capacity-bounded sort-based pack,
-    FLOPs ≈ active-expert FLOPs × capacity factor) or "dense" (computes all
+    FLOPs ≈ active-expert FLOPs × capacity factor), "dense" (computes all
     experts everywhere and masks — robust but E/top_k × wasteful; kept as
-    the hillclimb baseline).
+    the hillclimb baseline), or "ep" (expert-parallel: the sorted pack's
+    capacity buffer exchanged owner-major over `sync.ep_all_to_all` so
+    each device computes only its expert shard — DESIGN.md §14; falls
+    back to the local sorted block when no EP context / mesh fits).
 
     cfg.moe_groups > 0 blocks the dispatch into G groups sorted
     independently (per-group capacity): a global argsort over the sharded
@@ -507,6 +617,8 @@ def moe(p: Params, x: jax.Array, cfg: ModelConfig, *,
         h = jax.nn.silu(h) * jnp.einsum("nd,edf->nef", xt, p["wi"])
         y = jnp.einsum("nef,efd->ned", h, p["wo"])
         out = jnp.einsum("ned,ne->nd", y.astype(jnp.float32), gate)
+    elif dispatch == "ep":
+        out = _moe_ep(p, xt, topi, topv, cfg, E, k, D, capacity_factor)
     elif dispatch == "local" or (dispatch == "sorted" and cfg.moe_local):
         out = _moe_local_shardmap(p, xt, topi, topv, cfg, E, k, D,
                                   capacity_factor)

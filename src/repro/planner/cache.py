@@ -39,6 +39,7 @@ def plan_to_json(plan: Plan) -> dict:
     return {
         "name": plan.name, "n": plan.n, "size": plan.size,
         "servers": plan.servers, "num_blocks": plan.num_blocks,
+        "family": plan.family,
         "steps": [{
             "transfers": [[t.src, t.dst, t.size,
                            None if t.blocks is None else list(t.blocks)]
@@ -66,7 +67,8 @@ def plan_from_json(d: dict) -> Plan:
     nb = d.get("num_blocks")
     return Plan(d["name"], int(d["n"]), float(d["size"]), steps=steps,
                 servers=d.get("servers"),
-                num_blocks=None if nb is None else int(nb))
+                num_blocks=None if nb is None else int(nb),
+                family=str(d.get("family", "allreduce")))
 
 
 # ---------------------------------------------------------------------------

@@ -88,6 +88,46 @@ class BucketPlan:
     key: str = ""
 
 
+# Family spellings accepted by the whole-step entry points: HLO op names
+# (launch.hlo_analysis) and plan-IR names (core.plans.FAMILIES) both map
+# onto the IR spelling.
+FAMILY_ALIASES = {
+    "all-reduce": "allreduce", "all_reduce": "allreduce",
+    "reduce-scatter": "reduce_scatter",
+    "all-gather": "allgather", "all_gather": "allgather",
+    "all-to-all": "all_to_all", "alltoall": "all_to_all",
+    "collective-permute": "p2p",
+}
+
+
+@dataclass(eq=False)
+class StepPlan:
+    """get_step_plan's answer: every collective family of a training step
+    priced JOINTLY under one GenModel basis (DESIGN.md §14).
+
+    `quotes[family]` records, per family in the mix: the per-call
+    GenModel breakdown at the call size, the coalesced quote (ONE launch
+    of count·size — α amortized, every linear term unchanged), the
+    pipelined alternative (count launches with call k's AllGather
+    overlapping call k+1's ReduceScatter — the same
+    `core.bucketing.pipelined_time` model `get_bucket_plan` uses), and
+    which of the two the argmin chose. `total_joint` = Σ family coalesced
+    quotes and equals the sum of the stored per-family term breakdowns
+    exactly (the pricing-consistency invariant the tests pin at 1e-9);
+    `ratio` = best joint total / naïve per-call total ≤ 1 — the
+    BENCH_core.json `step_plan_vs_per_call_ratio` gate."""
+    axes: tuple[tuple[str, int], ...]    # live axes (n > 1), leaf first
+    quotes: dict = field(default_factory=dict)   # family -> quote row
+    total_per_call: float = 0.0          # Σ count · per-call quote
+    total_joint: float = 0.0             # Σ coalesced quotes
+    total_best: float = 0.0              # Σ min(coalesced, pipelined)
+    ratio: float = 1.0                   # total_best / total_per_call
+    schedules: dict = field(default_factory=dict)  # family -> leaf schedule
+    precision: str = "f32"               # chosen wire format (all families)
+    source: str = "cold"
+    key: str = ""
+
+
 @dataclass(frozen=True)
 class RefitPolicy:
     """When does observed drift trigger an online refit? (DESIGN.md §10)
@@ -242,6 +282,14 @@ class PlannerService:
             self._pred_cache.clear()
             self._shares_cache.clear()
         dropped = self.invalidate_executables()
+        if factor >= 1.0:
+            # health restored: re-arm guard ladders pinned to the flat
+            # rung by faults that are now gone (DESIGN.md §12). The
+            # link_restore path of runtime.ft lands here (it calls
+            # mark_degraded(level, 1.0)), so a transient fault stops
+            # permanently demoting every schedule it touched.
+            from repro.core.lower import reprobe_guards
+            reprobe_guards("link_restore")
         m = default_metrics()
         m.counter("planner_degrade_events_total",
                   "level health transitions (degrade/restore)").inc()
@@ -763,6 +811,85 @@ class PlannerService:
         return self.get_executable(topo, max(size_floats, 1.0) * dsize,
                                    dtype, params=eff)
 
+    def get_family_executable(self, family: str, axis_name: str, n: int,
+                              size_floats: float, dtype: str = "float32",
+                              *, level: str = "root_sw",
+                              params: Mapping[str, GenModelParams] | None
+                              = None) -> PlanResponse:
+        """Executable schedule for ONE collective family on one mesh axis
+        (DESIGN.md §14).
+
+        allreduce delegates to `get_axis_executable`. reduce_scatter /
+        allgather lower the matching half of the SAME GenTree AllReduce
+        plan the axis would run (`plans.family_halves`) — co-planned with
+        allreduce by construction, cached on that plan's entry under a
+        family-keyed `_exec` slot (same lifetime/invalidation as every
+        derived schedule). all_to_all / p2p schedules are structurally
+        size-independent (one full-mesh / one shift round whatever the
+        payload), so they memoize per (family, n) on the service and are
+        dropped by `invalidate_executables` like any executable."""
+        from repro.core import plans as plans_mod
+        from repro.core.cost_model import evaluate_plan
+        from repro.core.lower import lower_plan
+        from repro.core.sync import level_switch_topo
+
+        family = FAMILY_ALIASES.get(family, family)
+        if family == "allreduce":
+            return self.get_axis_executable(axis_name, int(n), size_floats,
+                                            dtype, level=level,
+                                            params=params)
+        eff = dict(params) if params else self.params
+        if eff is None:
+            from repro.core.cost_model import TPU_V5E
+            eff = TPU_V5E
+        eff = self._apply_health(eff)
+        merged = self._merged_level_params(level, eff)
+        size_floats = max(float(size_floats), 1.0)
+        n = int(n)
+
+        if family in ("reduce_scatter", "allgather"):
+            topo = level_switch_topo(n, eff, level)
+            dsize = DTYPE_BYTES.get(dtype, 4)
+            resp = self.get_plan(topo, size_floats * dsize, dtype,
+                                 params=eff)
+            rs_half, ag_half = plans_mod.family_halves(resp.plan)
+            half = rs_half if family == "reduce_scatter" else ag_half
+            fkey = ("family", family)
+            with self._lock:
+                entry = self.cache.get(resp.key)
+                execs = (None if entry is None
+                         else entry.setdefault("_exec", {}))
+                sched = None if execs is None else execs.get(fkey)
+                if sched is None:
+                    sched = lower_plan(half)
+                    if execs is not None:
+                        execs[fkey] = sched
+            out = dataclasses.replace(
+                resp, plan=half, algo=f"{resp.algo}:{family}",
+                predicted_time=evaluate_plan(half, merged))
+            out.schedule = sched
+            return out
+
+        if family in ("all_to_all", "p2p"):
+            build = (plans_mod.alltoall_plan if family == "all_to_all"
+                     else plans_mod.p2p_plan)
+            plan = build(n, size_floats)
+            skey = (family, n)
+            with self._lock:
+                scheds = self.__dict__.setdefault("_family_scheds", {})
+                sched = scheds.get(skey)
+                if sched is None:
+                    sched = lower_plan(plan)
+                    scheds[skey] = sched
+            return PlanResponse(
+                plan=plan, algo=family,
+                predicted_time=evaluate_plan(plan, merged),
+                key=f"family:{family}:{n}", size_floats=size_floats,
+                schedule=sched)
+
+        raise ValueError(f"unknown collective family {family!r} "
+                         f"(expected one of {plans_mod.FAMILIES})")
+
     # ---- bucket plans (gradient bucketing + pipelined execution) -----------
     @staticmethod
     def _scaled_plan(plan: Plan, f: float) -> Plan:
@@ -778,7 +905,8 @@ class PlannerService:
                          for r in st.reduces]
             steps.append(s)
         return Plan(plan.name, plan.n, plan.size * f, steps=steps,
-                    servers=plan.servers, num_blocks=plan.num_blocks)
+                    servers=plan.servers, num_blocks=plan.num_blocks,
+                    family=plan.family)
 
     def _axis_halves_time(self, n: int, level: str, size_floats: float,
                           dtype: str, eff,
@@ -1053,6 +1181,268 @@ class PlannerService:
                 "_obj": obj})
             return obj
 
+    # ---- whole-step co-planning (every collective family) ------------------
+    def _family_axis_terms(self, family: str, i: int, n: int,
+                           size_floats: float, dtype: str, eff,
+                           precision=None):
+        """GenModel per-term breakdown of one family call on one axis.
+        allreduce / reduce_scatter / allgather price the axis's cached
+        GenTree plan (resp. its `family_halves`) rescaled to the exact
+        size — the same co-planned structure `get_family_executable`
+        lowers; all_to_all / p2p price their flat builders."""
+        from repro.core import plans as plans_mod
+        from repro.core.cost_model import evaluate_plan_terms
+        from repro.core.sync import axis_level, level_switch_topo
+
+        lvl = axis_level(i)
+        merged = self._merged_level_params(lvl, eff)
+        size_floats = max(float(size_floats), 1.0)
+        if family in ("allreduce", "reduce_scatter", "allgather"):
+            topo = level_switch_topo(int(n), eff, lvl)
+            dsize = DTYPE_BYTES.get(dtype, 4)
+            resp = self.get_plan(topo, size_floats * dsize, dtype,
+                                 params=eff)
+            plan = resp.plan
+            factor = size_floats / resp.size_floats if resp.size_floats \
+                else 1.0
+            if abs(factor - 1.0) > 1e-12:
+                plan = self._scaled_plan(plan, factor)
+            if family != "allreduce":
+                rs_half, ag_half = plans_mod.family_halves(plan)
+                plan = rs_half if family == "reduce_scatter" else ag_half
+        elif family == "all_to_all":
+            plan = plans_mod.alltoall_plan(int(n), size_floats)
+        elif family == "p2p":
+            plan = plans_mod.p2p_plan(int(n), size_floats)
+        else:
+            raise ValueError(f"unknown collective family {family!r}")
+        return evaluate_plan_terms(plan, merged, precision=precision)
+
+    @staticmethod
+    def _normalize_mix(mix) -> dict[str, tuple[int, float]]:
+        """Mix spec → {family: (count, per_call_size_floats)}. Accepts a
+        `launch.hlo_analysis.ModuleStats` (the per-family payload/count
+        ledger `analyze_hlo` extracts) or an explicit mapping of family →
+        (count, size_floats) / {"count": …, "size_floats": …}."""
+        if hasattr(mix, "coll_counts") and hasattr(mix, "coll_by_kind"):
+            from repro.launch.hlo_analysis import mix_from_stats
+            mix = mix_from_stats(mix)
+        out: dict[str, tuple[int, float]] = {}
+        for fam, v in dict(mix).items():
+            fam = FAMILY_ALIASES.get(fam, fam)
+            if isinstance(v, Mapping):
+                cnt = int(v.get("count", 1))
+                sz = float(v.get("size_floats", 0.0))
+            else:
+                cnt, sz = int(v[0]), float(v[1])
+            if cnt > 0 and sz > 0:
+                prev = out.get(fam)
+                if prev:  # merge duplicate spellings: total size preserved
+                    tot = prev[0] * prev[1] + cnt * sz
+                    cnt += prev[0]
+                    sz = tot / cnt
+                out[fam] = (cnt, sz)
+        return out
+
+    def get_step_plan(self, axes: Sequence[tuple[str, int]], mix,
+                      dtype: str = "float32", *,
+                      params: Mapping[str, GenModelParams] | None = None,
+                      precision: str | None = None,
+                      tolerance: float | None = None) -> StepPlan:
+        """Price a training step's whole collective mix jointly under
+        GenModel (DESIGN.md §14) and hand back one leaf-axis executable
+        per family.
+
+        `mix` is the step's collective census — a `ModuleStats` from
+        `launch.hlo_analysis.analyze_hlo` or an explicit
+        {family: (count, size_floats)} spec. Per family the sweep prices
+        three regimes under each allowed wire precision:
+
+          * per-call — count independent launches at the call size (the
+            naïve baseline a per-collective planner would quote);
+          * coalesced — ONE launch of count·size: α amortizes across
+            calls, every linear term (β/γ/δ/ε) is unchanged, so the
+            coalesced quote can never exceed count × per-call;
+          * pipelined — count launches with call k's AllGather
+            overlapping call k+1's ReduceScatter, the
+            `core.bucketing.pipelined_time` model `get_bucket_plan`
+            applies to buckets (folding families only).
+
+        The argmin picks regime × precision jointly; AllReduce and its
+        RS/AG halves price the axis chain hierarchically (leaf first,
+        outer axes see the shard), AllToAll/P2P price the leaf axis they
+        execute on (expert-parallel dispatch). Answers are cached under
+        an axis_key fingerprint — mix, dtype, precision consent and the
+        health-adjusted params all reach the key."""
+        import math as _math
+
+        from repro.core.bucketing import pipelined_time
+        from repro.core.cost_model import (PRECISIONS, allowed_precisions,
+                                           resolve_precision)
+        from repro.core.sync import axis_level
+
+        axes = tuple((str(a), int(n)) for a, n in axes)
+        live = [(i, a, n) for i, (a, n) in enumerate(axes) if n > 1]
+        norm = self._normalize_mix(mix)
+        eff = dict(params) if params else self.params
+        if eff is None:
+            from repro.core.cost_model import TPU_V5E
+            eff = TPU_V5E
+        eff = self._apply_health(eff)
+        dsize = DTYPE_BYTES.get(dtype, 4)
+        if precision is not None:
+            prec_cands = [resolve_precision(precision, tolerance)]
+        else:
+            prec_cands = allowed_precisions(tolerance) \
+                or [PRECISIONS["f32"]]
+        mix_key = tuple(sorted((f, c, round(s, 6))
+                               for f, (c, s) in norm.items()))
+        total_floats = sum(c * s for c, s in norm.values()) or 1.0
+        key = axis_key(axes, eff, self.cache.bucket(total_floats * dsize),
+                       extra=self._config_extra()
+                       + ("step_plan", mix_key, dtype, precision,
+                          tolerance))
+
+        def resolve_schedules(prec_name: str) -> dict:
+            wire = PRECISIONS[prec_name] if prec_name != "f32" else None
+            out = {}
+            if not live:
+                return out
+            li, la, ln = live[0]
+            for fam, (_c, s) in norm.items():
+                sched = self.get_family_executable(
+                    fam, la, ln, s, dtype, level=axis_level(li),
+                    params=eff).schedule
+                if wire is not None:
+                    sched = sched.with_wire(wire)
+                out[fam] = sched
+            return out
+
+        with self._lock:
+            entry = self.cache.get(key)
+            if entry is not None:
+                obj = entry.get("_obj")
+                if obj is not None:
+                    return dataclasses.replace(obj, source="memory")
+                prec_name = str(entry.get("precision", "f32"))
+                obj = StepPlan(
+                    axes=tuple((a, n) for _, a, n in live),
+                    quotes={f: dict(q)
+                            for f, q in entry["quotes"].items()},
+                    total_per_call=float(entry["per_call"]),
+                    total_joint=float(entry["joint"]),
+                    total_best=float(entry["best"]),
+                    ratio=float(entry["ratio"]),
+                    schedules=resolve_schedules(prec_name),
+                    precision=prec_name, source="disk", key=key)
+                entry["_obj"] = obj
+                return obj
+
+            if not live or not norm:
+                obj = StepPlan(axes=tuple((a, n) for _, a, n in live),
+                               source="cold", key=key)
+                self.cache.put(key, {
+                    "kind": "step_plan", "quotes": {}, "per_call": 0.0,
+                    "joint": 0.0, "best": 0.0, "ratio": 1.0,
+                    "precision": "f32", "_obj": obj})
+                return obj
+
+            def chain_terms(fam: str, s: float, prec):
+                """Breakdown summed over the axes the family traverses:
+                the folding families run the hierarchical chain (outer
+                axes see the inner shard); a2a/p2p run the leaf only."""
+                if fam in ("all_to_all", "p2p"):
+                    i, _a, n = live[0]
+                    return [self._family_axis_terms(fam, i, n, s, dtype,
+                                                    eff, precision=prec)]
+                shard, out = float(s), []
+                for i, _a, n in live:
+                    out.append(self._family_axis_terms(
+                        fam, i, n, shard, dtype, eff, precision=prec))
+                    shard /= n
+                return out
+
+            def halves_time(fam: str, s: float, prec):
+                """(T_RS, T_AG) for the pipelined regime — only
+                meaningful for families with a fold boundary."""
+                t_rs = t_ag = 0.0
+                shard = float(s)
+                for i, _a, n in live:
+                    rs, ag = self._axis_halves_time(
+                        n, axis_level(i), shard, dtype, eff,
+                        precision=prec)
+                    if fam == "reduce_scatter":
+                        ag = 0.0
+                    elif fam == "allgather":
+                        rs = 0.0
+                    t_rs += rs
+                    t_ag += ag
+                    shard /= n
+                return t_rs, t_ag
+
+            best_pick = None
+            with default_tracer().span("planner/step_sweep",
+                                       families=len(norm),
+                                       precisions=len(prec_cands)):
+                for prec in prec_cands:
+                    pw = None if prec.name == "f32" else prec
+                    quotes: dict[str, dict] = {}
+                    tot_call = tot_joint = tot_best = 0.0
+                    for fam, (cnt, s) in sorted(norm.items()):
+                        call_bds = chain_terms(fam, s, pw)
+                        call_t = sum(b.total for b in call_bds)
+                        joint_bds = chain_terms(fam, cnt * s, pw)
+                        joint = {
+                            t: sum(getattr(b, t) for b in joint_bds)
+                            for t in call_bds[0].TERMS}
+                        joint_t = sum(joint.values())
+                        if cnt > 1 and fam in ("allreduce",
+                                               "reduce_scatter",
+                                               "allgather"):
+                            t_rs, t_ag = halves_time(fam, s, pw)
+                            piped = pipelined_time(t_rs, t_ag, cnt)
+                        else:
+                            piped = cnt * call_t
+                        # per-call stays a candidate regime (the pipelined
+                        # estimate comes from the simulator and the other
+                        # two from the term walk — the argmin must never
+                        # pick something worse than the naïve baseline)
+                        cands = {"coalesced": joint_t, "pipelined": piped,
+                                 "per_call": cnt * call_t}
+                        mode = min(cands, key=lambda m: (cands[m], m))
+                        best_t = cands[mode]
+                        quotes[fam] = {
+                            "count": cnt, "size_floats": s,
+                            "per_call_total": call_t,
+                            "joint": joint, "joint_total": joint_t,
+                            "pipelined": piped, "mode": mode,
+                            "best_total": best_t,
+                            "precision": prec.name,
+                        }
+                        tot_call += cnt * call_t
+                        tot_joint += joint_t
+                        tot_best += best_t
+                    if best_pick is None or tot_best < best_pick[1]:
+                        best_pick = (prec.name, tot_best, tot_joint,
+                                     tot_call, quotes)
+
+            prec_name, tot_best, tot_joint, tot_call, quotes = best_pick
+            ratio = tot_best / tot_call if tot_call > 0 else 1.0
+            obj = StepPlan(
+                axes=tuple((a, n) for _, a, n in live), quotes=quotes,
+                total_per_call=tot_call, total_joint=tot_joint,
+                total_best=tot_best, ratio=ratio,
+                schedules=resolve_schedules(prec_name),
+                precision=prec_name, source="cold", key=key)
+            self.cache.put(key, {
+                "kind": "step_plan",
+                "quotes": {f: {k: v for k, v in q.items()}
+                           for f, q in quotes.items()},
+                "per_call": tot_call, "joint": tot_joint,
+                "best": tot_best, "ratio": ratio,
+                "precision": prec_name, "_obj": obj})
+            return obj
+
     # ---- per-mesh-axis plans (training/serving hot path) -------------------
     def get_axis_plans(self, axes: Sequence[tuple[str, int]],
                        size_floats: float,
@@ -1104,6 +1494,10 @@ class PlannerService:
         elastic remesh or a fault-tolerant resume."""
         with self._lock:
             dropped = self.cache.drop_derived()
+            fam = self.__dict__.get("_family_scheds")
+            if fam:
+                dropped += len(fam)
+                fam.clear()
         m = default_metrics()
         m.counter("planner_schedule_invalidations_total",
                   "invalidate_executables calls (remesh/resume/refit)"

@@ -254,6 +254,64 @@ def test_guard_schedule_is_memoized(quiet_faults):
     assert guard_schedule(None) is None
 
 
+def test_link_restore_reprobes_demoted_guard(quiet_faults):
+    """ISSUE 9 satellite: sticky wire/plan demotion must clear when link
+    health is restored — a transient fault may not pin the mesh to flat
+    psum forever. `PlannerService.mark_degraded(level, 1.0)` (the
+    runtime.ft link_restore path) re-probes every live demoted guard."""
+    from repro.core.lower import GuardedSchedule, GuardPolicy
+    from repro.planner.service import PlannerService
+    gs = GuardedSchedule(_stub_inner(),
+                         policy=GuardPolicy(max_retries=0, backoff=0.0))
+
+    def boom():
+        raise RuntimeError("link down")
+
+    assert gs._guarded("allreduce", boom, lambda: "flat") == "flat"
+    assert gs.demoted
+    svc = PlannerService()
+    svc.mark_degraded("root_sw", 0.5)     # degradation: demotion stays
+    assert gs.demoted
+    svc.mark_degraded("root_sw", 1.0)     # restoration: re-probe
+    assert not gs.demoted
+    assert gs.stats["reprobes"] == 1
+    # the next launch tries the planned rung again
+    assert gs._guarded("allreduce", lambda: "planned",
+                       lambda: "flat") == "planned"
+
+
+def test_fault_plan_link_restore_reprobes_through_ft(quiet_faults,
+                                                     tmp_path):
+    """End-to-end: a link_degrade → link_restore fault-plan event stream
+    replayed through FaultTolerantLoop._apply_fault re-probes the guard
+    (ft calls mark_degraded(target, 1.0) on restore)."""
+    from repro.core.lower import GuardedSchedule, GuardPolicy
+    from repro.planner.service import PlannerService
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime.ft import FaultTolerantLoop
+
+    gs = GuardedSchedule(_stub_inner(),
+                         policy=GuardPolicy(max_retries=0, backoff=0.0))
+    gs._guarded("allreduce", _raise_link_down, lambda: "flat")
+    assert gs.demoted
+    svc = PlannerService()
+    loop = FaultTolerantLoop(lambda s, i: s, {"w": 0},
+                             CheckpointManager(str(tmp_path)), planner=svc)
+    events = []
+    loop.on_event = lambda kind, info: events.append(kind)
+    loop._apply_fault(FaultEvent("link_degrade", 0, magnitude=0.5,
+                                 target="root_sw"), step=0)
+    assert gs.demoted                      # degraded: replan, stay flat
+    loop._apply_fault(FaultEvent("link_restore", 1, magnitude=1.0,
+                                 target="root_sw"), step=1)
+    assert not gs.demoted                  # restored: planned rung re-armed
+    assert events == ["degrade", "restore"]
+
+
+def _raise_link_down():
+    raise RuntimeError("link down")
+
+
 # ---------------------------------------------------------------------------
 # PlanCache: corrupted persistence never crashes startup
 # ---------------------------------------------------------------------------

@@ -64,9 +64,65 @@ def test_synthetic_trip_weighting():
     stats = ha.analyze_hlo(SYNTH)
     # dot: 2 * (8*16) * 16 = 4096 flops, ×5 trips
     assert stats.flops == pytest.approx(5 * 2 * 8 * 16 * 16)
-    # all-reduce operand 512B ×5 + all-gather result 2048B ×1
-    assert stats.coll_by_kind["all-reduce"] == pytest.approx(5 * 512)
+    # replica_groups={} → group size unknown → asymptotic wire factors:
+    # all-reduce 2·M (512B payload) ×5, all-gather 1·M (2048B result) ×1
+    assert stats.coll_by_kind["all-reduce"] == pytest.approx(5 * 2 * 512)
     assert stats.coll_by_kind["all-gather"] == pytest.approx(32 * 16 * 4)
+    # raw payloads stay un-scaled in the payload ledger
+    assert stats.coll_payload_by_kind["all-reduce"] == pytest.approx(5 * 512)
+    assert stats.coll_payload_by_kind["all-gather"] == pytest.approx(2048)
+
+
+MULTIFAM = """\
+HloModule fam, entry_computation_layout={(f32[8,16])->f32[]}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %ar = f32[8,16]{1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = f32[2,16]{1,0} reduce-scatter(%x), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+  %ag = f32[32,16]{1,0} all-gather(%x), replica_groups=[2,4]<=[8], dimensions={0}
+  %a2a = f32[8,16]{1,0} all-to-all(%x), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  %cp = f32[8,16]{1,0} collective-permute(%x), source_target_pairs={{0,1},{1,0}}
+  ROOT %out = f32[] constant(0)
+}
+"""
+
+
+def test_per_family_wire_bytes():
+    """Regression pin for the wire-byte convention (ISSUE 9): the mix
+    handed to the whole-step planner prices actual wire traffic —
+    AR 2(n-1)/n·M, RS/AG/A2A (n-1)/n·M, CP M — with n parsed from
+    replica_groups (both explicit and iota forms)."""
+    stats = ha.analyze_hlo(MULTIFAM)
+    M = 8 * 16 * 4                      # 512B operand payload
+    ag_M = 32 * 16 * 4                  # gathered result payload
+    assert stats.coll_by_kind["all-reduce"] == pytest.approx(2 * 3 / 4 * M)
+    assert stats.coll_by_kind["reduce-scatter"] == pytest.approx(3 / 4 * M)
+    assert stats.coll_by_kind["all-gather"] == pytest.approx(3 / 4 * ag_M)
+    assert stats.coll_by_kind["all-to-all"] == pytest.approx(7 / 8 * M)
+    assert stats.coll_by_kind["collective-permute"] == pytest.approx(M)
+    # payload ledger keeps the raw M per family
+    assert stats.coll_payload_by_kind["all-reduce"] == pytest.approx(M)
+    assert stats.coll_payload_by_kind["all-gather"] == pytest.approx(ag_M)
+    # group-size parser: explicit + iota forms
+    assert ha._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert ha._group_size("replica_groups=[2,4]<=[8]") == 4
+    assert ha._group_size("replica_groups={}") == 0
+
+
+def test_mix_from_stats():
+    mix = ha.mix_from_stats(ha.analyze_hlo(MULTIFAM))
+    assert set(mix) == {"allreduce", "reduce_scatter", "allgather",
+                        "all_to_all", "p2p"}
+    assert mix["allreduce"] == {"count": 1, "size_floats": 8 * 16}
+    assert mix["allgather"]["size_floats"] == 32 * 16
+    assert mix["p2p"] == {"count": 1, "size_floats": 8 * 16}
 
 
 def test_live_compiled_flops():

@@ -1,26 +1,36 @@
-"""Gradient bucket-size sweep on SYM512-style meshes (DESIGN.md §9).
+"""Gradient bucket-size sweep on SYM512-style meshes (DESIGN.md §9/§15).
 
 For each mesh-axis factorization the bench sweeps powers-of-two bucket
 sizes through `PlannerService.get_bucket_plan` and prints the modeled
-double-buffered pipeline time next to the serial (unpipelined) and
-per-leaf (one schedule launch per gradient leaf — the pre-bucketing
-execution model) baselines. Gates:
+contended pipeline time next to the optimistic (naive max) pipeline,
+serial (unpipelined) and per-leaf (one schedule launch per gradient
+leaf — the pre-bucketing execution model) baselines. Gates:
 
-  * the chosen bucket size IS the GenModel argmin of the sweep;
-  * modeled pipelined time <= serial time at the chosen size;
-  * modeled pipelined time < modeled per-leaf time on every mesh
+  * the chosen bucket size IS the GenModel argmin of the sweep, ranked
+    on the CONTENDED pipeline estimate (per-link occupancy merge,
+    DESIGN.md §15) re-derived live from the recorded t_rs/t_ag/t_joint;
+  * naive pipelined <= contended <= serial at every candidate (the
+    §15 sandwich — contention can only cost, and never worse than
+    back-to-back halves);
+  * modeled contended time < modeled per-leaf time on every mesh
     (the Table-6-style topologies of the acceptance criteria).
 
 `benchmarks.run --json` records `bucket_sweep_best_ms` (flagship mesh,
-SYM512) and `pipeline_overlap_ratio` (pipelined/serial at the argmin —
-< 1.0 means overlap wins) in BENCH_core.json so the trajectory is
-tracked across PRs. Model-only: no devices needed.
+SYM512), the PREDICTED `pipeline_overlap_ratio` (naive pipelined/serial
+— the optimistic model) and the MEASURED `pipeline_overlap_ratio_contended`
+(contended/serial — what link sharing leaves of the overlap) in
+BENCH_core.json so the trajectory is tracked across PRs. The
+(predicted, contended) pair per mesh is fed back through
+`PlannerService.observe`, so the online loop's residual rings see the
+contention gap exactly as a trainer's measured timings would land.
+Model-only: no devices needed.
 
     PYTHONPATH=src python -m benchmarks.bucket_bench [--json PATH]
 """
 from __future__ import annotations
 
-from repro.core.bucketing import pipelined_time, serial_time
+from repro.core.bucketing import (contended_pipelined_time, pipelined_time,
+                                  serial_time)
 from repro.planner.service import PlannerService
 
 from .common import fmt_table
@@ -48,27 +58,39 @@ def run() -> dict:
     for mesh_name, axes in MESHES.items():
         bp = svc.get_bucket_plan(axes, TOTAL_FLOATS,
                                  leaf_sizes=LEAF_SIZES)
-        # Live gate: recompute the pipeline model from the recorded
-        # per-axis halves (t_rs/t_ag) instead of re-minimizing the stored
-        # totals — a service that ranked by the wrong field, or whose
-        # stored times drifted from the model, fails here.
+        # Live gate: recompute the pipeline models from the recorded
+        # per-axis halves (t_rs/t_ag) and contended joint (t_joint)
+        # instead of re-minimizing the stored totals — a service that
+        # ranked by the wrong field, or whose stored times drifted from
+        # the model, fails here.
         for bf, row in bp.sweep.items():
-            re_p = pipelined_time(row["t_rs"], row["t_ag"],
-                                  row["num_buckets"])
-            re_s = serial_time(row["t_rs"], row["t_ag"],
-                               row["num_buckets"])
+            k = row["num_buckets"]
+            tj = row["t_joint"] if k > 1 else None
+            re_p = pipelined_time(row["t_rs"], row["t_ag"], k)
+            re_c = contended_pipelined_time(row["t_rs"], row["t_ag"],
+                                            k, tj)
+            re_s = serial_time(row["t_rs"], row["t_ag"], k)
             assert abs(re_p - row["pipelined"]) < 1e-12, (mesh_name, bf)
+            assert abs(re_c - row["contended"]) < 1e-12, (mesh_name, bf)
             assert abs(re_s - row["serial"]) < 1e-12, (mesh_name, bf)
-        argmin = min(bp.sweep, key=lambda b: (pipelined_time(
+            # §15 sandwich: contention can only cost, never more than
+            # giving up overlap entirely
+            assert re_p <= re_c + 1e-15 and re_c <= re_s + 1e-15, \
+                (mesh_name, bf, re_p, re_c, re_s)
+        argmin = min(bp.sweep, key=lambda b: (contended_pipelined_time(
             bp.sweep[b]["t_rs"], bp.sweep[b]["t_ag"],
-            bp.sweep[b]["num_buckets"]), b))
+            bp.sweep[b]["num_buckets"],
+            bp.sweep[b]["t_joint"]
+            if bp.sweep[b]["num_buckets"] > 1 else None), b))
         assert bp.bucket_floats == argmin, (
             f"{mesh_name}: chosen bucket {bp.bucket_floats} != GenModel "
             f"argmin {argmin}")
-        assert bp.predicted_pipelined <= bp.predicted_serial + 1e-12, (
-            f"{mesh_name}: pipelined model worse than serial")
-        assert bp.predicted_pipelined < bp.predicted_per_leaf, (
-            f"{mesh_name}: pipelined {bp.predicted_pipelined:.6f}s does "
+        assert bp.predicted_pipelined <= bp.predicted_contended + 1e-15, (
+            f"{mesh_name}: contended below the optimistic lower bound")
+        assert bp.predicted_contended <= bp.predicted_serial + 1e-15, (
+            f"{mesh_name}: contended model worse than serial")
+        assert bp.predicted_contended < bp.predicted_per_leaf, (
+            f"{mesh_name}: contended {bp.predicted_contended:.6f}s does "
             f"not beat per-leaf {bp.predicted_per_leaf:.6f}s")
         for bf in sorted(bp.sweep):
             row = bp.sweep[bf]
@@ -76,32 +98,47 @@ def run() -> dict:
                 "mesh": mesh_name,
                 "bucket (MiB)": f"{bf * 4 / 2**20:.2f}",
                 "K": row["num_buckets"],
-                "pipelined ms": f"{row['pipelined'] * 1e3:.3f}",
+                "naive ms": f"{row['pipelined'] * 1e3:.3f}",
+                "contended ms": f"{row['contended'] * 1e3:.3f}",
                 "serial ms": f"{row['serial'] * 1e3:.3f}",
                 "chosen": "<=" if bf == bp.bucket_floats else "",
             })
-        overlap = (bp.predicted_pipelined / bp.predicted_serial
-                   if bp.predicted_serial else 1.0)
-        speedup_vs_leaf = bp.predicted_per_leaf / bp.predicted_pipelined
+        predicted = (bp.predicted_pipelined / bp.predicted_serial
+                     if bp.predicted_serial else 1.0)
+        measured = (bp.predicted_contended / bp.predicted_serial
+                    if bp.predicted_serial else 1.0)
+        speedup_vs_leaf = bp.predicted_per_leaf / bp.predicted_contended
+        # feed the (predicted naive, contended) pair into the online
+        # loop exactly as a trainer's measured sync would land: the
+        # residual ring keyed by the plan fingerprint records how far
+        # the optimistic model sat from the contention-aware one
+        obs = svc.observe("root_sw", axes[0][1], float(bp.bucket_floats),
+                          measured=bp.predicted_contended,
+                          predicted=bp.predicted_pipelined, key=bp.key)
         print(f"{mesh_name}: chosen {bp.bucket_floats * 4 / 2**20:.2f} MiB "
-              f"buckets (K={bp.num_buckets}), pipelined "
-              f"{bp.predicted_pipelined * 1e3:.3f} ms, serial "
+              f"buckets (K={bp.num_buckets}), contended "
+              f"{bp.predicted_contended * 1e3:.3f} ms (naive "
+              f"{bp.predicted_pipelined * 1e3:.3f} ms), serial "
               f"{bp.predicted_serial * 1e3:.3f} ms, per-leaf "
               f"{bp.predicted_per_leaf * 1e3:.3f} ms "
-              f"({speedup_vs_leaf:.1f}x vs per-leaf)")
+              f"({speedup_vs_leaf:.1f}x vs per-leaf; overlap mode "
+              f"{bp.overlap.get('mode')}; observe residual "
+              f"{obs['rel_residual']:.4f})")
         out[f"{mesh_name}_best_ms"] = round(
-            bp.predicted_pipelined * 1e3, 4)
+            bp.predicted_contended * 1e3, 4)
         out[f"{mesh_name}_vs_per_leaf"] = round(speedup_vs_leaf, 2)
         if mesh_name == FLAGSHIP:
             out["bucket_sweep_best_ms"] = round(
-                bp.predicted_pipelined * 1e3, 4)
-            out["pipeline_overlap_ratio"] = round(overlap, 4)
+                bp.predicted_contended * 1e3, 4)
+            out["pipeline_overlap_ratio"] = round(predicted, 4)
+            out["pipeline_overlap_ratio_contended"] = round(measured, 4)
             out["bucket_floats"] = bp.bucket_floats
+            out["overlap_mode"] = bp.overlap.get("mode", "sequential")
 
-    print(fmt_table(rows, ["mesh", "bucket (MiB)", "K", "pipelined ms",
-                           "serial ms", "chosen"],
-                    "bucket-size sweep (GenModel-priced, double-buffered "
-                    "pipeline model)"))
+    print(fmt_table(rows, ["mesh", "bucket (MiB)", "K", "naive ms",
+                           "contended ms", "serial ms", "chosen"],
+                    "bucket-size sweep (GenModel-priced, contended "
+                    "pipeline model, DESIGN.md §15)"))
     return out
 
 

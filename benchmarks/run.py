@@ -41,10 +41,11 @@ def main() -> None:
 
     from . import (bucket_bench, exec_bench, faults_bench, fig3_incast,
                    fig4_delta_microbench, fig8_model_accuracy,
-                   planner_bench, quant_bench, roofline, simfast_bench,
-                   step_bench, table3_cpu_testbed, table4_gpu_testbed,
-                   table5_fitting, table6_plan_selection,
-                   table7_large_scale, telemetry_bench)
+                   overlap_bench, planner_bench, quant_bench, roofline,
+                   simfast_bench, step_bench, table3_cpu_testbed,
+                   table4_gpu_testbed, table5_fitting,
+                   table6_plan_selection, table7_large_scale,
+                   telemetry_bench)
     all_benches = [
         ("fig3", fig3_incast.run),
         ("fig4", fig4_delta_microbench.run),
@@ -63,6 +64,7 @@ def main() -> None:
         ("step", step_bench.run),
         ("telemetry", telemetry_bench.run),
         ("faults", faults_bench.run),
+        ("overlap", overlap_bench.run),
     ]
     only = set(args.only.split(",")) if args.only else None
 

@@ -175,12 +175,41 @@ def serial_time(t_rs: float, t_ag: float, k: int) -> float:
 
 def pipelined_time(t_rs: float, t_ag: float, k: int) -> float:
     """Two-stage software pipeline: bucket k's AG overlaps bucket k+1's RS,
-    so the steady state advances one bucket per max(T_RS, T_AG)."""
+    so the steady state advances one bucket per max(T_RS, T_AG).
+
+    This is the NAIVE model — it assumes the overlapped halves never share
+    a link. Kept as the optimistic baseline the contended model is
+    benchmarked against (`contended_vs_naive_pipeline_error`); the sweep
+    itself ranks on `contended_pipelined_time`."""
     if k <= 0:
         return 0.0
     if k == 1:
         return t_rs + t_ag
     return t_rs + (k - 1) * max(t_rs, t_ag) + t_ag
+
+
+def contended_pipelined_time(t_rs: float, t_ag: float, k: int,
+                             t_joint: float | None = None) -> float:
+    """Link-contention-aware pipeline model (DESIGN.md §15): the steady
+    state advances one bucket per the CONTENDED concurrent time of the
+    RS and AG halves — `t_joint`, priced by merging the halves' per-link
+    occupancy vectors (`FastEngine.contended_pair_total` /
+    `cost_model.contended_pair_time`) — not their optimistic `max()`.
+
+    On disjoint links t_joint == max(t_rs, t_ag) and this reduces to
+    `pipelined_time`; on shared links the serialized β/ε push it toward
+    (and past — summed incast fan-in crossing w_t) t_rs + t_ag. The
+    planner controls issuance, so the steady state never does worse than
+    back-to-back halves: t_joint clamps to [max(t_rs, t_ag), t_rs + t_ag].
+    """
+    if k <= 0:
+        return 0.0
+    if k == 1:
+        return t_rs + t_ag
+    if t_joint is None:
+        t_joint = max(t_rs, t_ag)
+    t_joint = min(max(t_joint, max(t_rs, t_ag)), t_rs + t_ag)
+    return t_rs + (k - 1) * t_joint + t_ag
 
 
 # ---------------------------------------------------------------------------
@@ -221,7 +250,8 @@ def _allreduce_chain(vec, axis_plans, fused_reduce):
 
 def execute_buckets(leaves, buckets: Sequence[Bucket], axis_plans, *,
                     pipeline: bool = True,
-                    fused_reduce: Callable | None = None) -> list:
+                    fused_reduce: Callable | None = None,
+                    merged=None, reverse: bool = False) -> list:
     """AllReduce every bucket across the DP axes; returns the reduced
     leaf list (leaves outside any bucket — empty leaves — unchanged).
 
@@ -230,6 +260,20 @@ def execute_buckets(leaves, buckets: Sequence[Bucket], axis_plans, *,
     at step k the executor issues RS(bucket k) *then* AG(bucket k−1), so
     the next bucket's reduce is on the wire before the previous bucket's
     gather drains.
+
+    `reverse=True` issues buckets in reverse-layer readiness order
+    (DESIGN.md §15): backward produces gradients last-layer-first, and
+    the greedy partition orders buckets by first leaf index, so the
+    LAST bucket's gradients materialize first — issuing k−1, k−2, … lets
+    each RS leave as soon as its bucket is ready instead of stalling on
+    bucket 0. Results land in leaf order either way.
+
+    `merged` (a `core.overlap.MergedSchedule` from the bucket plan's
+    {sequential, merged} argmin) fuses each steady-state step into ONE
+    round-interleaved launch — RS(bucket k) coalesced with AG(bucket
+    k−1) on their disjoint links. Single-axis chains only (the
+    hierarchical handoff already serializes at the axis boundary);
+    ignored otherwise.
     """
     import jax.numpy as jnp
 
@@ -243,24 +287,51 @@ def execute_buckets(leaves, buckets: Sequence[Bucket], axis_plans, *,
                      else jnp.concatenate(parts))
 
     k = len(flats)
+    order = list(range(k - 1, -1, -1)) if reverse else list(range(k))
     tracer = default_tracer()
     results: list = [None] * k
-    if pipeline and k > 1 and supports_halves(axis_plans):
+    use_merged = (merged is not None and pipeline and k > 1
+                  and len(axis_plans) == 1 and supports_halves(axis_plans))
+    if use_merged:
+        pl = axis_plans[0]
+        shards: list = [None] * k
+        prev = None
+        for i in order:
+            if prev is None:
+                with tracer.span("bucket/rs", bucket=i,
+                                 elements=int(flats[i].size)):
+                    shards[i] = pl.schedule.reduce_scatter(
+                        flats[i], pl.axis, fused_reduce=fused_reduce)
+            else:
+                with tracer.span("bucket/rs_ag", bucket=i, drains=prev):
+                    shards[i], full = merged.rs_ag(
+                        flats[i], shards[prev], pl.axis,
+                        fused_reduce=fused_reduce)
+                results[prev] = full[:int(flats[prev].size)]
+                shards[prev] = None
+            prev = i
+        with tracer.span("bucket/ag", bucket=prev):
+            results[prev] = pl.schedule.all_gather(
+                shards[prev], pl.axis)[:int(flats[prev].size)]
+    elif pipeline and k > 1 and supports_halves(axis_plans):
         shards, sizes = [None] * k, [None] * k
-        for i in range(k):
+        prev = None
+        for i in order:
             with tracer.span("bucket/rs", bucket=i,
                              elements=int(flats[i].size)):
                 shards[i], sizes[i] = _rs_chain(flats[i], axis_plans,
                                                 fused_reduce)
-            if i:
-                with tracer.span("bucket/ag", bucket=i - 1):
-                    results[i - 1] = _ag_chain(shards[i - 1], axis_plans,
-                                               sizes[i - 1])
-        with tracer.span("bucket/ag", bucket=k - 1):
-            results[k - 1] = _ag_chain(shards[k - 1], axis_plans,
-                                       sizes[k - 1])
+            if prev is not None:
+                with tracer.span("bucket/ag", bucket=prev):
+                    results[prev] = _ag_chain(shards[prev], axis_plans,
+                                              sizes[prev])
+                shards[prev] = None
+            prev = i
+        with tracer.span("bucket/ag", bucket=prev):
+            results[prev] = _ag_chain(shards[prev], axis_plans,
+                                      sizes[prev])
     elif supports_halves(axis_plans):
-        for i in range(k):
+        for i in order:
             with tracer.span("bucket/rs", bucket=i,
                              elements=int(flats[i].size)):
                 shard, sizes = _rs_chain(flats[i], axis_plans,
@@ -270,7 +341,7 @@ def execute_buckets(leaves, buckets: Sequence[Bucket], axis_plans, *,
     else:
         # no canonical shard layout on some axis: sequential whole-plan
         # AllReduce per bucket (still amortizes per-leaf launches)
-        for i in range(k):
+        for i in order:
             with tracer.span("bucket/allreduce", bucket=i,
                              elements=int(flats[i].size)):
                 results[i] = _allreduce_chain(flats[i], axis_plans,
@@ -322,6 +393,12 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
     bplan = service.get_bucket_plan(axes, total_bytes / 4.0,
                                     dtype="float32",
                                     params=cfg.params, config=bcfg)
+    # backward-overlapped issuance (DESIGN.md §15): reverse-layer order
+    # plus the merged RS/AG launch, but ONLY when the planner's
+    # {sequential, merged} argmin says the contended price wins
+    reverse = bool(getattr(cfg, "backward_overlap", True))
+    merged = bplan.merged_schedule \
+        if bplan.overlap.get("mode") == "merged" else None
     if stats is not None:
         stats.update({
             "key": bplan.key, "source": bplan.source,
@@ -332,6 +409,9 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
             "precision": bplan.precision,
             "predicted_pipelined": bplan.predicted_pipelined,
             "predicted_serial": bplan.predicted_serial,
+            "predicted_contended": bplan.predicted_contended,
+            "overlap_mode": bplan.overlap.get("mode", "sequential"),
+            "backward_overlap": reverse,
         })
     # byte-capped partition: every dtype class honours the same budget
     buckets = partition(sizes, [x.dtype for x in leaves],
@@ -347,12 +427,18 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
     # pipeline occupancy: modeled speedup of the double-buffered
     # schedule over serial execution, normalized to [0.5, 1] — 0.5 for
     # a single bucket (nothing overlaps), → 1 as the RS/AG halves
-    # balance and the bucket count grows (DESIGN.md §9's pipeline model)
-    if bplan.predicted_pipelined > 0.0:
+    # balance and the bucket count grows (DESIGN.md §9's pipeline model).
+    # Charged on the CONTENDED pipeline estimate (§15), so the gauge
+    # reflects what link sharing leaves of the modeled overlap.
+    contended = bplan.predicted_contended or bplan.predicted_pipelined
+    if contended > 0.0:
         m.gauge("bucket_pipeline_occupancy",
-                "modeled serial/pipelined speedup, normalized to [.5,1]"
-                ).set(bplan.predicted_serial
-                      / (2.0 * bplan.predicted_pipelined))
+                "modeled serial/contended speedup, normalized to [.5,1]"
+                ).set(bplan.predicted_serial / (2.0 * contended))
+    if merged is not None:
+        m.counter("sync_bucketed_merged_issue_total",
+                  "syncs issued with the merged RS/AG schedule "
+                  "(planner argmin chose merged)").inc()
     axis_plans = bplan.axis_plans
     if getattr(cfg, "guard", True):
         # guard the executed schedules (DESIGN.md §12); guard_schedule
@@ -369,10 +455,14 @@ def sync_bucketed(grads, axes: Sequence[tuple[str, int]], cfg, *,
             for pl in axis_plans]
     with default_tracer().span("sync/bucketed", buckets=len(buckets),
                                bucket_bytes=bplan.bucket_bytes,
-                               source=bplan.source):
+                               source=bplan.source,
+                               overlap=bplan.overlap.get("mode",
+                                                         "sequential"),
+                               reverse=reverse):
         out = execute_buckets(leaves, buckets, axis_plans,
                               pipeline=bcfg.pipeline,
-                              fused_reduce=fused_reduce)
+                              fused_reduce=fused_reduce,
+                              merged=merged, reverse=reverse)
     return jax.tree.unflatten(treedef, out)
 
 
@@ -434,12 +524,18 @@ def zero3_gather_bucketed(shards, specs, plan, bucket_bytes: int, n: int
     return out
 
 
-def zero3_scatter_bucketed(fulls, plan, bucket_bytes: int, n: int) -> list:
+def zero3_scatter_bucketed(fulls, plan, bucket_bytes: int, n: int,
+                           reverse: bool = False) -> list:
     """Bucketed gradient ReduceScatter (inverse layout of
     `zero3_gather_bucketed`): each full leaf pads to a multiple of `n`
     and contributes its (n, chunk_ℓ) rows as columns of the bucket
     matrix; ONE `reduce_scatter` launch per bucket returns row i — the
-    concatenation of every member leaf's canonical shard i."""
+    concatenation of every member leaf's canonical shard i.
+
+    `reverse=True` issues buckets in reverse-layer readiness order
+    (DESIGN.md §15): backward materializes the LAST bucket's gradients
+    first, so its reduce leaves the wire without stalling on bucket 0.
+    Output placement is by bucket index — results are identical."""
     import jax.numpy as jnp
 
     cs = plan.schedule
@@ -450,7 +546,10 @@ def zero3_scatter_bucketed(fulls, plan, bucket_bytes: int, n: int) -> list:
                         itemsizes=[x.dtype.itemsize for x in fulls])
     out = [None] * len(fulls)
     tracer = default_tracer()
-    for bi, bk in enumerate(buckets):
+    issue = list(enumerate(buckets))
+    if reverse:
+        issue.reverse()
+    for bi, bk in issue:
         mats = [_pad_to(fulls[i].reshape(-1), n).reshape(n, -1)
                 for i in bk.indices]
         mat = mats[0] if len(mats) == 1 else jnp.concatenate(mats, axis=1)

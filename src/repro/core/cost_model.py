@@ -313,6 +313,162 @@ def evaluate_plan(plan: Plan, p: GenModelParams,
 
 
 # ---------------------------------------------------------------------------
+# Link-contention pricing of concurrent rounds (DESIGN.md §15).
+#
+# The bucket pipeline overlaps RS-of-bucket-k with AG-of-bucket-(k-1); the
+# naive steady-state model `max(t_rs, t_ag)` assumes the two rounds never
+# share a link. On multi-level meshes they do — and GenModel says exactly
+# how that hurts: transfers sharing a link serialize their β volume, and
+# their incast fan-ins SUM at the shared endpoint (ε is superadditive past
+# w_t). A `LinkOccupancy` is one round's footprint on the routing index's
+# dense link ids; merging two occupancies and repricing with the same
+# per-step walk gives the *contended* concurrent time:
+#
+#   max(t_a, t_b)  ≤  t_contended   (disjoint links ⇒ equality)
+#   t_contended may EXCEED t_a + t_b when summed fan-in crosses w_t —
+#   which is precisely when the planner must not merge.
+#
+# This is the pure-Python reference path; `FastEngine.merge_steps` is the
+# vectorized twin and must agree ≤ 1e-9 (tests/test_overlap.py).
+# ---------------------------------------------------------------------------
+@dataclass
+class LinkOccupancy:
+    """One Step's footprint on a topology: per-link data units and distinct
+    sender counts (keyed by dense RoutingIndex link id), per-endpoint
+    receive units and fan-in, per-server reduce work."""
+    link_units: dict
+    link_nsend: dict
+    recv_units: dict
+    recv_fan: dict
+    adds: dict
+    mem: dict
+    has_transfers: bool
+    has_reduces: bool
+
+    def merge(self, other: "LinkOccupancy") -> "LinkOccupancy":
+        """Two rounds run concurrently: shared links serialize (units add),
+        incast fan-ins sum, reduce work on a shared server queues."""
+        def _sum(a, b):
+            out = dict(a)
+            for k, v in b.items():
+                out[k] = out.get(k, 0) + v
+            return out
+        return LinkOccupancy(
+            link_units=_sum(self.link_units, other.link_units),
+            link_nsend=_sum(self.link_nsend, other.link_nsend),
+            recv_units=_sum(self.recv_units, other.recv_units),
+            recv_fan=_sum(self.recv_fan, other.recv_fan),
+            adds=_sum(self.adds, other.adds),
+            mem=_sum(self.mem, other.mem),
+            has_transfers=self.has_transfers or other.has_transfers,
+            has_reduces=self.has_reduces or other.has_reduces)
+
+
+def link_occupancy(topo, step, unit_bytes: int = 4) -> LinkOccupancy:
+    """Walk one Step's transfers over `topo.routing().path_link_ids` and
+    accumulate the occupancy vector (pure Python — the reference path)."""
+    rx = topo.routing()
+    link_units: dict = {}
+    link_senders: dict = {}
+    recv_units: dict = {}
+    recv_senders: dict = {}
+    for t in step.transfers:
+        for lid in rx.path_link_ids(t.src, t.dst):
+            link_units[lid] = link_units.get(lid, 0.0) + t.size
+            link_senders.setdefault(lid, set()).add(t.src)
+        recv_units[t.dst] = recv_units.get(t.dst, 0.0) + t.size
+        recv_senders.setdefault(t.dst, set()).add(t.src)
+    adds: dict = {}
+    mem: dict = {}
+    for r in step.reduces:
+        adds[r.server] = adds.get(r.server, 0.0) + r.adds
+        mem[r.server] = mem.get(r.server, 0.0) + r.mem_ops
+    return LinkOccupancy(
+        link_units=link_units,
+        link_nsend={k: len(v) for k, v in link_senders.items()},
+        recv_units=recv_units,
+        recv_fan={k: len(v) for k, v in recv_senders.items()},
+        adds=adds, mem=mem,
+        has_transfers=bool(step.transfers),
+        has_reduces=bool(step.reduces))
+
+
+def occupancy_time(topo, occ: LinkOccupancy,
+                   params: "dict[str, GenModelParams] | None" = None,
+                   unit_bytes: int = 4) -> float:
+    """GenModel step time of one (possibly merged) occupancy vector —
+    the same accounting as `FastEngine.step_cost`, dict-walked."""
+    rx = topo.routing()
+    tbl = params or PAPER_TABLE5
+    psrv = tbl.get("server", GenModelParams())
+    scale = unit_bytes / 4.0
+    comm = 0.0
+    alpha_eff = psrv.alpha if occ.has_transfers else 0.0
+    for lid, units in occ.link_units.items():
+        nid = lid >> 1            # both directed links share the node's bw
+        p = tbl.get(rx.levels[rx.link_level[nid]], psrv)
+        bw = rx.link_bw[nid]
+        tpb = unit_bytes / bw if bw != 0.0 else 0.0
+        extra = (max(occ.link_nsend.get(lid, 0) - p.w_t, 0)
+                 * units * scale * p.epsilon)
+        comm = max(comm, units * tpb + extra + rx.link_latency[nid])
+        alpha_eff = max(alpha_eff, p.alpha)
+    for dst, units in occ.recv_units.items():
+        p = tbl.get(rx.levels[rx.srv_level[dst]], psrv)
+        bw = rx.srv_bw[dst]
+        tpb = unit_bytes / bw if bw != 0.0 else 0.0
+        w = occ.recv_fan.get(dst, 0) + 1
+        extra = max(w - p.w_t, 0) * units * scale * p.epsilon
+        comm = max(comm, units * tpb + extra)
+    comp = 0.0
+    for srv in occ.adds.keys() | occ.mem.keys():
+        comp = max(comp, (occ.adds.get(srv, 0.0) * psrv.gamma
+                          + occ.mem.get(srv, 0.0) * psrv.delta) * scale)
+    if occ.has_reduces and not occ.has_transfers:
+        alpha_eff = max(alpha_eff, psrv.alpha)
+    return alpha_eff + comm + comp
+
+
+def concurrent_step_time(topo, steps,
+                         params: "dict[str, GenModelParams] | None" = None,
+                         unit_bytes: int = 4) -> float:
+    """Contended time of ≥1 Steps running concurrently: merge their
+    occupancy vectors and reprice. One step degenerates to its plain
+    GenModel step cost."""
+    occs = [link_occupancy(topo, st, unit_bytes) for st in steps if st]
+    if not occs:
+        return 0.0
+    occ = occs[0]
+    for other in occs[1:]:
+        occ = occ.merge(other)
+    return occupancy_time(topo, occ, params, unit_bytes)
+
+
+def contended_pair_time(topo, plan_a: Plan, plan_b: Plan,
+                        params: "dict[str, GenModelParams] | None" = None,
+                        unit_bytes: int = 4,
+                        precision: "Precision | None" = None) -> float:
+    """Price plan A's rounds run concurrently with plan B's, round by
+    round: round i of A merges with round i of B (shared links serialize,
+    fan-ins sum); leftover rounds of the longer plan price alone. This is
+    the reference contended estimate for the bucket pipeline's steady
+    state (RS-of-bucket-k over AG-of-bucket-(k-1)) and for cross-family
+    merges; `FastEngine.contended_pair_total` must agree ≤ 1e-9."""
+    if precision is not None and precision.name != "f32":
+        plan_a = compressed_plan(plan_a, precision)
+        plan_b = compressed_plan(plan_b, precision)
+    total = 0.0
+    for i in range(max(len(plan_a.steps), len(plan_b.steps))):
+        parts = []
+        if i < len(plan_a.steps):
+            parts.append(plan_a.steps[i])
+        if i < len(plan_b.steps):
+            parts.append(plan_b.steps[i])
+        total += concurrent_step_time(topo, parts, params, unit_bytes)
+    return total
+
+
+# ---------------------------------------------------------------------------
 # Per-term decomposition — the cost ledger's pricing side (DESIGN.md §11).
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)

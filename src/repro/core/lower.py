@@ -87,6 +87,71 @@ class ExecStep:
     folds: list[FoldPhase] = field(default_factory=list)
 
 
+# ---------------------------------------------------------------------------
+# Single-round / single-fold executors. `CompiledSchedule._run_steps` loops
+# these over one buffer; `core.overlap.MergedSchedule` interleaves them over
+# TWO independent buffers (RS-of-bucket-k rounds between AG-of-bucket-(k-1)
+# rounds), so merged execution reuses the exact machinery the dataflow
+# validation in `lower_plan` vouched for.
+# ---------------------------------------------------------------------------
+def _round_jax(rd: PermRound, buf, stage, idx, zero, axis_name: str,
+               ri: int = 0):
+    """One ppermute round: gather up to W block rows of `buf`, permute
+    along `axis_name`, land the payload in `stage` at recv_off. Returns
+    the updated staging buffer."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    with default_tracer().span("exec/round", round=ri,
+                               width=int(rd.send_blks.shape[1]),
+                               pairs=len(rd.perm)):
+        w = rd.send_blks.shape[1]
+        chunk = buf.shape[1]
+        sb = jnp.asarray(rd.send_blks)[idx]      # (W,)
+        rows = [jnp.where(
+            sb[j] >= 0,
+            lax.dynamic_index_in_dim(
+                buf, jnp.maximum(sb[j], 0), 0, keepdims=False),
+            zero) for j in range(w)]
+        recv = lax.ppermute(jnp.stack(rows), axis_name,
+                            list(rd.perm))  # (W, chunk)
+        off = jnp.asarray(rd.recv_off)[idx]
+        safe = jnp.maximum(off, 0)
+        cur = lax.dynamic_slice(stage, (safe, 0), (w, chunk))
+        return lax.dynamic_update_slice(
+            stage, jnp.where(off >= 0, recv, cur), (safe, 0))
+
+
+def _fold_jax(fd: FoldPhase, buf, stage, idx, zero,
+              fused_reduce: Callable | None, fi: int = 0):
+    """One fold phase: staged copies (plus optionally the resident
+    partial) collapse into their target block row of `buf`. Returns the
+    updated buffer."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    with default_tracer().span("exec/fold", fold=fi,
+                               fan=int(fd.ops.shape[1])):
+        blk = jnp.asarray(fd.blk)[idx]
+        safeb = jnp.maximum(blk, 0)
+        own = lax.dynamic_index_in_dim(buf, safeb, 0, keepdims=False)
+        rows = []
+        for j in range(fd.ops.shape[1]):
+            s = jnp.asarray(fd.ops[:, j])[idx]
+            r = lax.dynamic_index_in_dim(
+                stage, jnp.maximum(s, 0), 0, keepdims=False)
+            rows.append(jnp.where(s >= 0, r, zero))
+        rows.append(jnp.where(
+            jnp.asarray(fd.include_self)[idx], own, zero))
+        stacked = jnp.stack(rows, axis=0)
+        if fused_reduce is not None and stacked.shape[0] > 1:
+            folded = fused_reduce(stacked).astype(buf.dtype)
+        else:
+            folded = stacked.sum(axis=0)
+        return lax.dynamic_update_index_in_dim(
+            buf, jnp.where(blk >= 0, folded, own), safeb, 0)
+
+
 @dataclass(eq=False)
 class CompiledSchedule:
     """An executable AllReduce: run inside shard_map over `axis_name`."""
@@ -182,52 +247,11 @@ class CompiledSchedule:
                              plan=self.plan_name):
                 stage = jnp.zeros((max(st.n_slots, 1), chunk), buf.dtype)
                 for ri, rd in enumerate(st.rounds):
-                    with tracer.span("exec/round", round=ri,
-                                     width=int(rd.send_blks.shape[1]),
-                                     pairs=len(rd.perm)):
-                        w = rd.send_blks.shape[1]
-                        sb = jnp.asarray(rd.send_blks)[idx]      # (W,)
-                        rows = [jnp.where(
-                            sb[j] >= 0,
-                            lax.dynamic_index_in_dim(
-                                buf, jnp.maximum(sb[j], 0), 0,
-                                keepdims=False),
-                            zero) for j in range(w)]
-                        recv = lax.ppermute(jnp.stack(rows), axis_name,
-                                            list(rd.perm))  # (W, chunk)
-                        off = jnp.asarray(rd.recv_off)[idx]
-                        safe = jnp.maximum(off, 0)
-                        cur = lax.dynamic_slice(stage, (safe, 0),
-                                                (w, chunk))
-                        stage = lax.dynamic_update_slice(
-                            stage, jnp.where(off >= 0, recv, cur),
-                            (safe, 0))
+                    stage = _round_jax(rd, buf, stage, idx, zero,
+                                       axis_name, ri)
                 for fi, fd in enumerate(st.folds):
-                    with tracer.span("exec/fold", fold=fi,
-                                     fan=int(fd.ops.shape[1])):
-                        blk = jnp.asarray(fd.blk)[idx]
-                        safeb = jnp.maximum(blk, 0)
-                        own = lax.dynamic_index_in_dim(buf, safeb, 0,
-                                                       keepdims=False)
-                        rows = []
-                        for j in range(fd.ops.shape[1]):
-                            s = jnp.asarray(fd.ops[:, j])[idx]
-                            r = lax.dynamic_index_in_dim(
-                                stage, jnp.maximum(s, 0), 0,
-                                keepdims=False)
-                            rows.append(jnp.where(s >= 0, r, zero))
-                        rows.append(jnp.where(
-                            jnp.asarray(fd.include_self)[idx], own, zero))
-                        stacked = jnp.stack(rows, axis=0)
-                        if fused_reduce is not None \
-                                and stacked.shape[0] > 1:
-                            folded = fused_reduce(stacked).astype(
-                                buf.dtype)
-                        else:
-                            folded = stacked.sum(axis=0)
-                        buf = lax.dynamic_update_index_in_dim(
-                            buf, jnp.where(blk >= 0, folded, own),
-                            safeb, 0)
+                    buf = _fold_jax(fd, buf, stage, idx, zero,
+                                    fused_reduce, fi)
         return buf
 
     def _run_steps_wire(self, steps: Sequence[ExecStep], buf,

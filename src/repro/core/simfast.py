@@ -262,6 +262,89 @@ class FastEngine:
             t += self.step_cost(cs)[0]
         return t
 
+    # ---- link-contention pricing (DESIGN.md §15) ---------------------------
+    def merge_steps(self, parts: Sequence[CompiledStep]) -> CompiledStep:
+        """Occupancy merge of concurrent rounds: shared links serialize
+        (units add) and their distinct-sender counts — hence incast
+        fan-ins — SUM; disjoint links keep their own time and overlap
+        through `step_cost`'s per-link max. Vectorized twin of
+        `cost_model.LinkOccupancy.merge` (must agree ≤ 1e-9)."""
+        parts = [cs for cs in parts if cs is not None]
+        if len(parts) == 1:
+            return parts[0]
+        nlinks, nsrv = self.rx.n_links, self.rx.sid_cap
+        lu = np.zeros(nlinks)
+        ln = np.zeros(nlinks, dtype=np.int64)
+        ltouch = np.zeros(nlinks, dtype=bool)
+        ru = np.zeros(nsrv)
+        rf = np.zeros(nsrv, dtype=np.int64)
+        rtouch = np.zeros(nsrv, dtype=bool)
+        ca = np.zeros(nsrv)
+        cm = np.zeros(nsrv)
+        ctouch = np.zeros(nsrv, dtype=bool)
+        has_t = has_r = False
+        for cs in parts:
+            if cs.lids.size:
+                np.add.at(lu, cs.lids, cs.lunits)
+                np.add.at(ln, cs.lids, cs.lnsend)
+                ltouch[cs.lids] = True
+            if cs.rdst.size:
+                np.add.at(ru, cs.rdst, cs.runits)
+                np.add.at(rf, cs.rdst, cs.rfan)
+                rtouch[cs.rdst] = True
+            if cs.csrv.size:
+                np.add.at(ca, cs.csrv, cs.cadds)
+                np.add.at(cm, cs.csrv, cs.cmem)
+                ctouch[cs.csrv] = True
+            has_t |= cs.has_transfers
+            has_r |= cs.has_reduces
+        lids = np.nonzero(ltouch)[0]
+        rdst = np.nonzero(rtouch)[0]
+        csrv = np.nonzero(ctouch)[0]
+        return CompiledStep(lids=lids, lunits=lu[lids], lnsend=ln[lids],
+                            rdst=rdst, runits=ru[rdst], rfan=rf[rdst],
+                            csrv=csrv, cadds=ca[csrv], cmem=cm[csrv],
+                            has_transfers=has_t, has_reduces=has_r)
+
+    def concurrent_cost(self, parts: Sequence[CompiledStep]
+                        ) -> tuple[float, float, float, float, float]:
+        """Contended cost of ≥1 rounds running concurrently — one merged
+        fan-in SUMS the incast: two below-threshold rounds can together
+        cross w_t, so this may exceed the two sequential costs. That is
+        the signal the planner's argmin{sequential, merged} keys on."""
+        return self.step_cost(self.merge_steps(parts))
+
+    def contended_pair_total(self, ca: Sequence[CompiledStep],
+                             cb: Sequence[CompiledStep]) -> float:
+        """Two compiled step lists run concurrently, paired round-by-round
+        (leftover rounds of the longer list price alone). Mirrors
+        `cost_model.contended_pair_time` at ≤ 1e-9."""
+        t = 0.0
+        for i in range(max(len(ca), len(cb))):
+            parts = []
+            if i < len(ca):
+                parts.append(ca[i])
+            if i < len(cb):
+                parts.append(cb[i])
+            t += self.step_cost(self.merge_steps(parts))[0]
+        return t
+
+    def contended_halves_total(self, plan_a: Plan, plan_b: Plan) -> float:
+        """Contended concurrent price of two whole plans (e.g. the RS half
+        of bucket k against the AG half of bucket k-1)."""
+        return self.contended_pair_total(self.compile_plan(plan_a),
+                                         self.compile_plan(plan_b))
+
+    def contended_halves(self, plan: Plan) -> float:
+        """Steady-state joint time of an allreduce plan's own halves run
+        concurrently (the bucket pipeline's inner term). Non-allreduce
+        plans have a single half — their contended time is just the total."""
+        from .plans import family_halves
+        if plan.family != "allreduce":
+            return self.total(self.compile_plan(plan))
+        rs, ag = family_halves(plan)
+        return self.contended_halves_total(rs, ag)
+
     def totals(self, batch: Sequence[Sequence[CompiledStep]]) -> list[float]:
         """Batched candidate evaluation: one call prices every candidate's
         compiled step list (the GenTree per-switch search path)."""

@@ -52,6 +52,12 @@ class SyncConfig:
     params: dict[str, GenModelParams] | None = None
     bucket_bytes: int | None = None          # None=auto | 0=off | fixed
     pipeline: bool = True                    # double-buffer RS/AG halves
+    # Backward-overlapped issuance (DESIGN.md §15): issue buckets in
+    # reverse-layer readiness order (backward produces last-layer grads
+    # first) and fuse RS(k)/AG(k−1) into one merged launch when the
+    # planner's contended argmin picked "merged". False restores
+    # forward-order sequential issuance.
+    backward_overlap: bool = True
     # Wrap executed schedules in core.lower.GuardedSchedule (retry +
     # flat-psum fallback ladder, DESIGN.md §12). Off ⇒ raw schedules.
     guard: bool = True

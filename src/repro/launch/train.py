@@ -305,7 +305,8 @@ def make_manual_train_step(api: ModelAPI, mesh: Mesh,
             if bplan is not None:
                 rows = bucketing.zero3_scatter_bucketed(
                     jax.tree.leaves(grads), bplan.axis_plans[0],
-                    bplan.bucket_bytes, ndp)
+                    bplan.bucket_bytes, ndp,
+                    reverse=getattr(sync, "backward_overlap", False))
                 g_shards = jax.tree.unflatten(
                     jax.tree.structure(grads),
                     [(r / ndp)[None] for r in rows])
@@ -410,6 +411,10 @@ class TrainConfig:
     global_batch: int = 8
     engine: str = "auto"            # auto | manual
     sync: str = "auto"         # auto|psum|ring|rhd|cps|hcps|gentree|plan
+    # backward-overlapped bucket issuance (DESIGN.md §15): reverse-layer
+    # readiness order + the planner's merged RS/AG launch when its
+    # contended argmin picked "merged"; False restores forward order
+    backward_overlap: bool = True
     lr: float = 1e-3
     ckpt_dir: str | None = None
     ckpt_every: int = 25
@@ -462,7 +467,9 @@ def run_training(tc: TrainConfig, mesh: Mesh | None = None,
         state = {"params": shard_params_zero3(state["params"], mesh),
                  "opt": adamw_init(shard_params_zero3(params, mesh))}
         step_fn = make_manual_train_step(
-            api, mesh, opt_cfg, sync=SyncConfig(strategy=tc.sync))
+            api, mesh, opt_cfg, sync=SyncConfig(
+                strategy=tc.sync,
+                backward_overlap=tc.backward_overlap))
     else:
         jitted, ss_fn, bs_fn = make_train_step(api, mesh, opt_cfg)
         b0 = jax.tree.map(jnp.asarray, data.batch_at(0))

@@ -72,17 +72,30 @@ class BucketPlan:
     """get_bucket_plan's answer: the GenModel-argmin gradient bucket size
     for a mesh-axis list, plus one lowered schedule per axis (DESIGN.md
     §9). `sweep` records every candidate's modeled pipelined/serial time
-    so benchmarks (and the perf gate) can verify the argmin."""
+    so benchmarks (and the perf gate) can verify the argmin.
+
+    The pipeline is priced twice (DESIGN.md §15): `predicted_pipelined`
+    keeps the optimistic `max(t_rs, t_ag)` steady state (the lower
+    bound), `predicted_contended` charges the overlapped RS/AG rounds
+    through the per-link occupancy merge — shared links serialize, a
+    summed fan-in can cross w_t — and is what the argmin ranks on.
+    `overlap` records the argmin over {sequential, merged} issuance for
+    one bucket pair; when "merged" wins on a single-axis plan,
+    `merged_schedule` carries the lowered `core.overlap.MergedSchedule`
+    (derived artifact — rebuilt, never persisted)."""
     axes: tuple[tuple[str, int], ...]     # live axes (n > 1), leaf first
     bucket_floats: int                    # chosen bucket size, in elements
     bucket_bytes: int                     # same, in bytes of the priced dtype
     num_buckets: int                      # for the quoted total size
     axis_plans: list = field(default_factory=list)   # AxisPlan("plan", …)
-    predicted_pipelined: float = 0.0      # modeled double-buffered total
+    predicted_pipelined: float = 0.0      # optimistic double-buffered total
     predicted_serial: float = 0.0         # same buckets, no overlap
+    predicted_contended: float = 0.0      # contention-priced pipeline (§15)
     predicted_per_leaf: float | None = None   # per-leaf baseline (if sized)
     pipeline: bool = True
     sweep: dict = field(default_factory=dict)  # bucket_floats -> model row
+    overlap: dict = field(default_factory=dict)  # {mode, t_joint, …}
+    merged_schedule: object | None = None  # only when overlap mode=="merged"
     precision: str = "f32"                # chosen wire format (DESIGN.md §13)
     source: str = "cold"
     key: str = ""
@@ -944,6 +957,70 @@ class PlannerService:
         return (float(sum(res.per_step[:split + 1])),
                 float(sum(res.per_step[split + 1:])))
 
+    def _axis_contended_time(self, n: int, level: str,
+                             size_floats: float, dtype: str, eff,
+                             precision=None) -> float:
+        """Joint time of the axis plan's RS half run CONCURRENTLY with
+        its AG half, paired round-by-round under the per-link occupancy
+        merge (DESIGN.md §15) — the steady-state cost of bucket k's
+        ReduceScatter overlapping bucket k−1's AllGather. Shared links
+        serialize their β/ε and the summed receive fan-in prices through
+        one `_incast` call, so the result sits in
+        [max(T_RS, T_AG), T_RS + T_AG] — and an above-threshold summed
+        fan-in pushes it toward (or past) the sequential sum, which is
+        exactly the signal the {sequential, merged} argmin keys on.
+
+        Same plan fetch / rescale / wire-compression path as
+        `_axis_halves_time`; the engine choice mirrors `Simulator`
+        (reference walks `cost_model.contended_pair_time`, anything else
+        the vectorized `FastEngine.contended_halves_total` — the two
+        agree ≤ 1e-9, pinned by tests/test_overlap.py)."""
+        from repro.core import plans as plans_mod
+        from repro.core.sync import level_switch_topo
+        topo = level_switch_topo(int(n), eff, level)
+        dsize = DTYPE_BYTES.get(dtype, 4)
+        size_floats = max(size_floats, 1.0)
+        resp = self.get_plan(topo, size_floats * dsize, dtype, params=eff)
+        plan = resp.plan
+        factor = size_floats / resp.size_floats if resp.size_floats \
+            else 1.0
+        if abs(factor - 1.0) > 1e-12:
+            plan = self._scaled_plan(plan, factor)
+        if precision is not None and precision.name != "f32":
+            from repro.core.cost_model import compressed_plan
+            plan = compressed_plan(plan, precision)
+        if plan.family != "allreduce" or not plan.steps:
+            res = Simulator(topo, eff, unit_bytes=dsize,
+                            engine=self.engine).simulate(plan)
+            return float(sum(res.per_step))
+        rs_half, ag_half = plans_mod.family_halves(plan)
+        if self.engine == "reference":
+            from repro.core.cost_model import contended_pair_time
+            t = contended_pair_time(topo, rs_half, ag_half, eff,
+                                    unit_bytes=dsize)
+        else:
+            from repro.core.simfast import FastEngine
+            t = FastEngine(topo, eff, unit_bytes=dsize
+                           ).contended_halves_total(rs_half, ag_half)
+        # which links serialized: surfaced as a gauge + span attributes so
+        # a Chrome trace of the sweep shows the contention hot spot
+        if rs_half.steps and ag_half.steps:
+            from repro.core.overlap import occupancy_summary
+            summ = occupancy_summary(topo, rs_half.steps[0],
+                                     ag_half.steps[0], unit_bytes=dsize)
+            default_metrics().gauge(
+                "planner_contended_busiest_link_units",
+                "traffic units on the busiest link when RS and AG "
+                "rounds of adjacent buckets overlap").set(
+                float(summ["busiest_link_units"]))
+            with default_tracer().span(
+                    "planner/contended_price", n=int(n), level=level,
+                    links_shared=int(summ["links_shared"]),
+                    busiest_link=int(summ["busiest_link"]),
+                    busiest_link_units=float(summ["busiest_link_units"])):
+                pass
+        return float(t)
+
     def _axis_term_shares(self, n: int, level: str, size_floats: float,
                           dtype: str, eff, merged: GenModelParams,
                           precision=None):
@@ -1004,8 +1081,9 @@ class PlannerService:
         """
         import math
 
-        from repro.core.bucketing import (BucketConfig, pipelined_time,
-                                          serial_time)
+        from repro.core.bucketing import (BucketConfig,
+                                          contended_pipelined_time,
+                                          pipelined_time, serial_time)
         from repro.core.cost_model import (PRECISIONS, allowed_precisions,
                                            resolve_precision)
         from repro.core.sync import AxisPlan, axis_level
@@ -1053,6 +1131,24 @@ class PlannerService:
                 shard /= n
             return out
 
+        def resolve_merged(plans_list, overlap_info):
+            # The merged executable interleaves bucket k's RS rounds with
+            # bucket k-1's AG rounds of the SAME axis schedule
+            # (core.overlap.merge_schedules memoizes on the schedule, so
+            # warm hits share the wrapper). Only built when the contended
+            # price beat sequential AND the chain is a single live axis —
+            # multi-axis chains keep sequential issuance (the hierarchical
+            # handoff already serializes at the axis boundary).
+            if overlap_info.get("mode") != "merged" or len(plans_list) != 1:
+                return None
+            from repro.core.lower import LoweringError
+            from repro.core.overlap import merge_schedules
+            try:
+                sched = plans_list[0].schedule
+                return merge_schedules(sched, sched)
+            except LoweringError:
+                return None
+
         # one sweep per key: concurrent cold traces against a shared service
         # must not each run the full pricing sweep and race on the schedules
         with self._lock:
@@ -1064,18 +1160,27 @@ class PlannerService:
                 # disk-warm (or schedule-invalidated) entry: the choice is
                 # recorded; only the schedules need re-resolving
                 prec_name = str(entry.get("precision", "f32"))
+                # pre-§15 snapshots carry no contended quote / overlap
+                # verdict: fall back to the optimistic pipeline time and
+                # sequential issuance rather than invalidating the entry
+                ov = dict(entry.get("overlap") or {})
+                plans_list = resolve_axis_plans(
+                    int(entry["bucket_floats"]), prec_name)
                 obj = BucketPlan(
                     axes=tuple((a, n) for _, a, n in live),
                     bucket_floats=int(entry["bucket_floats"]),
                     bucket_bytes=int(entry["bucket_floats"]) * dsize,
                     num_buckets=int(entry["num_buckets"]),
-                    axis_plans=resolve_axis_plans(int(entry["bucket_floats"]),
-                                                  prec_name),
+                    axis_plans=plans_list,
                     predicted_pipelined=entry["pipelined"],
                     predicted_serial=entry["serial"],
+                    predicted_contended=float(
+                        entry.get("contended", entry["pipelined"])),
                     predicted_per_leaf=entry.get("per_leaf"),
                     pipeline=bool(entry.get("pipeline", True)),
                     sweep={int(b): row for b, row in entry["sweep"].items()},
+                    overlap=ov,
+                    merged_schedule=resolve_merged(plans_list, ov),
                     precision=prec_name, source="disk", key=key)
                 entry["_obj"] = obj
                 return obj
@@ -1095,6 +1200,7 @@ class PlannerService:
 
             # ---- candidate sweep (all pricing through the plan cache) --------
             halves_memo: dict[tuple, tuple[float, float]] = {}
+            joint_memo: dict[tuple, float] = {}
 
             def halves(i: int, n: int, size_floats: float, prec=None):
                 lvl = axis_level(i)
@@ -1106,6 +1212,16 @@ class PlannerService:
                         precision=prec)
                 return halves_memo[mk]
 
+            def joint(i: int, n: int, size_floats: float, prec=None):
+                lvl = axis_level(i)
+                pname = prec.name if prec is not None else "f32"
+                mk = (lvl, n, round(max(float(size_floats), 1.0), 6), pname)
+                if mk not in joint_memo:
+                    joint_memo[mk] = self._axis_contended_time(
+                        n, lvl, float(size_floats), dtype, eff,
+                        precision=prec)
+                return joint_memo[mk]
+
             if cfg.bucket_bytes:
                 cands = [max(1, int(cfg.bucket_bytes) // dsize)]
             else:
@@ -1115,7 +1231,12 @@ class PlannerService:
                     nbytes *= 2
                 cands.append(int(math.ceil(total)))    # monolithic: K = 1
 
-            rank = "pipelined" if cfg.pipeline else "serial"
+            # the honest rank: the contended pipeline estimate (per-link
+            # occupancy merge, DESIGN.md §15) replaces the optimistic
+            # max(t_rs, t_ag) steady state; the naive "pipelined" row
+            # rides along as the lower bound + drift metric
+            # (overlap_bench's contended_vs_naive_pipeline_error)
+            rank = "contended" if cfg.pipeline else "serial"
             sweep: dict[int, dict] = {}
             with default_tracer().span("planner/bucket_sweep",
                                        candidates=len(cands)
@@ -1124,16 +1245,22 @@ class PlannerService:
                     k = max(1, math.ceil(total / bf))
                     best = None
                     for prec in prec_cands:
-                        t_rs = t_ag = 0.0
+                        t_rs = t_ag = t_joint = 0.0
                         shard = float(bf)
                         for i, _a, n in live:
                             rs, ag = halves(i, n, shard, prec)
                             t_rs += rs
                             t_ag += ag
+                            if k > 1:
+                                t_joint += joint(i, n, shard, prec)
                             shard /= n  # outer axes see inner axes' shard
                         row = {
                             "num_buckets": k, "t_rs": t_rs, "t_ag": t_ag,
+                            "t_joint": t_joint,
                             "pipelined": pipelined_time(t_rs, t_ag, k),
+                            "contended": contended_pipelined_time(
+                                t_rs, t_ag, k,
+                                t_joint if k > 1 else None),
                             "serial": serial_time(t_rs, t_ag, k),
                             "precision": prec.name,
                         }
@@ -1141,14 +1268,31 @@ class PlannerService:
                         # in allowed_precisions order)
                         if best is None or row[rank] < best[rank]:
                             best = row
-                    # t_rs/t_ag ride along so consumers (bucket_bench's CI
-                    # gate) can recompute the pipeline model independently
-                    # instead of tautologically re-minimizing the stored
-                    # totals; rows stay keyed by bucket size, each holding
-                    # its own argmin over wire precisions
+                    # t_rs/t_ag/t_joint ride along so consumers
+                    # (bucket_bench's CI gate) can recompute the pipeline
+                    # model independently instead of tautologically
+                    # re-minimizing the stored totals; rows stay keyed by
+                    # bucket size, each holding its own argmin over wire
+                    # precisions
                     sweep[bf] = best
             chosen = min(sweep, key=lambda b: (sweep[b][rank], b))
             prec_name = str(sweep[chosen].get("precision", "f32"))
+            crow = sweep[chosen]
+            # per-pair issuance argmin: merge bucket k's RS with bucket
+            # k-1's AG only when the contended concurrent price strictly
+            # beats running the pair back-to-back — the planner can prove
+            # it never selects a losing merge (tests/test_overlap.py)
+            t_pair_seq = float(crow["t_rs"] + crow["t_ag"])
+            merged_wins = bool(cfg.pipeline
+                               and int(crow["num_buckets"]) > 1
+                               and crow["t_joint"] > 0.0
+                               and crow["t_joint"] < t_pair_seq)
+            overlap = {
+                "mode": "merged" if merged_wins else "sequential",
+                "t_joint": float(crow["t_joint"]),
+                "t_pair_sequential": t_pair_seq,
+                "t_pair_naive": float(max(crow["t_rs"], crow["t_ag"])),
+            }
 
             per_leaf = None
             if leaf_sizes is not None:
@@ -1162,21 +1306,27 @@ class PlannerService:
                         per_leaf += rs + ag
                         shard /= n
 
+            plans_list = resolve_axis_plans(int(chosen), prec_name)
             obj = BucketPlan(
                 axes=tuple((a, n) for _, a, n in live),
                 bucket_floats=int(chosen), bucket_bytes=int(chosen) * dsize,
-                num_buckets=int(sweep[chosen]["num_buckets"]),
-                axis_plans=resolve_axis_plans(int(chosen), prec_name),
-                predicted_pipelined=sweep[chosen]["pipelined"],
-                predicted_serial=sweep[chosen]["serial"],
+                num_buckets=int(crow["num_buckets"]),
+                axis_plans=plans_list,
+                predicted_pipelined=crow["pipelined"],
+                predicted_serial=crow["serial"],
+                predicted_contended=crow["contended"],
                 predicted_per_leaf=per_leaf, pipeline=cfg.pipeline,
-                sweep=sweep, precision=prec_name, source="cold", key=key)
+                sweep=sweep, overlap=overlap,
+                merged_schedule=resolve_merged(plans_list, overlap),
+                precision=prec_name, source="cold", key=key)
             self.cache.put(key, {
                 "kind": "bucket_plan", "bucket_floats": int(chosen),
-                "num_buckets": int(sweep[chosen]["num_buckets"]),
-                "pipelined": sweep[chosen]["pipelined"],
-                "serial": sweep[chosen]["serial"], "per_leaf": per_leaf,
+                "num_buckets": int(crow["num_buckets"]),
+                "pipelined": crow["pipelined"],
+                "contended": crow["contended"],
+                "serial": crow["serial"], "per_leaf": per_leaf,
                 "pipeline": cfg.pipeline, "precision": prec_name,
+                "overlap": overlap,
                 "sweep": {str(b): row for b, row in sweep.items()},
                 "_obj": obj})
             return obj
@@ -1276,9 +1426,11 @@ class PlannerService:
         health-adjusted params all reach the key."""
         import math as _math
 
-        from repro.core.bucketing import pipelined_time
+        from repro.core.bucketing import (contended_pipelined_time,
+                                          pipelined_time)
         from repro.core.cost_model import (PRECISIONS, allowed_precisions,
                                            resolve_precision)
+        from repro.core.optimality import overlap_certificate
         from repro.core.sync import axis_level
 
         axes = tuple((str(a), int(n)) for a, n in axes)
@@ -1380,6 +1532,22 @@ class PlannerService:
                     shard /= n
                 return t_rs, t_ag
 
+            def joint_time(s: float, prec):
+                """Contended steady-state round (call k's RS with call
+                k-1's AG through the per-link occupancy merge, §15),
+                summed over the hierarchical chain. Only allreduce has
+                both halves live — single-half families pipeline with a
+                degenerate joint (== the live half), which
+                `contended_pipelined_time` recovers from t_joint=None."""
+                t = 0.0
+                shard = float(s)
+                for i, _a, n in live:
+                    t += self._axis_contended_time(
+                        n, axis_level(i), shard, dtype, eff,
+                        precision=prec)
+                    shard /= n
+                return t
+
             best_pick = None
             with default_tracer().span("planner/step_sweep",
                                        families=len(norm),
@@ -1396,13 +1564,23 @@ class PlannerService:
                             t: sum(getattr(b, t) for b in joint_bds)
                             for t in call_bds[0].TERMS}
                         joint_t = sum(joint.values())
+                        cert = None
                         if cnt > 1 and fam in ("allreduce",
                                                "reduce_scatter",
                                                "allgather"):
                             t_rs, t_ag = halves_time(fam, s, pw)
-                            piped = pipelined_time(t_rs, t_ag, cnt)
+                            naive = pipelined_time(t_rs, t_ag, cnt)
+                            tj = joint_time(s, pw) \
+                                if fam == "allreduce" else None
+                            piped = contended_pipelined_time(
+                                t_rs, t_ag, cnt, tj)
+                            # the certificate proves the contended quote
+                            # sits between the overlap-adjusted lower
+                            # bound (naive pipeline) and sequential
+                            cert = overlap_certificate(t_rs, t_ag, cnt,
+                                                       piped)
                         else:
-                            piped = cnt * call_t
+                            piped = naive = cnt * call_t
                         # per-call stays a candidate regime (the pipelined
                         # estimate comes from the simulator and the other
                         # two from the term walk — the argmin must never
@@ -1415,7 +1593,8 @@ class PlannerService:
                             "count": cnt, "size_floats": s,
                             "per_call_total": call_t,
                             "joint": joint, "joint_total": joint_t,
-                            "pipelined": piped, "mode": mode,
+                            "pipelined": naive, "contended": piped,
+                            "certificate": cert, "mode": mode,
                             "best_total": best_t,
                             "precision": prec.name,
                         }

@@ -108,10 +108,13 @@ class TestGetBucketPlan:
     def test_argmin_and_baselines(self):
         svc = PlannerService()
         bp = svc.get_bucket_plan(self.AXES, 1e7, leaf_sizes=self.LEAVES)
+        # the honest rank (DESIGN.md §15): contended pipeline estimate,
+        # sandwiched between the optimistic pipeline and serial models
         assert bp.bucket_floats == min(
-            bp.sweep, key=lambda b: (bp.sweep[b]["pipelined"], b))
-        assert bp.predicted_pipelined <= bp.predicted_serial
-        assert bp.predicted_pipelined < bp.predicted_per_leaf
+            bp.sweep, key=lambda b: (bp.sweep[b]["contended"], b))
+        assert bp.predicted_pipelined <= bp.predicted_contended
+        assert bp.predicted_contended <= bp.predicted_serial + 1e-15
+        assert bp.predicted_contended < bp.predicted_per_leaf
         # the sweep explored both directions around the argmin: the trade
         # (α + γ/δ floor vs serialization ceiling) has an interior optimum
         assert len(bp.sweep) > 2
